@@ -1,0 +1,53 @@
+"""Table 5 — component ablations on W1 and W6 (latency vs full Halo)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import halo_plan, make_cm, setup
+from repro.core import EpochDPSolver, SolverConfig
+from repro.runtime import SimulatedProcessor
+
+
+def run(n_queries: int = 256, workers: int = 3,
+        workloads=("w1", "w6")) -> List[Dict]:
+    rows = []
+    for w in workloads:
+        g, cons, _ = setup(w, n_queries)
+        dag = g.llm_dag()
+        plan = halo_plan(g, cons, workers)
+
+        def sim(cm=None, plan_=None, **kw):
+            return SimulatedProcessor(
+                g, cm or make_cm(g, cons), workers, **kw
+            ).run(cons, plan_ or plan)
+
+        full = sim()
+        variants = {}
+        # w/o profiling scoring: plan from naive dep-count cost model
+        naive = EpochDPSolver(dag, make_cm(g, cons, use_profiling=False),
+                              SolverConfig(num_workers=workers)).solve()
+        variants["w/o profiling scoring"] = sim(plan_=naive)
+        # w/o CPU load guidance: plan ignores T_prep
+        blind = EpochDPSolver(dag, make_cm(g, cons, use_prep_guidance=False),
+                              SolverConfig(num_workers=workers)).solve()
+        variants["w/o cpu load guidance"] = sim(plan_=blind)
+        # w/o opportunistic execution: static epoch-paced dispatch
+        variants["w/o opportunistic exec"] = sim(
+            opportunistic=False, barrier_mode=True)
+        # w/o request coalescing
+        variants["w/o request coalescing"] = sim(
+            cm=make_cm(g, cons, logical_tools=True), coalescing=False)
+
+        rows.append({"workload": w, "variant": "halo (full)",
+                     "latency_s": round(full.makespan, 2), "delta": "1.00x"})
+        for name, rep in variants.items():
+            rows.append({
+                "workload": w, "variant": name,
+                "latency_s": round(rep.makespan, 2),
+                "delta": f"{rep.makespan / full.makespan:.2f}x"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(64):
+        print(r)

@@ -1,0 +1,38 @@
+"""Fig. 11 — execution dynamics on W3: progress + GPU utilization trace,
+cumulative GPU-seconds (the cloud-billing proxy)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import halo_plan, make_cm, setup
+from repro.runtime import OpWiseSimulator, SimulatedProcessor
+
+
+def run(workload: str = "w3", n_queries: int = 1024) -> List[Dict]:
+    g, cons, _ = setup(workload, n_queries)
+    plan = halo_plan(g, cons, 3)
+    halo = SimulatedProcessor(g, make_cm(g, cons), 3).run(cons, plan)
+    opw = OpWiseSimulator(g, make_cm(g, cons), 3).run(cons)
+
+    rows = []
+    for name, rep in (("halo", halo), ("opwise", opw)):
+        trace = rep.utilization_trace(dt=max(rep.makespan / 40, 0.5))
+        rows.append({
+            "system": name,
+            "makespan_s": round(rep.makespan, 1),
+            "gpu_seconds": round(rep.gpu_seconds(), 1),
+            "mean_utilization": round(
+                sum(u for _, u in trace) / max(len(trace), 1), 3),
+            "utilization_trace": [(round(t, 1), round(u, 2))
+                                  for t, u in trace],
+        })
+    rows.append({
+        "system": "ratio",
+        "gpu_seconds_reduction": round(
+            opw.gpu_seconds() / max(halo.gpu_seconds(), 1e-9), 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(n_queries=64):
+        print({k: v for k, v in r.items() if k != "utilization_trace"})

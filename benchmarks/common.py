@@ -1,0 +1,117 @@
+"""Shared benchmark plumbing: cost models, plans, baseline system models.
+
+Baseline systems are modeled per §6.1:
+* vllm-serial   — query-by-query: N × single-query makespan;
+* opwise        — stage-synchronous executor (OpWiseSimulator);
+* langgraph     — decoupled orchestration: engine-level batching still
+                  applies (requests submitted together) but NO workflow-
+                  level coalescing and topology-blind RR placement;
+* agentscope    — actor isolation: like langgraph but placement is
+                  random (actors don't coordinate workers);
+* parrot        — prefix/semantic-aware serving: engine batching +
+                  locality-greedy (HEFT-style) placement, but no tool
+                  coalescing and no CPU-GPU co-scheduling.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.core import (CostModel, EpochDPSolver, HARDWARE, PAPER_MODELS,
+                        SolverConfig, consolidate, heft_plan, random_plan,
+                        round_robin_plan)
+from repro.core.consolidate import ConsolidatedGraph
+from repro.core.graphspec import GraphSpec
+from repro.runtime import OpWiseSimulator, SimulatedProcessor
+from repro.workloads import build_workload
+
+
+def setup(workload: str, n: int, seed: int = 0
+          ) -> Tuple[GraphSpec, ConsolidatedGraph]:
+    g, bindings, _ = build_workload(workload, n, seed=seed)
+    return g, consolidate(g, bindings), bindings
+
+
+def make_cm(g: GraphSpec, cons: ConsolidatedGraph, *, logical_tools=False,
+            hardware="h200", **kw) -> CostModel:
+    batch = {}
+    for nid in g.nodes:
+        m = cons.macro(nid)
+        batch[nid] = (m.n_logical if (g.nodes[nid].is_llm() or logical_tools)
+                      else m.n_unique)
+    return CostModel(g, HARDWARE[hardware], PAPER_MODELS,
+                     batch_sizes=batch, **kw)
+
+
+def halo_plan(g, cons, workers=3, **cm_kw):
+    cm = make_cm(g, cons, **cm_kw)
+    return EpochDPSolver(g.llm_dag(), cm,
+                         SolverConfig(num_workers=workers)).solve()
+
+
+def run_halo(g, cons, workers=3, hardware="h200", processor_batch=256,
+             plan=None):
+    plan = plan or halo_plan(g, cons, workers, hardware=hardware)
+    sim = SimulatedProcessor(g, make_cm(g, cons, hardware=hardware), workers,
+                             processor_batch=processor_batch)
+    return sim.run(cons, plan)
+
+
+def run_opwise(g, cons, workers=3, hardware="h200", processor_batch=256):
+    return OpWiseSimulator(g, make_cm(g, cons, hardware=hardware), workers,
+                           processor_batch=processor_batch).run(cons)
+
+
+def run_langgraph(g, cons, workers=3, hardware="h200"):
+    cm = make_cm(g, cons, logical_tools=True, hardware=hardware)
+    plan = round_robin_plan(g.llm_dag(), cm, workers)
+    sim = SimulatedProcessor(g, cm, workers, coalescing=False)
+    rep = sim.run(cons, plan)
+    rep.name = "langgraph"
+    return rep
+
+
+def run_agentscope(g, cons, workers=3, hardware="h200", seed=1):
+    cm = make_cm(g, cons, logical_tools=True, hardware=hardware)
+    plan = random_plan(g.llm_dag(), cm, workers, seed=seed)
+    sim = SimulatedProcessor(g, cm, workers, coalescing=False)
+    rep = sim.run(cons, plan)
+    rep.name = "agentscope"
+    return rep
+
+
+def run_parrot(g, cons, workers=3, hardware="h200"):
+    cm = make_cm(g, cons, logical_tools=True, hardware=hardware)
+    plan = heft_plan(g.llm_dag(), cm, workers)
+    sim = SimulatedProcessor(g, cm, workers, coalescing=False)
+    rep = sim.run(cons, plan)
+    rep.name = "parrot"
+    return rep
+
+
+def run_vllm_serial(g, cons_full, workers=3, hardware="h200"):
+    """Query-by-query: the whole DAG for one query completes before the
+    next starts (engine sees batch=1 everywhere)."""
+    g1, cons1, _ = setup_from(g, cons_full, 1)
+    cm = make_cm(g1, cons1, logical_tools=True, hardware=hardware)
+    plan = round_robin_plan(g1.llm_dag(), cm, workers)
+    rep1 = SimulatedProcessor(g1, cm, workers, coalescing=False).run(
+        cons1, plan)
+    n = cons_full.n_queries
+    rep1.makespan *= n
+    rep1.num_queries = n
+    rep1.name = "vllm-serial"
+    return rep1
+
+
+def setup_from(g, cons, n):
+    sub = ConsolidatedGraph(g, cons.bindings[:n])
+    return g, sub, cons.bindings[:n]
+
+
+BASELINES = {
+    "halo": run_halo,
+    "opwise": run_opwise,
+    "langgraph": run_langgraph,
+    "agentscope": run_agentscope,
+    "parrot": run_parrot,
+}

@@ -1,0 +1,34 @@
+"""Fig. 6 — end-to-end batch latency, W1–W6, Halo vs baselines."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import (BASELINES, run_vllm_serial, setup)
+
+WORKLOADS = ("w1", "w2", "w3", "w4", "w5", "w6")
+
+
+def run(n_queries: int = 1024, workers: int = 3) -> List[Dict]:
+    rows = []
+    for w in WORKLOADS:
+        g, cons, _ = setup(w, n_queries)
+        halo_t = None
+        for name, fn in BASELINES.items():
+            rep = fn(g, cons, workers)
+            if name == "halo":
+                halo_t = rep.makespan
+            rows.append({"workload": w, "system": name,
+                         "makespan_s": round(rep.makespan, 2),
+                         "speedup_vs_halo": round(rep.makespan /
+                                                  max(halo_t, 1e-9), 2)})
+        serial = run_vllm_serial(g, cons, workers)
+        rows.append({"workload": w, "system": "vllm-serial",
+                     "makespan_s": round(serial.makespan, 2),
+                     "speedup_vs_halo": round(serial.makespan /
+                                              max(halo_t, 1e-9), 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(256):
+        print(r)

@@ -1,0 +1,50 @@
+"""Fig. 7 — online serving throughput (QPS): Halo vs OpWise vs LangGraph."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import halo_plan, make_cm, setup
+from repro.core import consolidate, round_robin_plan
+from repro.runtime import OnlineSimulator
+
+WORKLOADS = ("w1", "w3", "w5", "w+")
+
+
+def _stream(g, cons, bindings, plan_fn, workers, micro_batch, rate,
+            coalescing=True, barrier=False):
+    batches = []
+    for lo in range(0, len(bindings), micro_batch):
+        cb = consolidate(g, bindings[lo:lo + micro_batch])
+        batches.append((cb, plan_fn(cb)))
+    sim = OnlineSimulator(
+        g, make_cm(g, cons, logical_tools=not coalescing), workers,
+        coalescing=coalescing, barrier_mode=barrier,
+        opportunistic=not barrier)
+    return sim.run(batches, rate)
+
+
+def run(n_queries: int = 128, workers: int = 3, micro_batch: int = 16,
+        rate_qps: float = 50.0) -> List[Dict]:
+    rows = []
+    for w in WORKLOADS:
+        g, cons, bindings = setup(w, n_queries)
+        plan = halo_plan(g, cons, workers)
+        halo = _stream(g, cons, bindings, lambda cb: plan, workers,
+                       micro_batch, rate_qps)
+        opw = _stream(g, cons, bindings, lambda cb: plan, workers,
+                      micro_batch, rate_qps, barrier=True)
+        cm_rr = make_cm(g, cons, logical_tools=True)
+        rr = round_robin_plan(g.llm_dag(), cm_rr, workers)
+        lang = _stream(g, cons, bindings, lambda cb: rr, workers,
+                       micro_batch, rate_qps, coalescing=False)
+        for name, rep in (("halo", halo), ("opwise", opw),
+                          ("langgraph", lang)):
+            rows.append({"workload": w, "system": name,
+                         "qps": round(rep.throughput_qps(), 3),
+                         "makespan_s": round(rep.makespan, 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(64):
+        print(r)

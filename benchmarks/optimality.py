@@ -1,0 +1,55 @@
+"""Table 4 — scheduler optimality: Random/RR/HEFT/Halo vs the oracle."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import make_cm, setup
+from repro.core import (BranchAndBoundOracle, EpochDPSolver, SCHEDULERS,
+                        SolverConfig, optimality_score)
+from repro.runtime import SimulatedProcessor
+
+
+def run(n_queries: int = 256, workers: int = 3,
+        workloads=("w1", "w6")) -> List[Dict]:
+    rows = []
+    for w in workloads:
+        g, cons, _ = setup(w, n_queries)
+        dag = g.llm_dag()
+        cm = make_cm(g, cons)
+        oracle = BranchAndBoundOracle(dag, make_cm(g, cons), workers,
+                                      time_limit=120).solve()
+
+        def simulate(plan):
+            return SimulatedProcessor(g, make_cm(g, cons), workers).run(
+                cons, plan)
+
+        entries = {}
+        for name in ("random", "rr", "heft"):
+            fn = SCHEDULERS[name]
+            plan = fn(dag, make_cm(g, cons), workers, 0) \
+                if name == "random" else fn(dag, make_cm(g, cons), workers)
+            entries[name] = plan
+        t0 = time.perf_counter()
+        solver = EpochDPSolver(dag, cm, SolverConfig(num_workers=workers))
+        entries["halo"] = solver.solve()
+        halo_solver_s = time.perf_counter() - t0
+        entries["oracle"] = oracle.plan
+
+        for name, plan in entries.items():
+            rep = simulate(plan)
+            rows.append({
+                "workload": w, "scheduler": name,
+                "e2e_latency_s": round(rep.makespan, 2),
+                "opt": round(optimality_score(plan, oracle.plan, workers), 2),
+                "solver_s": round(
+                    halo_solver_s if name == "halo"
+                    else oracle.solver_seconds if name == "oracle"
+                    else plan.solver_seconds, 4),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(64):
+        print(r)

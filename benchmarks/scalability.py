@@ -1,0 +1,34 @@
+"""Fig. 8 — scalability: batch-size scaling and worker elasticity (W3)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import run_halo, run_opwise, setup
+
+
+def run(workload: str = "w3") -> List[Dict]:
+    rows = []
+    for n in (256, 512, 1024, 2048):
+        g, cons, _ = setup(workload, n)
+        halo = run_halo(g, cons, 3)
+        opw = run_opwise(g, cons, 3)
+        rows.append({"axis": "batch", "value": n,
+                     "halo_s": round(halo.makespan, 1),
+                     "opwise_s": round(opw.makespan, 1),
+                     "halo_qps": round(halo.throughput_qps(), 3)})
+    # worker elasticity on a workload WITH branch parallelism (W1 diamond;
+    # a pure chain like W3 cannot use >1 worker at macro granularity)
+    g, cons, _ = setup("w1", 256)
+    for wk in (1, 2, 3):
+        halo = run_halo(g, cons, wk)
+        opw = run_opwise(g, cons, wk)
+        rows.append({"axis": "workers", "value": wk,
+                     "halo_s": round(halo.makespan, 1),
+                     "opwise_s": round(opw.makespan, 1),
+                     "halo_qps": round(halo.throughput_qps(), 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

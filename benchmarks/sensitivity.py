@@ -1,0 +1,65 @@
+"""Figs. 9–10 — sensitivity: model sizes, device generations, processor
+batch size."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import halo_plan, make_cm, run_opwise, setup
+from repro.core import EpochDPSolver, SolverConfig
+from repro.core.graphspec import GraphSpec
+from repro.runtime import OpWiseSimulator, SimulatedProcessor
+
+LIGHT = {"qwen3-14b": "qwen3-0.6b", "qwen3-32b": "qwen3-4b",
+         "gpt-oss-20b": "qwen3-0.6b"}
+HEAVY = {"qwen3-14b": "qwq-32b", "qwen3-32b": "qwen3-32b",
+         "gpt-oss-20b": "deepseek-r1-distill-32b"}
+DEVICES = {"D1-2xA100": ("a100", 2), "D2-2xH100": ("h100", 2),
+           "D3-3xH200": ("h200", 3)}
+
+
+def _remap_models(g: GraphSpec, mapping) -> GraphSpec:
+    nodes = [n.with_(model=mapping.get(n.model, n.model)) if n.is_llm()
+             else n for n in g.nodes.values()]
+    return GraphSpec(g.name, nodes, g.edges)
+
+
+def run(workload: str = "w3", n_queries: int = 256) -> List[Dict]:
+    rows = []
+    g0, cons, _ = setup(workload, n_queries)
+
+    # ---- model size (Fig. 9 left) ------------------------------------
+    for label, mapping in (("light", LIGHT), ("base", {}), ("heavy", HEAVY)):
+        g = _remap_models(g0, mapping)
+        plan = halo_plan(g, cons, 3)
+        halo = SimulatedProcessor(g, make_cm(g, cons), 3).run(cons, plan)
+        opw = OpWiseSimulator(g, make_cm(g, cons), 3).run(cons)
+        rows.append({"axis": "model_size", "value": label,
+                     "halo_s": round(halo.makespan, 1),
+                     "opwise_s": round(opw.makespan, 1)})
+
+    # ---- device generation (Fig. 9 right) ----------------------------
+    for label, (hw, wk) in DEVICES.items():
+        plan = halo_plan(g0, cons, wk, hardware=hw)
+        halo = SimulatedProcessor(g0, make_cm(g0, cons, hardware=hw),
+                                  wk).run(cons, plan)
+        opw = OpWiseSimulator(g0, make_cm(g0, cons, hardware=hw),
+                              wk).run(cons)
+        rows.append({"axis": "device", "value": label,
+                     "halo_s": round(halo.makespan, 1),
+                     "opwise_s": round(opw.makespan, 1)})
+
+    # ---- processor batch size (Fig. 10) -------------------------------
+    for w in ("w3", "w4"):
+        gg, cc, _ = setup(w, n_queries)
+        plan = halo_plan(gg, cc, 3)
+        for pb in (32, 64, 128, 256, 512, 1024):
+            rep = SimulatedProcessor(gg, make_cm(gg, cc), 3,
+                                     processor_batch=pb).run(cc, plan)
+            rows.append({"axis": f"proc_batch[{w}]", "value": pb,
+                         "halo_s": round(rep.makespan, 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(n_queries=64):
+        print(r)

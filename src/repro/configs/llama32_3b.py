@@ -1,0 +1,29 @@
+"""llama3.2-3b — small llama3 dense decoder.
+
+28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+24 heads do not divide the 16-way model axis: the sharding policy
+replicates heads and shards d_ff instead (DESIGN.md §5).
+[hf:meta-llama/Llama-3.2-3B]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500000.0,
+    tie_embeddings=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=3, d_model=48, num_heads=6, num_kv_heads=2, head_dim=8,
+        d_ff=128, vocab_size=256,
+    )

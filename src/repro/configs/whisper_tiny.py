@@ -1,0 +1,30 @@
+"""whisper-tiny — encoder-decoder ASR backbone; conv frontend is a STUB.
+
+4L (enc) + 4L (dec) d_model=384 6H d_ff=1536 vocab=51865. ``input_specs``
+feeds precomputed frame embeddings (B, frames, d_model) per assignment.
+Encoder uses bidirectional attention over frames; decoder has causal
+self-attn + cross-attn.  [arXiv:2212.04356]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,            # decoder layers
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    head_dim=64,
+    enc_layers=4,
+    enc_max_len=1500,        # 30s of audio at 50 frames/s (standard whisper)
+    rope_theta=0.0,          # whisper uses learned/sinusoidal, not rope
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256, enc_layers=2, enc_max_len=64,
+    )

@@ -1,0 +1,120 @@
+"""Consolidation — a batch of N queries over one template → one graph.
+
+Each template node becomes a MACRO-NODE carrying the N per-query
+bindings (DESIGN.md §8.1).  The optimizer plans macro-nodes (the DP
+state space is independent of N); the Processor batches the bindings
+inside each epoch.
+
+Physical request counts are derived by BINDING-INFLUENCE propagation:
+node v's output is a deterministic function of the binding parameters
+appearing in its own template plus (transitively) in its ancestors'.
+Two queries whose bindings agree on that influence set are guaranteed to
+produce identical requests at v — so they coalesce.  For tool nodes with
+binding-only args the rendered string itself is the signature (letting
+DIFFERENT nodes that issue the same SQL share one physical execution).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Sequence, Set
+
+from repro.core.graphspec import GraphSpec, NodeSpec
+from repro.core.parser import static_signature
+
+_REF = re.compile(r"\$\{([A-Za-z_][A-Za-z0-9_]*)\}")
+_PARAM = re.compile(r"\$([A-Za-z_][A-Za-z0-9_]*)")
+
+
+def _template_params(text: str, binding_keys: Set[str]) -> Set[str]:
+    """$params used directly in a template (excluding ${upstream} refs)."""
+    no_refs = _REF.sub("", text)
+    return {p for p in _PARAM.findall(no_refs) if p in binding_keys}
+
+
+@dataclass
+class MacroNode:
+    spec: NodeSpec
+    bindings: List[Dict[str, str]]
+    # influence set: binding params that (transitively) shape this node
+    influence: FrozenSet[str] = frozenset()
+    # distinct physical request signatures + per-query mapping
+    unique_signatures: List[str] = field(default_factory=list)
+    signature_of_query: List[int] = field(default_factory=list)
+
+    @property
+    def n_logical(self) -> int:
+        return len(self.bindings)
+
+    @property
+    def n_unique(self) -> int:
+        return len(self.unique_signatures)
+
+
+class ConsolidatedGraph:
+    """Template GraphSpec × N bindings, with per-node macro views."""
+
+    def __init__(self, template: GraphSpec,
+                 bindings: Sequence[Dict[str, str]]):
+        self.template = template
+        self.bindings = [dict(b) for b in bindings]
+        keys: Set[str] = set()
+        for b in self.bindings:
+            keys |= set(b)
+
+        # ---- influence propagation (topological) ------------------------
+        influence: Dict[str, Set[str]] = {}
+        for nid in template.topo_order():
+            spec = template.nodes[nid]
+            text = spec.prompt if spec.is_llm() else spec.args
+            inf = _template_params(text, keys)
+            for p in template.parents(nid):
+                inf |= influence[p]
+            influence[nid] = inf
+
+        # ---- per-node signatures ----------------------------------------
+        self.macros: Dict[str, MacroNode] = {}
+        for nid, spec in template.nodes.items():
+            text = spec.prompt if spec.is_llm() else spec.args
+            has_refs = bool(_REF.search(text))
+            inf = sorted(influence[nid])
+            sig_ix: Dict[str, int] = {}
+            uniq: List[str] = []
+            of_query: List[int] = []
+            for b in self.bindings:
+                if has_refs or spec.is_llm():
+                    # upstream-dependent: influence-tuple signature
+                    s = nid + "|" + "|".join(str(b.get(k, "")) for k in inf)
+                else:
+                    # binding-only tool args: the rendered string itself —
+                    # different nodes issuing identical requests coalesce
+                    s = spec.op + "|" + static_signature(text, b)
+                if s not in sig_ix:
+                    sig_ix[s] = len(uniq)
+                    uniq.append(s)
+                of_query.append(sig_ix[s])
+            self.macros[nid] = MacroNode(
+                spec=spec, bindings=self.bindings,
+                influence=frozenset(influence[nid]),
+                unique_signatures=uniq, signature_of_query=of_query)
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.bindings)
+
+    def macro(self, nid: str) -> MacroNode:
+        return self.macros[nid]
+
+    def static_dedup_ratio(self, nid: str) -> float:
+        """unique / logical — 1.0 means no cross-query redundancy."""
+        m = self.macros[nid]
+        return m.n_unique / max(m.n_logical, 1)
+
+    def coalescing_summary(self) -> Dict[str, Dict[str, int]]:
+        return {nid: {"logical": m.n_logical, "unique": m.n_unique}
+                for nid, m in self.macros.items()}
+
+
+def consolidate(template: GraphSpec,
+                bindings: Sequence[Dict[str, str]]) -> ConsolidatedGraph:
+    return ConsolidatedGraph(template, bindings)

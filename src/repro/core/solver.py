@@ -1,0 +1,153 @@
+"""Epoch-based dynamic-programming solver (Algorithm 1).
+
+Memoized recursion over states S = (D, H): D the completed LLM set, H
+the tuple of worker contexts.  Each step enumerates feasible epoch
+actions — topological cuts of the LLM DAG partitioned into chains
+(weakly-connected components executed sequentially on one worker) and
+injective chain→worker maps — scores them with the state-aware cost
+model, and recurses on the deterministic state transition.
+
+State-space control (the paper's "pruning to topological frontiers"):
+* candidate nodes = frontier closure up to ``chain_depth`` levels, so
+  dependent steps can chain inside one epoch (model residency + warm KV);
+* subsets capped at ``max_epoch_nodes``;
+* chain→worker assignments deduped by worker-context equivalence classes
+  (two idle identical workers are interchangeable).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import CostModel
+from repro.core.graphspec import LLMDag
+from repro.core.plan import Epoch, ExecutionPlan
+from repro.core.state import SystemState, WorkerContext
+
+
+@dataclass
+class SolverConfig:
+    num_workers: int = 3
+    chain_depth: int = 2           # frontier closure levels per epoch
+    max_epoch_nodes: int = 6       # |B_e| cap
+    max_states: int = 200_000      # hard safety valve on memo size
+    # beam over epoch actions per state, ranked by immediate cost with a
+    # work-density tie-break; None = exact enumeration.  This is the
+    # "pruning to topological frontiers" knob that keeps planning
+    # near-linear in practice (§4, complexity analysis).
+    beam: Optional[int] = 16
+
+
+class EpochDPSolver:
+    def __init__(self, dag: LLMDag, cost_model: CostModel,
+                 config: SolverConfig = SolverConfig()):
+        self.dag = dag
+        self.cm = cost_model
+        self.cfg = config
+        self.memo: Dict[Tuple, Tuple[float, Optional[Tuple]]] = {}
+        self.states_explored = 0
+
+    # ------------------------------------------------------------------
+    def _candidates(self, done: FrozenSet[str]) -> List[str]:
+        """Frontier closure: nodes launchable this epoch (chains allowed)."""
+        cand: List[str] = []
+        d = set(done)
+        for _ in range(self.cfg.chain_depth):
+            level = [v for v in self.dag.frontier(frozenset(d)) if v not in cand]
+            if not level:
+                break
+            cand.extend(level)
+            d.update(level)
+        return cand
+
+    def _batches(self, done: FrozenSet[str]) -> List[FrozenSet[str]]:
+        cand = self._candidates(done)
+        out: List[FrozenSet[str]] = []
+        max_n = min(len(cand), self.cfg.max_epoch_nodes)
+        for r in range(1, max_n + 1):
+            for sub in itertools.combinations(cand, r):
+                batch = frozenset(sub)
+                if not self.dag.is_valid_cut(done, batch):
+                    continue
+                comps = self.dag.components(batch)
+                if len(comps) > self.cfg.num_workers:
+                    continue
+                out.append(batch)
+        return out
+
+    def _assignments(self, comps: List[List[str]],
+                     contexts: Tuple[WorkerContext, ...]
+                     ) -> List[Tuple[int, ...]]:
+        """Injective component→worker maps, deduped by context classes."""
+        W = len(contexts)
+        # equivalence classes of workers by context
+        cls: Dict[WorkerContext, List[int]] = {}
+        for w, c in enumerate(contexts):
+            cls.setdefault(c, []).append(w)
+        reps = {w: cls[contexts[w]][0] for w in range(W)}
+        seen: set = set()
+        out: List[Tuple[int, ...]] = []
+        for perm in itertools.permutations(range(W), len(comps)):
+            key = tuple(reps[w] for w in perm)
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(perm)
+        return out
+
+    # ------------------------------------------------------------------
+    def _solve(self, state: SystemState) -> Tuple[float, Optional[Tuple]]:
+        if len(state.done) == len(self.dag.node_ids):
+            return 0.0, None
+        key = state.key()
+        hit = self.memo.get(key)
+        if hit is not None:
+            return hit
+        self.states_explored += 1
+        if self.states_explored > self.cfg.max_states:
+            raise RuntimeError("DP state budget exceeded; raise max_states "
+                               "or lower chain_depth/max_epoch_nodes")
+
+        # enumerate candidate actions, score the immediate epoch cost
+        actions = []
+        for batch in self._batches(state.done):
+            comps = self.dag.components(batch)
+            for workers in self._assignments(comps, state.contexts):
+                c_now, ctxs, _ = self.cm.epoch_cost(comps, workers, state)
+                # rank by cost per unit of work (prefer dense epochs)
+                rank = c_now / max(len(batch), 1)
+                actions.append((rank, c_now, comps, workers, ctxs, batch))
+        actions.sort(key=lambda a: a[0])
+        if self.cfg.beam is not None:
+            actions = actions[:self.cfg.beam]
+
+        best = (float("inf"), None)
+        for _, c_now, comps, workers, ctxs, batch in actions:
+            nxt = SystemState(state.done | batch, ctxs)
+            c_fut, _ = self._solve(nxt)
+            total = c_now + c_fut
+            if total < best[0]:
+                best = (total, (tuple(map(tuple, comps)),
+                                tuple(workers), c_now, nxt))
+        self.memo[key] = best
+        return best
+
+    # ------------------------------------------------------------------
+    def solve(self, initial: Optional[SystemState] = None) -> ExecutionPlan:
+        t0 = time.perf_counter()
+        state = initial or SystemState.initial(self.cfg.num_workers)
+        total, _ = self._solve(state)
+        # plan reconstruction from the memo chain
+        plan = ExecutionPlan(predicted_cost=total, scheduler_name="halo-dp")
+        while len(state.done) < len(self.dag.node_ids):
+            _, step = self.memo[state.key()]
+            assert step is not None
+            comps, workers, c_now, nxt = step
+            plan.epochs.append(Epoch([list(c) for c in comps],
+                                     list(workers), c_now))
+            state = nxt
+        plan.solver_seconds = time.perf_counter() - t0
+        plan.validate(self.dag)
+        return plan

@@ -1,0 +1,47 @@
+"""System state for the epoch DP: S_e = (D_e, H_e)  (paper §4).
+
+``WorkerContext`` is the persistent GPU-worker context h_w: the resident
+model id and a compact warm-KV signature — the ordered tuple of the most
+recent LLM node ids whose lineage is warm on that worker.  Both are
+hashable so (D, H) keys the memo table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import FrozenSet, Optional, Tuple
+
+# Compact representation: keep only the most recent K lineage ids.  K=2
+# keeps the DP state space tractable (prefix discounts look one hop back:
+# a node's parent lineage) — raising K grows states combinatorially for
+# little planning value.
+WARM_CAP = 2
+
+
+@dataclass(frozen=True)
+class WorkerContext:
+    model: str = ""                               # resident weights m_w
+    warm: Tuple[str, ...] = ()                    # kv signature u_w (recent-last)
+
+    def after(self, node_id: str, node_model: str) -> "WorkerContext":
+        """Deterministic transition after executing ``node_id``."""
+        if node_model != self.model:
+            return WorkerContext(model=node_model, warm=(node_id,))
+        warm = tuple(w for w in self.warm if w != node_id) + (node_id,)
+        return WorkerContext(model=self.model, warm=warm[-WARM_CAP:])
+
+    def has_warm(self, node_id: str) -> bool:
+        return node_id in self.warm
+
+
+@dataclass(frozen=True)
+class SystemState:
+    done: FrozenSet[str] = frozenset()
+    contexts: Tuple[WorkerContext, ...] = ()
+
+    def key(self) -> Tuple:
+        return (self.done, self.contexts)
+
+    @staticmethod
+    def initial(num_workers: int) -> "SystemState":
+        return SystemState(frozenset(),
+                           tuple(WorkerContext() for _ in range(num_workers)))

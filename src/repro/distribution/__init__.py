@@ -1,0 +1,9 @@
+"""Distribution layer: divisibility-aware sharding policy (TP × FSDP) and
+shard_map collectives (KV-seq-split flash-decoding, compressed cross-pod
+gradient reduction)."""
+from repro.distribution.sharding import (
+    ShardingPolicy, param_shardings, input_shardings, cache_shardings,
+)
+
+__all__ = ["ShardingPolicy", "param_shardings", "input_shardings",
+           "cache_shardings"]

@@ -1,0 +1,208 @@
+"""Divisibility-aware sharding policy: TP over "model", FSDP over
+("pod","data") — DESIGN.md §5.
+
+jax rejects NamedShardings whose dims don't divide the mesh axis, so the
+policy PROVES divisibility before sharding and falls back per-tensor:
+
+* named rules first (embeddings vocab-sharded, attention projections
+  column/row split, MoE expert dim, router replicated);
+* generic fallback: largest dim divisible by the axis size;
+* anything that doesn't divide is replicated on that axis — e.g.
+  llama3.2-3b's 24 heads on a 16-way model axis keep head projections
+  replicated while its d_ff=8192 still TP-shards (the policy operates
+  per-tensor, so partial TP comes out naturally).
+
+Stacked scan params carry a leading layer dim that is never sharded.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    tp_axis: str = "model"
+    fsdp_axes: Tuple[str, ...] = ("data",)      # ("pod","data") multi-pod
+    fsdp_params: bool = True                    # shard params at rest
+    # activation batch axes (data parallel)
+    batch_axes: Tuple[str, ...] = ("data",)
+
+    @staticmethod
+    def for_mesh(mesh: Mesh, fsdp_params: bool = True) -> "ShardingPolicy":
+        names = mesh.axis_names
+        if "pod" in names:
+            return ShardingPolicy(fsdp_axes=("pod", "data"),
+                                  batch_axes=("pod", "data"),
+                                  fsdp_params=fsdp_params)
+        return ShardingPolicy(fsdp_params=fsdp_params)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _spec_for_leaf(path: str, shape: Sequence[int], mesh: Mesh,
+                   pol: ShardingPolicy) -> P:
+    tp_n = _axis_size(mesh, pol.tp_axis)
+    fsdp_n = _axis_size(mesh, pol.fsdp_axes)
+    ndims = len(shape)
+    entries: list = [None] * ndims
+    if ndims == 0:
+        return P()
+
+    # leading dims of stacked/scanned blocks are layer dims — skip them:
+    # heuristic: paths under blocks/pairs/groups have stacked leaves
+    first_ok = 0
+    if re.search(r"(blocks|pairs|groups)", path) and ndims >= 2:
+        first_ok = 1
+    cand_dims = list(range(first_ok, ndims))
+
+    def try_assign(dim: int, axes) -> bool:
+        n = _axis_size(mesh, axes)
+        if dim in cand_dims and entries[dim] is None and shape[dim] % n == 0 \
+                and shape[dim] >= n:
+            entries[dim] = axes if isinstance(axes, str) else tuple(axes)
+            return True
+        return False
+
+    # ---- named rules (TP placement) -----------------------------------
+    leaf = path.split("/")[-1]
+    tp_done = False
+    if leaf in ("embed",):
+        tp_done = try_assign(first_ok + 0, pol.tp_axis)       # vocab dim
+    elif leaf in ("lm_head",):
+        tp_done = try_assign(ndims - 1, pol.tp_axis)          # vocab dim
+    elif leaf in ("wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_gates",
+                  "w_if"):
+        tp_done = try_assign(ndims - 1, pol.tp_axis)          # column split
+    elif leaf in ("wo", "w_down", "w_out"):
+        tp_done = try_assign(ndims - 2, pol.tp_axis)          # row split
+    elif leaf == "router":
+        tp_done = True                                         # replicate
+    elif re.search(r"moe", path) and ndims >= 3:
+        # (L?, E, D, F) expert tensors: expert dim first, else F
+        tp_done = (try_assign(first_ok, pol.tp_axis)
+                   or try_assign(ndims - 1, pol.tp_axis))
+    # generic fallback: largest divisible dim, preferring the last
+    if not tp_done:
+        for dim in sorted(cand_dims, key=lambda d: (-shape[d], -d)):
+            if shape[dim] >= 2 * tp_n and try_assign(dim, pol.tp_axis):
+                break
+
+    # ---- FSDP placement over the remaining dims ------------------------
+    if pol.fsdp_params and fsdp_n > 1:
+        for dim in sorted(cand_dims, key=lambda d: (-shape[d], d)):
+            if try_assign(dim, pol.fsdp_axes):
+                break
+
+    return P(*entries)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh,
+                    pol: Optional[ShardingPolicy] = None) -> Any:
+    """Pytree of NamedShardings for a (possibly abstract) param pytree."""
+    pol = pol or ShardingPolicy.for_mesh(mesh)
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            out = [walk(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+            return type(tree)(out)
+        spec = _spec_for_leaf(prefix, tree.shape, mesh, pol)
+        return NamedSharding(mesh, spec)
+
+    return walk(params_shape)
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    pol: Optional[ShardingPolicy] = None
+                    ) -> Dict[str, NamedSharding]:
+    """Shardings for the step inputs of one (arch, shape) cell."""
+    pol = pol or ShardingPolicy.for_mesh(mesh)
+    B = shape.global_batch
+    bn = _axis_size(mesh, pol.batch_axes)
+    batch_axes = pol.batch_axes if B % bn == 0 else (
+        pol.batch_axes[:1] if B % _axis_size(mesh, pol.batch_axes[:1]) == 0
+        else None)
+    bspec = batch_axes if batch_axes else None
+
+    def nd(*entries):
+        return NamedSharding(mesh, P(*entries))
+
+    out: Dict[str, NamedSharding] = {}
+    if shape.kind == "train":
+        out["tokens"] = nd(bspec, None)
+        out["labels"] = nd(bspec, None)
+    elif shape.kind == "prefill":
+        out["tokens"] = nd(bspec, None)
+    else:
+        out["token"] = nd(bspec)
+    if cfg.family == "audio" and shape.kind != "decode":
+        out["frames"] = nd(bspec, None, None)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["patch_embeds"] = nd(bspec, None, None)
+    return out
+
+
+def cache_shardings(cache_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                    batch: int, pol: Optional[ShardingPolicy] = None,
+                    batch_axes_tree: Optional[Any] = None) -> Any:
+    """Shardings for a decode cache pytree.
+
+    KV time axis shards over "model" (the flash-decoding KV-split: each
+    model shard owns a slice of the context; XLA inserts the partial-
+    softmax combine).  Batch shards over the data axes when divisible.
+    Recurrent state (B, D) shards D over "model".
+
+    ``batch_axes_tree`` (from ``model.cache_batch_axes``) names each
+    leaf's batch dim — stacked caches are (L, B, T, ...) while flat
+    recurrent states are (B, ...).
+    """
+    pol = pol or ShardingPolicy.for_mesh(mesh)
+    tp = pol.tp_axis
+    tp_n = _axis_size(mesh, tp)
+    bn = _axis_size(mesh, pol.batch_axes)
+    b_ax = pol.batch_axes if batch % bn == 0 else None
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        shp = tree.shape
+        nd = len(shp)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        key = prefix.split("/")[-1]
+        if key in ("length", "enc_len"):
+            return NamedSharding(mesh, P(b_ax))
+        b_dim = 1
+        if batch_axes_tree is not None:
+            b_dim = batch_axes_tree.get(key, 1)
+        if b_dim >= nd or shp[b_dim] != batch:
+            b_dim = next((d for d in range(nd) if shp[d] == batch), None)
+        entries: list = [None] * nd
+        if b_dim is not None:
+            entries[b_dim] = b_ax
+        t_dim = None if b_dim is None else b_dim + 1
+        if (t_dim is not None and nd >= t_dim + 3
+                and shp[t_dim] % tp_n == 0 and shp[t_dim] >= tp_n):
+            entries[t_dim] = tp                 # KV-seq split
+        elif (entries[-1] is None and shp[-1] % tp_n == 0
+                and shp[-1] >= 2 * tp_n):
+            entries[-1] = tp
+        return NamedSharding(mesh, P(*entries))
+
+    return walk(cache_shape)

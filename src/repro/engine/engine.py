@@ -1,0 +1,202 @@
+"""InferenceEngine — the per-worker LLM serving engine Halo schedules.
+
+This is the pure-JAX stand-in for a vLLM instance (DESIGN.md §2):
+
+* continuous batching: requests are grouped by prompt length, prefilled
+  as a padded batch, and decoded in lock-step slots;
+* prefix sharing: when a whole group shares a prompt prefix (the normal
+  case for Halo's consolidated template batches), the prefix is
+  prefilled ONCE (batch 1) and its cache is tiled across the group —
+  the compute- and memory-level realization of KV-cache sharing
+  (the Pallas shared_prefix_attention kernel is the TPU analogue at the
+  attention level; this path is its engine-level counterpart);
+* exact-duplicate memoization: identical (prompt, decode-params) calls
+  inside one batch run once (request coalescing at the engine edge);
+* stateful context: resident params (model switch cost) + a radix tree
+  of warm prefixes (Halo's ``u_w`` signature).
+
+All numerics run on CPU with tiny smoke configs in tests; the same code
+lowers under pjit for the dry-run meshes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.engine.models import build_model
+from repro.engine.prefix_tree import RadixPrefixTree, batch_shared_prefix
+from repro.engine.sampling import sample
+
+
+@dataclass
+class EngineStats:
+    prefill_tokens: int = 0
+    prefill_tokens_saved: int = 0        # via shared-prefix tiling
+    decode_tokens: int = 0
+    batches: int = 0
+    coalesced_requests: int = 0
+    model_loads: int = 0
+    load_seconds: float = 0.0
+    prefix_hits: int = 0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(self.__dict__)
+
+
+class InferenceEngine:
+    """One engine instance == one Halo GPU-worker's resident model."""
+
+    MIN_SHARED_PREFIX = 4                # tokens; below this, tiling not worth it
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0, max_batch: int = 8,
+                 enable_prefix_sharing: bool = True):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.seed = seed
+        self.max_batch = max_batch
+        self.enable_prefix_sharing = enable_prefix_sharing
+        self.params = None               # lazy: loading == model-switch cost
+        self.stats = EngineStats()
+        self.warm_prefixes = RadixPrefixTree()
+        # jitted steps (cached per input/cache shape signature)
+        self._decode_jit = jax.jit(
+            lambda p, tok, cache: self.model.decode_step(p, tok, cache))
+        self._prefill_jit = jax.jit(
+            lambda p, toks: self.model.prefill(p, toks))
+
+    # ---------------------------------------------------------------- weights
+    def load(self) -> float:
+        """Materialize params (the T_model event). Returns seconds."""
+        if self.params is not None:
+            return 0.0
+        t0 = time.perf_counter()
+        self.params = self.model.init(jax.random.PRNGKey(self.seed))
+        jax.block_until_ready(jax.tree.leaves(self.params)[0])
+        dt = time.perf_counter() - t0
+        self.stats.model_loads += 1
+        self.stats.load_seconds += dt
+        return dt
+
+    def unload(self) -> None:
+        self.params = None
+        self.warm_prefixes = RadixPrefixTree()
+
+    @property
+    def loaded(self) -> bool:
+        return self.params is not None
+
+    def param_bytes(self) -> int:
+        return self.cfg.param_count() * 2          # bf16
+
+    # ---------------------------------------------------------------- helpers
+    def _tile_cache(self, cache, n: int):
+        axes = self.model.cache_batch_axes(cache)
+        return {k: jnp.repeat(v, n, axis=axes[k]) for k, v in cache.items()}
+
+    def _prefill(self, tokens: jax.Array, extra: Dict[str, Any]):
+        if self.cfg.family == "audio":
+            return self.model.prefill(self.params, tokens, extra["frames"])
+        if self.cfg.family == "vlm" and extra.get("patch_embeds") is not None:
+            return self.model.prefill(self.params, tokens,
+                                      prefix_embeds=extra["patch_embeds"])
+        return self._prefill_jit(self.params, tokens)
+
+    def _decode(self, token: jax.Array, cache):
+        return self._decode_jit(self.params, token, cache)
+
+    # ---------------------------------------------------------------- generate
+    def generate(self, prompts: Sequence[Sequence[int]], *,
+                 max_new_tokens: int = 16, temperature: float = 0.0,
+                 extras: Optional[List[Dict[str, Any]]] = None,
+                 ) -> List[List[int]]:
+        """Generate continuations for a batch of token prompts.
+
+        Deterministic for temperature=0.  Identical prompts are coalesced.
+        Returns one generated-token list per prompt (same order).
+        """
+        if self.params is None:
+            self.load()
+        extras = extras or [{} for _ in prompts]
+
+        # ---- engine-edge coalescing of exact duplicates ------------------
+        uniq: Dict[Tuple[int, ...], int] = {}
+        order: List[int] = []
+        uniq_prompts: List[Sequence[int]] = []
+        uniq_extras: List[Dict[str, Any]] = []
+        for p, e in zip(prompts, extras):
+            key = tuple(p)
+            if key in uniq and not e:
+                self.stats.coalesced_requests += 1
+            else:
+                uniq[key] = len(uniq_prompts)
+                uniq_prompts.append(p)
+                uniq_extras.append(e)
+            order.append(uniq[key])
+
+        # ---- group by prompt length (padding-free batching) --------------
+        groups: Dict[int, List[int]] = {}
+        for i, p in enumerate(uniq_prompts):
+            groups.setdefault(len(p), []).append(i)
+
+        results: List[Optional[List[int]]] = [None] * len(uniq_prompts)
+        for idxs in groups.values():
+            for j0 in range(0, len(idxs), self.max_batch):
+                chunk = idxs[j0:j0 + self.max_batch]
+                outs = self._generate_group(
+                    [uniq_prompts[i] for i in chunk],
+                    [uniq_extras[i] for i in chunk],
+                    max_new_tokens, temperature)
+                for i, o in zip(chunk, outs):
+                    results[i] = o
+        self.stats.batches += 1
+        return [list(results[j]) for j in order]
+
+    # ---------------------------------------------------------------- group
+    def _generate_group(self, prompts, extras, max_new, temperature):
+        B, S = len(prompts), len(prompts[0])
+        tokens = jnp.asarray(prompts, jnp.int32)
+        shared = batch_shared_prefix(prompts) if (
+            self.enable_prefix_sharing and B > 1 and not any(extras)) else []
+        # recurrent archs share state snapshots only for EXACT prefixes,
+        # which is what batch_shared_prefix computes — always valid; but
+        # only profitable beyond a minimum length.
+        P = len(shared)
+        use_shared = P >= self.MIN_SHARED_PREFIX and P < S
+
+        if use_shared:
+            # prefill shared prefix ONCE, tile the cache across the group
+            logits1, cache = self._prefill(tokens[:1, :P], {})
+            cache = self.model.extend_cache(cache, (S - P) + max_new)
+            cache = self._tile_cache(cache, B)
+            self.stats.prefill_tokens += P
+            self.stats.prefill_tokens_saved += P * (B - 1)
+            self.warm_prefixes.insert(shared)
+            # teacher-force per-request suffixes (uniform length S - P)
+            logits = jnp.repeat(logits1, B, axis=0)
+            for t in range(P, S):
+                logits, cache = self._decode(tokens[:, t], cache)
+                self.stats.decode_tokens += B
+        else:
+            logits, cache = self._prefill(tokens, extras[0] if any(extras)
+                                          else {})
+            cache = self.model.extend_cache(cache, max_new)
+            self.stats.prefill_tokens += B * S
+
+        # ---- sampling loop ------------------------------------------------
+        rng = jax.random.PRNGKey(self.seed)
+        outs = [[] for _ in range(B)]
+        for step in range(max_new):
+            rng, sub = jax.random.split(rng)
+            nxt = sample(logits, sub, temperature=temperature,
+                         vocab_size=self.cfg.vocab_size)
+            for b in range(B):
+                outs[b].append(int(nxt[b]))
+            if step + 1 < max_new:
+                logits, cache = self._decode(nxt, cache)
+                self.stats.decode_tokens += B
+        return outs

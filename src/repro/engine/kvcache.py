@@ -1,0 +1,152 @@
+"""Paged KV cache — the TPU adaptation of PagedAttention (DESIGN.md §2).
+
+GPU PagedAttention chases per-page pointers inside the kernel; TPUs want
+dense DMA.  Layout here: one array per layer of shape
+``(num_pages, page_size, kv_heads, head_dim)`` plus an integer page table
+per sequence.  ``gather()`` materializes a sequence's KV as a contiguous
+``(T, kv_heads, head_dim)`` block (a dense gather XLA turns into efficient
+dynamic-slices), which the decode kernel then streams through VMEM.
+
+Prefix sharing: pages are REFCOUNTED.  When a new sequence's prompt hits
+a cached prefix (radix tree), its page table aliases the existing pages —
+the shared prefix is stored (and was computed) exactly once.  Full pages
+are immutable, so aliasing needs no copy-on-write; only the last, partial
+page is private to a sequence.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class SequenceEntry:
+    seq_id: int
+    page_ids: List[int]
+    length: int                      # tokens written
+
+
+class PagedKVCache:
+    """Host-managed paged KV store for ONE layer-stacked model."""
+
+    def __init__(self, num_layers: int, num_pages: int, page_size: int,
+                 kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+        self.num_layers = num_layers
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
+        # (L, P, page, Hkv, Dh) — numpy on host; device transfer on gather
+        shape = (num_layers, num_pages, page_size, kv_heads, head_dim)
+        self.k = np.zeros(shape, np.float32)
+        self.v = np.zeros(shape, np.float32)
+        self.refcount = np.zeros((num_pages,), np.int64)
+        self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
+        self.sequences: Dict[int, SequenceEntry] = {}
+        self._next_seq = 0
+        # stats
+        self.pages_shared = 0
+        self.tokens_reused = 0
+
+    # ------------------------------------------------------------ alloc/free
+    def _alloc_page(self) -> int:
+        if not self.free_pages:
+            raise MemoryError("KV cache out of pages")
+        p = self.free_pages.pop()
+        self.refcount[p] = 1
+        return p
+
+    def _ref_page(self, p: int) -> None:
+        self.refcount[p] += 1
+
+    def _unref_page(self, p: int) -> None:
+        self.refcount[p] -= 1
+        if self.refcount[p] == 0:
+            self.free_pages.append(p)
+
+    @property
+    def pages_in_use(self) -> int:
+        return int((self.refcount > 0).sum())
+
+    # --------------------------------------------------------------- write
+    def add_sequence(self, k: np.ndarray, v: np.ndarray,
+                     shared_from: Optional[int] = None,
+                     shared_len: int = 0) -> int:
+        """Store a prefilled sequence's KV. k/v: (L, S, Hkv, Dh).
+
+        If ``shared_from`` names an existing sequence, its first
+        ``shared_len`` tokens are aliased (must be page-aligned; the caller
+        rounds down) and k/v carry only the remaining suffix.
+        """
+        ps = self.page_size
+        seq_id = self._next_seq
+        self._next_seq += 1
+        page_ids: List[int] = []
+        length = 0
+
+        if shared_from is not None and shared_len:
+            assert shared_len % ps == 0, "shared prefix must be page-aligned"
+            donor = self.sequences[shared_from]
+            n_shared = shared_len // ps
+            assert donor.length >= shared_len
+            for p in donor.page_ids[:n_shared]:
+                self._ref_page(p)
+                page_ids.append(p)
+            length = shared_len
+            self.pages_shared += n_shared
+            self.tokens_reused += shared_len
+
+        S = k.shape[1]
+        for s0 in range(0, S, ps):
+            p = self._alloc_page()
+            n = min(ps, S - s0)
+            self.k[:, p, :n] = k[:, s0:s0 + n]
+            self.v[:, p, :n] = v[:, s0:s0 + n]
+            page_ids.append(p)
+        length += S
+        self.sequences[seq_id] = SequenceEntry(seq_id, page_ids, length)
+        return seq_id
+
+    def append_token(self, seq_id: int, k_t: np.ndarray, v_t: np.ndarray) -> None:
+        """k_t/v_t: (L, Hkv, Dh) — one decode step's KV."""
+        e = self.sequences[seq_id]
+        slot = e.length % self.page_size
+        if slot == 0:
+            e.page_ids.append(self._alloc_page())
+        p = e.page_ids[-1]
+        if self.refcount[p] > 1:                 # copy-on-write partial page
+            newp = self._alloc_page()
+            self.k[:, newp] = self.k[:, p]
+            self.v[:, newp] = self.v[:, p]
+            self._unref_page(p)
+            e.page_ids[-1] = newp
+            p = newp
+        self.k[:, p, slot] = k_t
+        self.v[:, p, slot] = v_t
+        e.length += 1
+
+    # --------------------------------------------------------------- read
+    def gather(self, seq_id: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Contiguous (L, T, Hkv, Dh) views for a sequence."""
+        e = self.sequences[seq_id]
+        k = self.k[:, e.page_ids].reshape(
+            self.num_layers, -1, self.kv_heads, self.head_dim)
+        v = self.v[:, e.page_ids].reshape(
+            self.num_layers, -1, self.kv_heads, self.head_dim)
+        return k[:, :e.length], v[:, :e.length]
+
+    def page_table(self, seq_id: int) -> List[int]:
+        return list(self.sequences[seq_id].page_ids)
+
+    def free_sequence(self, seq_id: int) -> None:
+        e = self.sequences.pop(seq_id)
+        for p in e.page_ids:
+            self._unref_page(p)
+
+    # --------------------------------------------------------------- sizing
+    def hbm_bytes(self, dtype_bytes: int = 2) -> int:
+        return 2 * self.num_layers * self.num_pages * self.page_size \
+            * self.kv_heads * self.head_dim * dtype_bytes

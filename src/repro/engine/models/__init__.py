@@ -1,0 +1,32 @@
+"""Model zoo registry: ``build_model(cfg)`` dispatches on ``cfg.family``.
+
+All models implement the same protocol:
+  init(rng) -> params
+  forward(params, tokens, ...) -> (logits, aux)      # teacher-forced
+  loss_fn(params, batch, remat=False) -> scalar loss
+  init_cache(batch, max_len) -> cache pytree
+  prefill(params, tokens, ...) -> (last_logits, cache)
+  decode_step(params, token, cache) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.engine.models.transformer import TransformerLM
+        return TransformerLM(cfg)
+    if cfg.family == "audio":
+        from repro.engine.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    if cfg.family == "ssm":
+        from repro.engine.models.xlstm import XLSTMLM
+        return XLSTMLM(cfg)
+    if cfg.family == "hybrid":
+        from repro.engine.models.rglru import GriffinLM
+        return GriffinLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+__all__ = ["build_model"]

@@ -1,0 +1,293 @@
+"""Encoder-decoder transformer (whisper-tiny backbone).
+
+The conv/mel frontend is a STUB per assignment: the model consumes
+precomputed frame embeddings ``frames`` (B, T_enc, d_model).  Encoder is
+bidirectional; decoder is causal with cross-attention.  Whisper uses
+LayerNorm (+bias) and non-gated GELU FFNs; positions are sinusoidal.
+
+Decode shapes use the decoder self-attn cache + precomputed cross-attn KV
+over the encoder output (frames length = min(enc_max_len, seq_len)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.engine.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _ln_init(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _ffn_init(rng, d, d_ff, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {"w_up": L.dense_init(k1, d, d_ff, dtype),
+            "w_down": L.dense_init(k2, d_ff, d, dtype)}
+
+
+class EncDecLM:
+    """Whisper-style encoder-decoder with stubbed audio frontend."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.head_dim = cfg.resolved_head_dim
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+    def _enc_block_init(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        return {
+            "ln1": _ln_init(cfg.d_model, self.dtype),
+            "ln2": _ln_init(cfg.d_model, self.dtype),
+            "attn": L.attn_init(k1, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, self.head_dim, self.dtype),
+            "ffn": _ffn_init(k2, cfg.d_model, cfg.d_ff, self.dtype),
+        }
+
+    def _dec_block_init(self, rng):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "ln1": _ln_init(cfg.d_model, self.dtype),
+            "ln_x": _ln_init(cfg.d_model, self.dtype),
+            "ln2": _ln_init(cfg.d_model, self.dtype),
+            "attn": L.attn_init(k1, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, self.head_dim, self.dtype),
+            "xattn": L.attn_init(k2, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, self.head_dim, self.dtype),
+            "ffn": _ffn_init(k3, cfg.d_model, cfg.d_ff, self.dtype),
+        }
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 4)
+        enc_ks = jax.random.split(ks[1], cfg.enc_layers)
+        dec_ks = jax.random.split(ks[2], cfg.num_layers)
+        return {
+            "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model, self.dtype),
+            "enc_blocks": jax.vmap(self._enc_block_init)(enc_ks),
+            "dec_blocks": jax.vmap(self._dec_block_init)(dec_ks),
+            "enc_ln": _ln_init(cfg.d_model, self.dtype),
+            "dec_ln": _ln_init(cfg.d_model, self.dtype),
+        }
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params: Params, frames: jax.Array,
+               impl: Optional[str] = None) -> jax.Array:
+        """frames: (B, T, D) stub frontend output -> encoder states."""
+        cfg = self.cfg
+        B, T, D = frames.shape
+        pe = L.sinusoidal_positions(T, D).astype(self.dtype)
+        x = frames.astype(self.dtype) + pe[None]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+        def body(x, p):
+            h = L.layer_norm(x, p["ln1"]["w"], p["ln1"]["b"])
+            q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=self.head_dim, positions=positions,
+                                 rope_theta=1.0, use_rope=False)
+            o = L.attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=False,
+                            impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["attn"], o)
+            h = L.layer_norm(x, p["ln2"]["w"], p["ln2"]["b"])
+            return x + L.ffn_apply_nogate(p["ffn"], h), None
+
+        x, _ = lax.scan(body, x, params["enc_blocks"])
+        return L.layer_norm(x, params["enc_ln"]["w"], params["enc_ln"]["b"])
+
+    # --------------------------------------------------------------- decoder
+    def _dec_stack(self, params, x, positions, enc_out, enc_positions,
+                   impl=None, self_kv=None):
+        """Shared decoder stack. If self_kv is given (decode path), it is a
+        (k_cache, v_cache, kv_positions, slot) tuple per-layer handled by the
+        scan body; otherwise full-sequence self attention."""
+        cfg = self.cfg
+
+        def body(x, p):
+            h = L.layer_norm(x, p["ln1"]["w"], p["ln1"]["b"])
+            q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=self.head_dim, positions=positions,
+                                 rope_theta=1.0, use_rope=False)
+            o = L.attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=True,
+                            impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["attn"], o)
+            # cross attention over encoder states
+            h = L.layer_norm(x, p["ln_x"]["w"], p["ln_x"]["b"])
+            B, S, _ = h.shape
+            qx = (h @ p["xattn"]["wq"]).reshape(B, S, cfg.num_heads, self.head_dim)
+            kx = (enc_out @ p["xattn"]["wk"]).reshape(
+                B, -1, cfg.num_kv_heads, self.head_dim)
+            vx = (enc_out @ p["xattn"]["wv"]).reshape(
+                B, -1, cfg.num_kv_heads, self.head_dim)
+            ox = L.attention(qx, kx, vx, q_positions=positions,
+                             kv_positions=enc_positions, causal=False,
+                             impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["xattn"], ox)
+            h = L.layer_norm(x, p["ln2"]["w"], p["ln2"]["b"])
+            return x + L.ffn_apply_nogate(p["ffn"], h), None
+
+        x, _ = lax.scan(body, x, params["dec_blocks"])
+        return x
+
+    def forward(self, params: Params, tokens: jax.Array, frames: jax.Array,
+                remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+        """Teacher-forced decode over the full sequence -> (logits, aux=0)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        B, T_enc, _ = enc_out.shape
+        enc_positions = jnp.broadcast_to(
+            jnp.arange(T_enc, dtype=jnp.int32), (B, T_enc))
+        S = tokens.shape[1]
+        pe = L.sinusoidal_positions(S, cfg.d_model).astype(self.dtype)
+        x = params["embed"][tokens] + pe[None]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._dec_stack(params, x, positions, enc_out, enc_positions)
+        x = L.layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+        logits = x @ params["embed"].T          # tied head (whisper ties)
+        return logits, jnp.float32(0.0)
+
+    def loss_fn(self, params: Params, batch: Dict[str, jax.Array],
+                remat: bool = False) -> jax.Array:
+        logits, _ = self.forward(params, batch["tokens"], batch["frames"],
+                                 remat=remat)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                               self.cfg.vocab_size,
+                               mask=batch.get("loss_mask"))
+
+    # ------------------------------------------------------------- KV cache
+    def cache_batch_axes(self, cache):
+        return {k: (0 if k in ("length", "enc_len") else 1) for k in cache}
+
+    def extend_cache(self, cache, extra: int):
+        out = dict(cache)
+        for key in ("k", "v"):
+            c = cache[key]
+            pad = [(0, 0)] * c.ndim
+            pad[2] = (0, extra)
+            out[key] = jnp.pad(c, pad)
+        return out
+
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        Ld, Hkv, Dh = cfg.num_layers, cfg.num_kv_heads, self.head_dim
+        T_enc = cfg.enc_max_len
+        return {
+            "k": jnp.zeros((Ld, batch, max_len, Hkv, Dh), self.dtype),
+            "v": jnp.zeros((Ld, batch, max_len, Hkv, Dh), self.dtype),
+            # cross-attn KV precomputed at prefill
+            "xk": jnp.zeros((Ld, batch, T_enc, Hkv, Dh), self.dtype),
+            "xv": jnp.zeros((Ld, batch, T_enc, Hkv, Dh), self.dtype),
+            "enc_len": jnp.zeros((batch,), jnp.int32),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, params: Params, tokens: jax.Array, frames: jax.Array,
+                impl: Optional[str] = None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Encode frames, run the decoder prompt, build caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames, impl=impl)
+        B, T_enc, _ = enc_out.shape
+        enc_positions = jnp.broadcast_to(
+            jnp.arange(T_enc, dtype=jnp.int32), (B, T_enc))
+        S = tokens.shape[1]
+        pe = L.sinusoidal_positions(S, cfg.d_model).astype(self.dtype)
+        x = params["embed"][tokens] + pe[None]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(x, p):
+            h = L.layer_norm(x, p["ln1"]["w"], p["ln1"]["b"])
+            q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=self.head_dim, positions=positions,
+                                 rope_theta=1.0, use_rope=False)
+            o = L.attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=True,
+                            impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["attn"], o)
+            h = L.layer_norm(x, p["ln_x"]["w"], p["ln_x"]["b"])
+            qx = (h @ p["xattn"]["wq"]).reshape(B, S, cfg.num_heads, self.head_dim)
+            kx = (enc_out @ p["xattn"]["wk"]).reshape(
+                B, T_enc, cfg.num_kv_heads, self.head_dim)
+            vx = (enc_out @ p["xattn"]["wv"]).reshape(
+                B, T_enc, cfg.num_kv_heads, self.head_dim)
+            ox = L.attention(qx, kx, vx, q_positions=positions,
+                             kv_positions=enc_positions, causal=False,
+                             impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["xattn"], ox)
+            h = L.layer_norm(x, p["ln2"]["w"], p["ln2"]["b"])
+            return x + L.ffn_apply_nogate(p["ffn"], h), (k, v, kx, vx)
+
+        x, (ks, vs, xks, xvs) = lax.scan(body, x, params["dec_blocks"])
+        x = L.layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+        logits = x[:, -1] @ params["embed"].T
+        cache = {
+            "k": ks, "v": vs, "xk": xks, "xv": xvs,
+            "enc_len": jnp.full((B,), T_enc, jnp.int32),
+            "length": jnp.full((B,), S, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params: Params, token: jax.Array,
+                    cache: Dict[str, jax.Array],
+                    impl: Optional[str] = None
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        B = token.shape[0]
+        pos = cache["length"]
+        T = cache["k"].shape[2]
+        T_enc = cache["xk"].shape[2]
+        pe = L.sinusoidal_positions(T, cfg.d_model).astype(self.dtype)
+        x = params["embed"][token][:, None, :] + pe[pos][:, None, :]
+        slots = jnp.arange(T, dtype=jnp.int32)[None, :]
+        kv_pos = jnp.where((slots <= pos[:, None]), slots, -1)
+        enc_positions = jnp.where(
+            jnp.arange(T_enc, dtype=jnp.int32)[None, :] < cache["enc_len"][:, None],
+            jnp.arange(T_enc, dtype=jnp.int32)[None, :], -1)
+        batch_ix = jnp.arange(B)
+
+        def body(x, xs):
+            p, k_c, v_c, xk, xv = xs
+            h = L.layer_norm(x, p["ln1"]["w"], p["ln1"]["b"])
+            q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=self.head_dim,
+                                 positions=pos[:, None],
+                                 rope_theta=1.0, use_rope=False)
+            k_c = k_c.at[batch_ix, pos].set(k[:, 0])
+            v_c = v_c.at[batch_ix, pos].set(v[:, 0])
+            o = L.attention(q, k_c, v_c, q_positions=pos[:, None],
+                            kv_positions=kv_pos, causal=True,
+                            impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["attn"], o)
+            h = L.layer_norm(x, p["ln_x"]["w"], p["ln_x"]["b"])
+            qx = (h @ p["xattn"]["wq"]).reshape(B, 1, cfg.num_heads, self.head_dim)
+            ox = L.attention(qx, xk, xv, q_positions=pos[:, None],
+                             kv_positions=enc_positions, causal=False,
+                             impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["xattn"], ox)
+            h = L.layer_norm(x, p["ln2"]["w"], p["ln2"]["b"])
+            return x + L.ffn_apply_nogate(p["ffn"], h), (k_c, v_c)
+
+        x, (ks, vs) = lax.scan(
+            body, x,
+            (params["dec_blocks"], cache["k"], cache["v"],
+             cache["xk"], cache["xv"]))
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = ks, vs
+        new_cache["length"] = pos + 1
+        x = L.layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"])
+        return x[:, -1] @ params["embed"].T, new_cache

@@ -1,0 +1,409 @@
+"""Core neural-net layers shared by the model zoo (pure JAX, no flax).
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; init fns take an rng and shape info.
+* activations flow in ``cfg.dtype`` (bf16 by default); softmax / norms / the
+  recurrence accumulators run in f32.
+* attention has two implementations selected by ``cfg.attention_impl``:
+  ``"xla"`` (reference einsum path used by the dry-run) and ``"pallas"``
+  (TPU kernels from :mod:`repro.kernels`, validated in interpret mode).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                          # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention (XLA reference path; the Pallas kernels mirror this math)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def attention_xla(
+    q: jax.Array,                    # (B, Sq, H, Dh)
+    k: jax.Array,                    # (B, Skv, Hkv, Dh)
+    v: jax.Array,                    # (B, Skv, Hkv, Dh)
+    *,
+    q_positions: jax.Array,          # (B, Sq) int32
+    kv_positions: jax.Array,         # (B, Skv) int32; -1 marks invalid slots
+    causal: bool = True,
+    window: int = 0,                 # 0 => unbounded
+) -> jax.Array:
+    # sequence-parallel hints re-applied PER CALL so they survive the
+    # chunk scan's slicing (see _sp_attention_specs).  Only the QUERY-side
+    # tensors are constrained here: KV is constrained once at the
+    # dispatcher (hoisting the KV all-gather out of the chunk loop —
+    # §Perf iteration B2 measured each chunk re-gathering its KV slice).
+    sp = _sp_attention_specs(q, k) if q.shape[1] > 1 else None
+    if sp is not None:
+        q_spec, kv_spec = sp
+        q = _constrain(q, q_spec)
+        q_positions = _constrain(q_positions, q_spec[:2])
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(Dh)                                       # (B,Hkv,G,Sq,Skv)
+
+    qp = q_positions[:, None, None, :, None]                # (B,1,1,Sq,1)
+    kp = kv_positions[:, None, None, None, :]               # (B,1,1,1,Skv)
+    mask = kp >= 0
+    if causal:
+        mask = mask & (kp <= qp)
+    if window > 0:
+        mask = mask & (kp > qp - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    out = out.reshape(B, Sq, H, Dh)
+    if sp is not None:
+        out = _constrain(out, sp[0])
+    return out
+
+
+# Above ~4M logits elements per (q-block × kv) tile, materializing the
+# full (B,H,Sq,Skv) score tensor dominates HBM (train_4k: 17 GiB/device/
+# layer; prefill_32k: TBs).  The chunked path scans query blocks so only
+# one block's scores are ever live — the flash-attention recurrence
+# expressed in pure XLA (the Pallas kernel is its TPU-native twin).
+_CHUNK_TARGET_ELEMS = 4 * 1024 * 1024
+
+# ---------------------------------------------------------------------------
+# activation-sharding context (sequence-parallel attention)
+#
+# GQA head counts (8 kv heads) don't divide a 16-way model axis, and the
+# chunked scan blocks the partitioner's own head-sharding propagation —
+# the §Perf baseline shows attention running with FULL heads per device
+# (16× redundant flops + TB-scale all-gathers).  The fix: constrain the
+# QUERY TIME dim onto the model axis around attention (context/sequence
+# parallelism — seq_len always divides the axis, for every arch), letting
+# KV replicate across it (small for GQA).  Enabled by the launcher via
+# set_activation_sharding(); REPRO_SP_ATTENTION=0 disables (hillclimb
+# before/after).
+# ---------------------------------------------------------------------------
+import os as _os
+
+_ACT_CTX: dict = {"mesh": None}
+
+
+def set_activation_sharding(mesh, batch_axes=("data",), seq_axis="model"):
+    """Install (or clear, with mesh=None) the activation-sharding hints."""
+    if _os.environ.get("REPRO_SP_ATTENTION", "1") == "0":
+        mesh = None
+    _ACT_CTX["mesh"] = mesh
+    _ACT_CTX["batch"] = tuple(batch_axes)
+    _ACT_CTX["seq"] = seq_axis
+
+
+def _constrain(x, spec_entries):
+    mesh = _ACT_CTX.get("mesh")
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec_entries)))
+
+
+def constrain_hidden(x):
+    """Keep the residual stream (B,S,D) sequence-sharded between blocks
+    (Megatron-SP): without this, every seq-sharded attention output is
+    all-gathered back to a replicated hidden state — the §Perf baseline
+    shows that gather dominating the collective term (4.3 GB × L per
+    device for deepseek-67b prefill).  No-op when no mesh context or the
+    seq dim doesn't divide."""
+    mesh = _ACT_CTX.get("mesh")
+    if mesh is None or x.ndim != 3 or x.shape[1] <= 1:
+        return x
+    seq_n = mesh.shape[_ACT_CTX["seq"]]
+    if x.shape[1] % seq_n or x.shape[1] < seq_n:
+        return x
+    batch = _ACT_CTX["batch"]
+    bn = 1
+    for a in batch:
+        bn *= mesh.shape[a]
+    b_ent = batch if x.shape[0] % bn == 0 else None
+    return _constrain(x, (b_ent, _ACT_CTX["seq"], None))
+
+
+def _sp_attention_specs(q, k):
+    """(q_spec, kv_spec) for sequence-parallel attention, or None."""
+    mesh = _ACT_CTX.get("mesh")
+    if mesh is None:
+        return None
+    seq_n = mesh.shape[_ACT_CTX["seq"]]
+    batch = _ACT_CTX["batch"]
+    bn = 1
+    for a in batch:
+        bn *= mesh.shape[a]
+    b_ent = batch if q.shape[0] % bn == 0 else None
+    if q.shape[1] % seq_n or q.shape[1] < seq_n:
+        return None
+    q_spec = (b_ent, _ACT_CTX["seq"], None, None)
+    kv_spec = (b_ent, None, None, None)
+    return q_spec, kv_spec
+
+
+def _pick_q_block(sq: int, skv: int) -> int:
+    """Query-block size for chunked attention.
+
+    The budget is PER-DEVICE: under sequence-parallel sharding a global
+    block of bq rows puts only bq/seq_n on each chip, so the global block
+    can be seq_n× larger for the same VMEM/HBM footprint.  Larger blocks
+    divide the number of KV re-reads (nq = Sq/bq), which the §Perf
+    baseline showed dominating the memory roofline term (KV streamed
+    256× per layer at 32k with the naive global budget).
+    """
+    mesh = _ACT_CTX.get("mesh")
+    seq_n = mesh.shape[_ACT_CTX["seq"]] if mesh is not None else 1
+    bq = max(_CHUNK_TARGET_ELEMS * seq_n // max(skv, 1), 128)
+    while sq % bq:
+        bq //= 2
+        if bq < 2:
+            return sq
+    return min(bq, sq)
+
+
+def attention_xla_chunked(q, k, v, *, q_positions, kv_positions,
+                          causal=True, window=0, block_q: int = 0,
+                          static_causal: bool = False):
+    """Query-block-chunked attention; numerically identical math.
+
+    ``static_causal`` (self-attention where positions are the standard
+    arange — prefill/teacher-forced forward): unroll the chunk loop and
+    statically slice the KV to each block's visible range
+    [max(0, hi−window−bq), hi).  Skips the fully-masked upper triangle —
+    ~2× attention flops/bytes for causal, ~Skv/window× for SWA (§Perf
+    iteration 3).  The scan path handles arbitrary positions (ring
+    buffers, padding).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    bq = block_q or _pick_q_block(Sq, Skv)
+    if bq >= Sq:
+        return attention_xla(q, k, v, q_positions=q_positions,
+                             kv_positions=kv_positions, causal=causal,
+                             window=window)
+    nq = Sq // bq
+
+    if static_causal and causal and Sq == Skv and nq <= 64:
+        outs = []
+        for i in range(nq):
+            hi = (i + 1) * bq
+            lo = max(0, hi - window - bq) if window > 0 else 0
+            outs.append(attention_xla(
+                q[:, i * bq:hi], k[:, lo:hi], v[:, lo:hi],
+                q_positions=q_positions[:, i * bq:hi],
+                kv_positions=kv_positions[:, lo:hi],
+                causal=True, window=window))
+        return jnp.concatenate(outs, axis=1)
+
+    qr = q.reshape(B, nq, bq, H, Dh).swapaxes(0, 1)          # (nq,B,bq,H,Dh)
+    qp = q_positions.reshape(B, nq, bq).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        qb, qpb = xs
+        out = attention_xla(qb, k, v, q_positions=qpb,
+                            kv_positions=kv_positions, causal=causal,
+                            window=window)
+        return carry, out
+
+    _, outs = lax.scan(body, None, (qr, qp))
+    return outs.swapaxes(0, 1).reshape(B, Sq, H, Dh)
+
+
+def attention(q, k, v, *, q_positions, kv_positions, causal=True, window=0,
+              impl: str = "xla"):
+    """Dispatch between the XLA reference and the Pallas kernels."""
+    if impl == "xla":
+        sp = _sp_attention_specs(q, k) if q.shape[1] > 1 else None
+        if sp is not None:
+            # replicate KV across the seq-parallel axis ONCE, outside any
+            # chunk loop (hoisted all-gather)
+            k = _constrain(k, sp[1])
+            v = _constrain(v, sp[1])
+            kv_positions = _constrain(kv_positions, sp[1][:2])
+        if q.shape[1] > 1 and q.shape[1] * k.shape[1] > _CHUNK_TARGET_ELEMS:
+            # every Sq==Skv causal call in this codebase uses standard
+            # arange positions, so the static triangle/window slicing
+            # applies (ring-buffer/padded cases all have Sq != Skv)
+            return attention_xla_chunked(
+                q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+                causal=causal, window=window,
+                static_causal=(causal and window == 0
+                               and q.shape[1] == k.shape[1]
+                               and _os.environ.get(
+                                   "REPRO_STATIC_CAUSAL", "1") != "0"))
+        return attention_xla(q, k, v, q_positions=q_positions,
+                             kv_positions=kv_positions, causal=causal,
+                             window=window)
+    if impl in ("pallas", "pallas_interpret"):
+        interpret = impl == "pallas_interpret"
+        Sq = q.shape[1]
+        if Sq == 1:
+            from repro.kernels.decode_attention import ops as dec_ops
+            return dec_ops.decode_attention(
+                q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+                window=window, interpret=interpret)
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+            causal=causal, window=window, interpret=interpret)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, d_model, num_heads, num_kv_heads, head_dim, dtype,
+              qk_norm: bool = False):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((head_dim,), dtype)
+    return p
+
+
+def attn_qkv(p, x, *, num_heads, num_kv_heads, head_dim, positions,
+             rope_theta, qk_norm=False, use_rope=True, norm_eps=1e-6):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, num_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, num_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, num_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"], norm_eps)
+        k = rms_norm(k, p["k_norm"], norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def attn_out(p, o):
+    B, S, H, Dh = o.shape
+    return o.reshape(B, S, H * Dh) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# feed-forward (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def ffn_init(rng, d_model, d_ff, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def ffn_apply(p, x, activation: str = "silu"):
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def ffn_apply_nogate(p, x, activation: str = "gelu"):
+    act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+    return act(x @ p["w_up"]) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# cross-entropy with padded vocab
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """logits: (..., V_pad); labels int32 (...); mask optional (...)."""
+    vpad = logits.shape[-1]
+    logits32 = logits.astype(jnp.float32)
+    if vpad > vocab_size:
+        pad_mask = jnp.arange(vpad) < vocab_size
+        logits32 = jnp.where(pad_mask, logits32, NEG_INF)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        denom = jnp.maximum(mask.sum(), 1)
+        return (nll * mask).sum() / denom
+    return nll.mean()

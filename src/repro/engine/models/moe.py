@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN (GShard-style grouped dispatch, capacity-clamped).
+
+TPU-native design notes (DESIGN.md §4):
+* tokens are processed in ``num_groups`` groups so dispatch bookkeeping stays
+  local to a data shard (the group dim is sharded over the ``data`` axis);
+* dispatch uses cumsum-position + scatter-add into an ``(G, E, C, D)`` buffer
+  (dense one-hot dispatch tensors of shape (N, E, C) would be O(10^13) at the
+  assigned train_4k scale — infeasible);
+* the expert dim is sharded over the ``model`` axis when divisible
+  (deepseek-moe: 64/16), otherwise the per-expert FFN dim is sharded
+  (mixtral: 8 experts × d_ff/16).  See distribution/sharding.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.engine.models.layers import dense_init
+
+
+def moe_init(rng, d_model: int, cfg: MoEConfig, dtype):
+    ks = jax.random.split(rng, 5)
+    E, F = cfg.num_experts, cfg.d_ff_expert
+    scale = 1.0 / math.sqrt(d_model)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, E), jnp.float32) * scale
+                   ).astype(jnp.float32),                       # router in f32
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, F), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d_model, F), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, d_model), jnp.float32)
+                   * (1.0 / math.sqrt(F))).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        Fs = cfg.num_shared_experts * F
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(kss[0], d_model, Fs, dtype),
+            "w_up": dense_init(kss[1], d_model, Fs, dtype),
+            "w_down": dense_init(kss[2], Fs, d_model, dtype),
+        }
+    return p
+
+
+def _dispatch_indices(top_idx: jax.Array, num_experts: int, capacity: int):
+    """top_idx: (N, K) expert ids  ->  (slot positions within expert, keep mask).
+
+    Position of slot (n, k) inside its expert's capacity buffer = number of
+    earlier slots routed to the same expert (row-major (n, k) order).
+    """
+    N, K = top_idx.shape
+    flat = top_idx.reshape(-1)                                   # (N*K,)
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)  # (N*K, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                         # (N*K, E)
+    pos_in_e = jnp.sum(pos * onehot, axis=-1)                    # (N*K,)
+    keep = pos_in_e < capacity
+    return pos_in_e.reshape(N, K), keep.reshape(N, K)
+
+
+def _group_moe(x_g, p, cfg: MoEConfig, capacity: int):
+    """x_g: (N, D) tokens of one group -> (N, D) output + load stats."""
+    N, D = x_g.shape
+    E, K = cfg.num_experts, cfg.top_k
+
+    logits = (x_g.astype(jnp.float32) @ p["router"])             # (N, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)                       # (N, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    pos, keep = _dispatch_indices(top_i, E, capacity)            # (N, K)
+
+    # ---- scatter tokens into the (E, C, D) buffer ------------------------
+    e_idx = jnp.where(keep, top_i, E - 1).reshape(-1)
+    c_idx = jnp.where(keep, pos, capacity - 1).reshape(-1)
+    src = jnp.repeat(x_g, K, axis=0) * keep.reshape(-1, 1).astype(x_g.dtype)
+    buf = jnp.zeros((E, capacity, D), x_g.dtype)
+    buf = buf.at[e_idx, c_idx].add(src)
+
+    # ---- expert computation (SwiGLU) -------------------------------------
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])         # (E, C, D)
+
+    # ---- combine ----------------------------------------------------------
+    gathered = out_buf[e_idx, c_idx]                             # (N*K, D)
+    w = (top_w.reshape(-1, 1) * keep.reshape(-1, 1)).astype(out_buf.dtype)
+    out = (gathered * w).reshape(N, K, D).sum(axis=1)
+
+    # ---- load-balancing stats (Switch aux loss terms) ---------------------
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_probs = probs.mean(axis=0)
+    return out, frac_tokens, mean_probs
+
+
+def moe_ffn(x: jax.Array, p, cfg: MoEConfig, num_groups: int = 0
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    N = B * S
+    G = num_groups or min(B, 16)
+    while N % G:
+        G -= 1
+    Ng = N // G
+    capacity = max(int(math.ceil(Ng * cfg.top_k / cfg.num_experts
+                                 * cfg.capacity_factor)), cfg.top_k)
+
+    xg = x.reshape(G, Ng, D)
+    out, frac, meanp = jax.vmap(lambda t: _group_moe(t, p, cfg, capacity))(xg)
+    aux = cfg.num_experts * jnp.mean(jnp.mean(frac, 0) * jnp.mean(meanp, 0))
+
+    y = out.reshape(B, S, D)
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    return y, aux.astype(jnp.float32)

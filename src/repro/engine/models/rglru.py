@@ -1,0 +1,401 @@
+"""Griffin-style hybrid LM (recurrentgemma-2b): RG-LRU + local attention.
+
+Block pattern ``(rglru, rglru, attn)`` tiled over ``num_layers`` (26 = 8
+full groups + 2 leftover recurrent blocks).  Every temporal-mix block is
+followed by a GeGLU MLP; residuals around both.
+
+* RG-LRU: r,i = sigmoid gates; log a = -c·softplus(Λ)·r (c=8);
+  h_t = a_t·h_{t-1} + sqrt(1-a_t²)·(i_t·x_t) — an elementwise linear
+  recurrence.  Sequence mode runs ``jax.lax.associative_scan`` (XLA ref)
+  or the Pallas blocked-scan kernel; decode is the single-step form.
+* Local attention: MQA (kv=1), rope, sliding window; the KV cache is a
+  ring buffer of ``local_attn_window`` slots, which bounds memory for the
+  long_500k decode shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.engine.models import layers as L
+from repro.engine.models.xlstm import causal_conv1d, causal_conv1d_step
+
+Params = Dict[str, Any]
+RG_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def rglru_gates(p, u: jax.Array):
+    """u: (..., D_rnn) -> (a, b) of the recurrence h = a*h_prev + b."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u32 @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(u32 @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    log_a = -RG_C * jax.nn.softplus(p["lam"]) * r           # (..., D) f32
+    a = jnp.exp(log_a)
+    scale = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b = scale * (i * u32)
+    return a, b
+
+
+def rglru_sequence(p, u: jax.Array, impl: str = "xla") -> jax.Array:
+    """u: (B,S,D) -> h: (B,S,D) from zero initial state."""
+    a, b = rglru_gates(p, u)
+    if impl == "xla":
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        _, h = lax.associative_scan(combine, (a, b), axis=1)
+        return h.astype(u.dtype)
+    from repro.kernels.rglru_scan import ops as lru_ops
+    return lru_ops.linear_scan(
+        a, b, interpret=(impl == "pallas_interpret")).astype(u.dtype)
+
+
+def rglru_step(p, u_t: jax.Array, h_prev: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """u_t: (B,D); h_prev: (B,D) f32."""
+    a, b = rglru_gates(p, u_t)
+    h = a * h_prev + b
+    return h.astype(u_t.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+class GriffinLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.head_dim = cfg.resolved_head_dim
+        self.d_rnn = cfg.lru_width or cfg.d_model
+        self.pattern = cfg.block_pattern or ("rglru", "rglru", "attn")
+        self.glen = len(self.pattern)
+        self.n_groups = cfg.num_layers // self.glen
+        self.n_leftover = cfg.num_layers % self.glen
+
+    # ------------------------------------------------------------------ init
+    def _mlp_init(self, rng):
+        cfg = self.cfg
+        k1 = jax.random.fold_in(rng, 1)
+        return {"ln": jnp.zeros((cfg.d_model,), self.dtype),
+                **L.ffn_init(k1, cfg.d_model, cfg.d_ff, self.dtype)}
+
+    def _rblock_init(self, rng):
+        cfg = self.cfg
+        d, dr = cfg.d_model, self.d_rnn
+        ks = jax.random.split(rng, 7)
+        return {
+            "ln": jnp.zeros((d,), self.dtype),
+            "w_gate": L.dense_init(ks[0], d, dr, self.dtype),
+            "w_in": L.dense_init(ks[1], d, dr, self.dtype),
+            "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, dr),
+                                         jnp.float32) * 0.1).astype(self.dtype),
+            "rg": {
+                "w_a": (jax.random.normal(ks[3], (dr, dr), jnp.float32)
+                        / jnp.sqrt(dr)).astype(self.dtype),
+                "b_a": jnp.zeros((dr,), jnp.float32),
+                "w_x": (jax.random.normal(ks[4], (dr, dr), jnp.float32)
+                        / jnp.sqrt(dr)).astype(self.dtype),
+                "b_x": jnp.zeros((dr,), jnp.float32),
+                # init Λ so decay a ∈ (0.9, 0.999) at r=0.5, as in the paper
+                "lam": jnp.linspace(-2.0, 1.0, dr).astype(jnp.float32),
+            },
+            "w_out": L.dense_init(ks[5], dr, d, self.dtype),
+            "mlp": self._mlp_init(ks[6]),
+        }
+
+    def _ablock_init(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        return {
+            "ln": jnp.zeros((cfg.d_model,), self.dtype),
+            "attn": L.attn_init(k1, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, self.head_dim, self.dtype),
+            "mlp": self._mlp_init(k2),
+        }
+
+    def _group_init(self, rng):
+        ks = jax.random.split(rng, self.glen)
+        out = {}
+        for i, kind in enumerate(self.pattern):
+            out[f"b{i}"] = (self._rblock_init(ks[i]) if kind == "rglru"
+                            else self._ablock_init(ks[i]))
+        return out
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 4)
+        params: Params = {
+            "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model, self.dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+        if self.n_groups:
+            gks = jax.random.split(ks[1], self.n_groups)
+            params["groups"] = jax.vmap(self._group_init)(gks)
+        lks = jax.random.split(ks[2], max(self.n_leftover, 1))
+        params["leftover"] = [
+            (self._rblock_init(lks[i]) if self.pattern[i] == "rglru"
+             else self._ablock_init(lks[i]))
+            for i in range(self.n_leftover)]
+        return params
+
+    # ----------------------------------------------------------- block bodies
+    def _mlp_apply(self, p, x):
+        h = L.rms_norm(x, p["ln"], self.cfg.norm_eps)
+        return x + L.ffn_apply(p, h)
+
+    def _rblock_seq(self, p, x, impl):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        gate = jax.nn.gelu(h @ p["w_gate"])
+        u = causal_conv1d(h @ p["w_in"], p["conv_w"])
+        hr = rglru_sequence(p["rg"], u, impl=impl or "xla")
+        x = x + (gate * hr) @ p["w_out"]
+        return self._mlp_apply(p["mlp"], x)
+
+    def _ablock_seq(self, p, x, positions, impl):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
+                             num_kv_heads=cfg.num_kv_heads,
+                             head_dim=self.head_dim, positions=positions,
+                             rope_theta=cfg.rope_theta)
+        o = L.attention(q, k, v, q_positions=positions, kv_positions=positions,
+                        causal=True, window=cfg.local_attn_window,
+                        impl=impl or cfg.attention_impl)
+        x = x + L.attn_out(p["attn"], o)
+        return self._mlp_apply(p["mlp"], x)
+
+    def _group_seq(self, g, x, positions, impl):
+        for i, kind in enumerate(self.pattern):
+            if kind == "rglru":
+                x = self._rblock_seq(g[f"b{i}"], x, impl)
+            else:
+                x = self._ablock_seq(g[f"b{i}"], x, positions, impl)
+        return x
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params: Params, tokens: jax.Array,
+                remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(x, g):
+            return self._group_seq(g, x, positions, None), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        if self.n_groups:
+            x, _ = lax.scan(body, x, params["groups"])
+        for i, p in enumerate(params["leftover"]):
+            if self.pattern[i] == "rglru":
+                x = self._rblock_seq(p, x, None)
+            else:
+                x = self._ablock_seq(p, x, positions, None)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x @ params["embed"].T, jnp.float32(0.0)
+
+    def loss_fn(self, params: Params, batch: Dict[str, jax.Array],
+                remat: bool = False) -> jax.Array:
+        logits, _ = self.forward(params, batch["tokens"], remat=remat)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                               self.cfg.vocab_size,
+                               mask=batch.get("loss_mask"))
+
+    # ------------------------------------------------------------- KV / state
+    def cache_capacity(self, max_len: int) -> int:
+        return min(max_len, self.cfg.local_attn_window)
+
+    def _attn_indices(self):
+        return [i for i, k in enumerate(self.pattern) if k == "attn"]
+
+    def cache_batch_axes(self, cache):
+        return {k: (0 if (k == "length" or k.startswith("l")) else 1)
+                for k in cache}
+
+    def extend_cache(self, cache, extra: int):
+        keys = [k for k in cache if k.startswith("g") and
+                (k.endswith("_k") or k.endswith("_v"))]
+        if not keys:
+            return cache
+        T = cache[keys[0]].shape[2]
+        target = self.cache_capacity(T + extra)
+        if target <= T:
+            return cache
+        out = dict(cache)
+        for key in keys:
+            c = cache[key]
+            pad = [(0, 0)] * c.ndim
+            pad[2] = (0, target - T)
+            out[key] = jnp.pad(c, pad)
+        return out
+
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        T = self.cache_capacity(max_len)
+        n_attn = len(self._attn_indices())
+        G, B = self.n_groups, batch
+        cache: Dict[str, Any] = {"length": jnp.zeros((B,), jnp.int32)}
+        for i, kind in enumerate(self.pattern):
+            if kind == "rglru":
+                cache[f"g{i}_lru"] = jnp.zeros((G, B, self.d_rnn), jnp.float32)
+                cache[f"g{i}_conv"] = jnp.zeros(
+                    (G, B, cfg.conv1d_width - 1, self.d_rnn), self.dtype)
+            else:
+                cache[f"g{i}_k"] = jnp.zeros(
+                    (G, B, T, cfg.num_kv_heads, self.head_dim), self.dtype)
+                cache[f"g{i}_v"] = jnp.zeros(
+                    (G, B, T, cfg.num_kv_heads, self.head_dim), self.dtype)
+        for j in range(self.n_leftover):
+            cache[f"l{j}_lru"] = jnp.zeros((B, self.d_rnn), jnp.float32)
+            cache[f"l{j}_conv"] = jnp.zeros(
+                (B, cfg.conv1d_width - 1, self.d_rnn), self.dtype)
+        return cache
+
+    def _kv_slot_positions(self, pos: jax.Array, T: int) -> jax.Array:
+        slots = jnp.arange(T, dtype=jnp.int32)[None, :]
+        p = pos[:, None]
+        q = p - ((p - slots) % T)
+        return jnp.where((q >= 0) & (q <= p), q, -1)
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params: Params, tokens: jax.Array,
+                impl: Optional[str] = None) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Full prompt pass; returns last logits + recurrent/KV state."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        B, S, _ = x.shape
+        T = self.cache_capacity(S)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def rblock_with_state(p, x, impl):
+            h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+            gate = jax.nn.gelu(h @ p["w_gate"])
+            u_in = h @ p["w_in"]
+            u = causal_conv1d(u_in, p["conv_w"])
+            a, b = rglru_gates(p["rg"], u)
+
+            def combine(e1, e2):
+                a1, b1 = e1
+                a2, b2 = e2
+                return a1 * a2, a2 * b1 + b2
+            _, hr = lax.associative_scan(combine, (a, b), axis=1)
+            x = x + (gate * hr.astype(x.dtype)) @ p["w_out"]
+            st = (hr[:, -1],                                   # (B,D) f32
+                  u_in[:, -(cfg.conv1d_width - 1):])           # conv buffer
+            return self._mlp_apply(p["mlp"], x), st
+
+        def ablock_with_state(p, x, impl):
+            h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=self.head_dim, positions=positions,
+                                 rope_theta=cfg.rope_theta)
+            o = L.attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=True,
+                            window=cfg.local_attn_window,
+                            impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["attn"], o)
+            return self._mlp_apply(p["mlp"], x), (k[:, S - T:], v[:, S - T:])
+
+        def body(x, g):
+            sts = {}
+            for i, kind in enumerate(self.pattern):
+                if kind == "rglru":
+                    x, st = rblock_with_state(g[f"b{i}"], x, impl)
+                    sts[f"g{i}_lru"], sts[f"g{i}_conv"] = st
+                else:
+                    x, st = ablock_with_state(g[f"b{i}"], x, impl)
+                    sts[f"g{i}_k"], sts[f"g{i}_v"] = st
+            return x, sts
+
+        cache: Dict[str, Any] = {}
+        if self.n_groups:
+            x, sts = lax.scan(body, x, params["groups"])
+            cache.update(sts)
+        for j, p in enumerate(params["leftover"]):
+            x, st = rblock_with_state(p, x, impl)
+            cache[f"l{j}_lru"], cache[f"l{j}_conv"] = st
+        cache["length"] = jnp.full((B,), S, jnp.int32)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x[:, -1] @ params["embed"].T, cache
+
+    # ------------------------------------------------------------ decode step
+    def decode_step(self, params: Params, token: jax.Array,
+                    cache: Dict[str, Any],
+                    impl: Optional[str] = None
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        B = token.shape[0]
+        pos = cache["length"]
+        x = params["embed"][token]                             # (B,D)
+        batch_ix = jnp.arange(B)
+
+        def rblock_step(p, x, lru, conv_buf):
+            h = L.rms_norm(x[:, None], p["ln"], cfg.norm_eps)[:, 0]
+            gate = jax.nn.gelu(h @ p["w_gate"])
+            u_t, conv_buf = causal_conv1d_step(h @ p["w_in"], conv_buf,
+                                               p["conv_w"])
+            hr, lru = rglru_step(p["rg"], u_t, lru)
+            x = x + (gate * hr) @ p["w_out"]
+            h = L.rms_norm(x[:, None], p["mlp"]["ln"], cfg.norm_eps)[:, 0]
+            return x + L.ffn_apply(p["mlp"], h), lru, conv_buf
+
+        def ablock_step(p, x, k_c, v_c):
+            T = k_c.shape[1]
+            slot = (pos % T).astype(jnp.int32)
+            kv_pos = self._kv_slot_positions(pos, T)
+            h = L.rms_norm(x[:, None], p["ln"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=self.head_dim,
+                                 positions=pos[:, None],
+                                 rope_theta=cfg.rope_theta)
+            k_c = k_c.at[batch_ix, slot].set(k[:, 0])
+            v_c = v_c.at[batch_ix, slot].set(v[:, 0])
+            o = L.attention(q, k_c, v_c, q_positions=pos[:, None],
+                            kv_positions=kv_pos, causal=True,
+                            window=cfg.local_attn_window,
+                            impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["attn"], o)[:, 0]
+            h = L.rms_norm(x[:, None], p["mlp"]["ln"], cfg.norm_eps)[:, 0]
+            return x + L.ffn_apply(p["mlp"], h), k_c, v_c
+
+        new_cache = dict(cache)
+
+        def body(x, xs):
+            g, st = xs
+            new_st = dict(st)
+            for i, kind in enumerate(self.pattern):
+                if kind == "rglru":
+                    x, lru, cb = rblock_step(g[f"b{i}"], x, st[f"g{i}_lru"],
+                                             st[f"g{i}_conv"])
+                    new_st[f"g{i}_lru"], new_st[f"g{i}_conv"] = lru, cb
+                else:
+                    x, k_c, v_c = ablock_step(g[f"b{i}"], x, st[f"g{i}_k"],
+                                              st[f"g{i}_v"])
+                    new_st[f"g{i}_k"], new_st[f"g{i}_v"] = k_c, v_c
+            return x, new_st
+
+        if self.n_groups:
+            gstate = {k: v for k, v in cache.items() if k.startswith("g")}
+            x, new_gstate = lax.scan(body, x, (params["groups"], gstate))
+            new_cache.update(new_gstate)
+        for j, p in enumerate(params["leftover"]):
+            x, lru, cb = rblock_step(p, x, cache[f"l{j}_lru"],
+                                     cache[f"l{j}_conv"])
+            new_cache[f"l{j}_lru"], new_cache[f"l{j}_conv"] = lru, cb
+        new_cache["length"] = pos + 1
+        x = L.rms_norm(x[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
+        return x @ params["embed"].T, new_cache

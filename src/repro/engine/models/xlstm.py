@@ -1,0 +1,354 @@
+"""xLSTM LM — alternating mLSTM / sLSTM blocks (arXiv:2405.04517).
+
+Pure recurrent: decode keeps O(1) state per layer (this is why the
+long_500k shape runs for this arch).  Training runs the recurrences with
+``lax.scan`` over time (stabilized exponential gating in f32); decode uses
+the same step function on carried state.
+
+Block structure (paper Fig. 9/10, simplified where noted):
+* mLSTM block: LN -> up-proj (2x, split u/z) -> causal conv(4) on u ->
+  q,k from conv(u), v from u -> multi-head mLSTM -> group-norm -> *silu(z)
+  -> down-proj -> residual.
+* sLSTM block: LN -> headwise sLSTM with block-diagonal recurrent weights
+  -> group-norm -> GeGLU up/down (factor 4/3) -> residual.  (No conv in the
+  sLSTM block — matches the no-conv variants in the paper's ablations.)
+
+State per layer pair: mLSTM (C: B,H,Dh,Dh; n: B,H,Dh; m: B,H; conv buffer)
+and sLSTM (c,n,h,m: B,D).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.engine.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (shared with rglru.py)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B,S,D); w: (W,D) depthwise taps. Output (B,S,D)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for t in range(W):                         # W is tiny (4): unrolled
+        out = out + pad[:, t:t + x.shape[1]] * w[t][None, None, :]
+    return out
+
+
+def causal_conv1d_step(x_t: jax.Array, buf: jax.Array, w: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """x_t: (B,D); buf: (B,W-1,D) previous inputs. Returns (y_t, new_buf)."""
+    W = w.shape[0]
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)   # (B,W,D)
+    y = jnp.einsum("bwd,wd->bd", window, w)
+    return y, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell (stabilized, recurrent form)
+# ---------------------------------------------------------------------------
+
+def mlstm_step(state, q, k, v, i_pre, f_pre):
+    """One mLSTM step for all heads.
+
+    state: (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H))
+    q,k,v: (B,H,Dh); i_pre,f_pre: (B,H) pre-activations.
+    """
+    C, n, m = state
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))       # (B,H)
+    i_t = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m, i_t)
+    f_sc = jnp.exp(log_f + m - m_new)[..., None]                # (B,H,1)
+    i_sc = jnp.exp(i_t - m_new)[..., None]
+    k32, v32, q32 = (a.astype(jnp.float32) for a in (k, v, q))
+    C = f_sc[..., None] * C + i_sc[..., None] * (v32[..., :, None] * k32[..., None, :])
+    n = f_sc * n + i_sc * k32
+    num = jnp.einsum("bhij,bhj->bhi", C, q32)                   # (B,H,Dh)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q32)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return (C, n, m_new), h
+
+
+def mlstm_sequence(q, k, v, i_pre, f_pre, state):
+    """q,k,v: (B,S,H,Dh); gates (B,S,H). Scan over time."""
+    def body(st, xs):
+        qt, kt, vt, it, ft = xs
+        st, h = mlstm_step(st, qt, kt, vt, it, ft)
+        return st, h
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+    state, hs = lax.scan(body, state, xs)                       # hs: (S,B,H,Dh)
+    return state, hs.swapaxes(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (stabilized, headwise recurrent weights)
+# ---------------------------------------------------------------------------
+
+def slstm_step(state, x_gates, r_w):
+    """state: (c,n,h,m) each (B,D); x_gates: (B,4D) [z,i,f,o] pre-acts from x;
+    r_w: (4, H, Dh, Dh) block-diagonal recurrent weights."""
+    c, n, h, m = state
+    B, D = c.shape
+    H, Dh = r_w.shape[1], r_w.shape[2]
+    hh = h.reshape(B, H, Dh).astype(jnp.float32)
+    rec = jnp.einsum("bhi,ghij->gbhj", hh, r_w.astype(jnp.float32))
+    rec = rec.reshape(4, B, D)
+    zx, ix, fx, ox = jnp.split(x_gates.astype(jnp.float32), 4, axis=-1)
+    z_t = jnp.tanh(zx + rec[0])
+    i_t = ix + rec[1]
+    f_t = fx + rec[2]
+    o_t = jax.nn.sigmoid(ox + rec[3])
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    f_sc = jnp.exp(log_f + m - m_new)
+    i_sc = jnp.exp(i_t - m_new)
+    c_new = f_sc * c + i_sc * z_t
+    n_new = f_sc * n + i_sc
+    h_new = o_t * (c_new / jnp.maximum(n_new, 1e-6))
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_sequence(x_gates, r_w, state):
+    """x_gates: (B,S,4D). Scan over time."""
+    def body(st, xg):
+        st, h = slstm_step(st, xg, r_w)
+        return st, h
+    state, hs = lax.scan(body, state, x_gates.swapaxes(0, 1))
+    return state, hs.swapaxes(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.H = cfg.num_heads
+        self.Dh = cfg.resolved_head_dim
+        self.d_inner = self.H * self.Dh                    # mLSTM inner width
+        pattern = cfg.block_pattern or ("mlstm", "slstm")
+        assert pattern == ("mlstm", "slstm"), "xLSTM uses (mlstm, slstm) pairs"
+        assert cfg.num_layers % 2 == 0
+        self.n_pairs = cfg.num_layers // 2
+
+    # ------------------------------------------------------------------ init
+    def _pair_init(self, rng):
+        cfg = self.cfg
+        d, di = cfg.d_model, self.d_inner
+        ks = jax.random.split(rng, 10)
+        mlstm = {
+            "ln": jnp.zeros((d,), self.dtype),
+            "w_up": L.dense_init(ks[0], d, 2 * di, self.dtype),
+            "conv_w": (jax.random.normal(ks[1], (cfg.conv1d_width, di),
+                                         jnp.float32) * 0.1).astype(self.dtype),
+            "wq": L.dense_init(ks[2], di, di, self.dtype),
+            "wk": L.dense_init(ks[3], di, di, self.dtype),
+            "wv": L.dense_init(ks[4], di, di, self.dtype),
+            "w_if": L.dense_init(ks[5], di, 2 * self.H, self.dtype),
+            "gn": jnp.zeros((di,), self.dtype),
+            "w_down": L.dense_init(ks[6], di, d, self.dtype),
+        }
+        dff = max((4 * d) // 3, 8)
+        slstm = {
+            "ln": jnp.zeros((d,), self.dtype),
+            "w_gates": L.dense_init(ks[7], d, 4 * d, self.dtype),
+            "r_w": (jax.random.normal(
+                ks[8], (4, self.H, d // self.H, d // self.H), jnp.float32)
+                * (1.0 / jnp.sqrt(d / self.H))).astype(self.dtype),
+            "gn": jnp.zeros((d,), self.dtype),
+            "w_up": L.dense_init(ks[9], d, 2 * dff, self.dtype),
+            "w_down": L.dense_init(jax.random.fold_in(rng, 7), dff, d, self.dtype),
+        }
+        return {"mlstm": mlstm, "slstm": slstm}
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 3)
+        pair_ks = jax.random.split(ks[1], self.n_pairs)
+        return {
+            "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model, self.dtype),
+            "pairs": jax.vmap(self._pair_init)(pair_ks),
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+
+    # ------------------------------------------------------------- state init
+    def _pair_state(self, batch: int):
+        cfg = self.cfg
+        f32 = jnp.float32
+        return {
+            "m_C": jnp.zeros((batch, self.H, self.Dh, self.Dh), f32),
+            "m_n": jnp.zeros((batch, self.H, self.Dh), f32),
+            "m_m": jnp.zeros((batch, self.H), f32),
+            "m_conv": jnp.zeros((batch, cfg.conv1d_width - 1, self.d_inner),
+                                self.dtype),
+            "s_c": jnp.zeros((batch, cfg.d_model), f32),
+            "s_n": jnp.zeros((batch, cfg.d_model), f32),
+            "s_h": jnp.zeros((batch, cfg.d_model), f32),
+            "s_m": jnp.zeros((batch, cfg.d_model), f32),
+        }
+
+    def cache_batch_axes(self, cache):
+        return {k: (0 if k == "length" else 1) for k in cache}
+
+    def extend_cache(self, cache, extra: int):
+        return cache                    # O(1) recurrent state — nothing to grow
+
+    def init_cache(self, batch: int, max_len: int = 0) -> Dict[str, Any]:
+        state = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_pairs,) + x.shape),
+            self._pair_state(batch))
+        state["length"] = jnp.zeros((batch,), jnp.int32)
+        return state
+
+    # ----------------------------------------------------------- block bodies
+    def _mlstm_block_seq(self, p, x, st):
+        cfg = self.cfg
+        B, S, _ = x.shape
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        up = h @ p["w_up"]
+        u, z = jnp.split(up, 2, axis=-1)                     # (B,S,di)
+        cu = causal_conv1d(u, p["conv_w"])
+        cu = jax.nn.silu(cu)
+        q = (cu @ p["wq"]).reshape(B, S, self.H, self.Dh) / jnp.sqrt(
+            jnp.float32(self.Dh)).astype(self.dtype)
+        k = (cu @ p["wk"]).reshape(B, S, self.H, self.Dh)
+        v = (u @ p["wv"]).reshape(B, S, self.H, self.Dh)
+        gates = cu @ p["w_if"]                               # (B,S,2H)
+        i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+        mstate = (st["m_C"], st["m_n"], st["m_m"])
+        mstate, hs = mlstm_sequence(q, k, v, i_pre, f_pre, mstate)
+        hs = hs.reshape(B, S, self.d_inner).astype(self.dtype)
+        hs = L.rms_norm(hs, p["gn"], cfg.norm_eps)           # group-norm proxy
+        out = (hs * jax.nn.silu(z)) @ p["w_down"]
+        new_st = dict(st)
+        new_st["m_C"], new_st["m_n"], new_st["m_m"] = mstate
+        new_st["m_conv"] = jnp.concatenate(
+            [st["m_conv"], u], axis=1)[:, -(cfg.conv1d_width - 1):]
+        return x + out, new_st
+
+    def _slstm_block_seq(self, p, x, st):
+        cfg = self.cfg
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        x_gates = h @ p["w_gates"]
+        sstate = (st["s_c"], st["s_n"], st["s_h"], st["s_m"])
+        (c, n, hh, m), hs = slstm_sequence(x_gates, p["r_w"], sstate)
+        hs = L.rms_norm(hs.astype(self.dtype), p["gn"], cfg.norm_eps)
+        g, up = jnp.split(hs @ p["w_up"], 2, axis=-1)
+        out = (jax.nn.gelu(g) * up) @ p["w_down"]
+        new_st = dict(st)
+        new_st["s_c"], new_st["s_n"], new_st["s_h"], new_st["s_m"] = c, n, hh, m
+        return x + out, new_st
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params: Params, tokens: jax.Array,
+                remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        B = x.shape[0]
+        init_state = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n_pairs,) + a.shape),
+            self._pair_state(B))
+
+        def body(x, xs):
+            p, st = xs
+            x, st = self._mlstm_block_seq(p["mlstm"], x, st)
+            x, st = self._slstm_block_seq(p["slstm"], x, st)
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = lax.scan(body, x, (params["pairs"], init_state))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["embed"].T
+        return logits, jnp.float32(0.0)
+
+    def loss_fn(self, params: Params, batch: Dict[str, jax.Array],
+                remat: bool = False) -> jax.Array:
+        logits, _ = self.forward(params, batch["tokens"], remat=remat)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                               self.cfg.vocab_size,
+                               mask=batch.get("loss_mask"))
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params: Params, tokens: jax.Array,
+                impl: Optional[str] = None) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        B, S, _ = x.shape
+        init_state = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n_pairs,) + a.shape),
+            self._pair_state(B))
+
+        def body(x, xs):
+            p, st = xs
+            x, st = self._mlstm_block_seq(p["mlstm"], x, st)
+            x, st = self._slstm_block_seq(p["slstm"], x, st)
+            return x, st
+
+        x, states = lax.scan(body, x, (params["pairs"], init_state))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1] @ params["embed"].T
+        states["length"] = jnp.full((B,), S, jnp.int32)
+        return logits, states
+
+    # ------------------------------------------------------------ decode step
+    def decode_step(self, params: Params, token: jax.Array,
+                    cache: Dict[str, Any],
+                    impl: Optional[str] = None
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        B = token.shape[0]
+        x = params["embed"][token]                            # (B,D)
+
+        def pair_step(x, xs):
+            p, st = xs
+            new_st = dict(st)
+            # ---- mLSTM block, single step
+            mp = p["mlstm"]
+            h = L.rms_norm(x[:, None], mp["ln"], cfg.norm_eps)[:, 0]
+            u, z = jnp.split(h @ mp["w_up"], 2, axis=-1)
+            cu, conv_buf = causal_conv1d_step(u, st["m_conv"], mp["conv_w"])
+            cu = jax.nn.silu(cu)
+            q = (cu @ mp["wq"]).reshape(B, self.H, self.Dh) / jnp.sqrt(
+                jnp.float32(self.Dh)).astype(self.dtype)
+            k = (cu @ mp["wk"]).reshape(B, self.H, self.Dh)
+            v = (u @ mp["wv"]).reshape(B, self.H, self.Dh)
+            i_pre, f_pre = jnp.split(cu @ mp["w_if"], 2, axis=-1)
+            mstate = (st["m_C"], st["m_n"], st["m_m"])
+            mstate, hm = mlstm_step(mstate, q, k, v, i_pre, f_pre)
+            hm = hm.reshape(B, self.d_inner).astype(self.dtype)
+            hm = L.rms_norm(hm[:, None], mp["gn"], cfg.norm_eps)[:, 0]
+            x = x + (hm * jax.nn.silu(z)) @ mp["w_down"]
+            new_st["m_C"], new_st["m_n"], new_st["m_m"] = mstate
+            new_st["m_conv"] = conv_buf
+            # ---- sLSTM block, single step
+            sp = p["slstm"]
+            h = L.rms_norm(x[:, None], sp["ln"], cfg.norm_eps)[:, 0]
+            sstate = (st["s_c"], st["s_n"], st["s_h"], st["s_m"])
+            (c, n, hh, m), hs = slstm_step(sstate, h @ sp["w_gates"], sp["r_w"])
+            hs = L.rms_norm(hs.astype(self.dtype)[:, None], sp["gn"],
+                            cfg.norm_eps)[:, 0]
+            g, up = jnp.split(hs @ sp["w_up"], 2, axis=-1)
+            x = x + (jax.nn.gelu(g) * up) @ sp["w_down"]
+            new_st["s_c"], new_st["s_n"], new_st["s_h"], new_st["s_m"] = c, n, hh, m
+            return x, new_st
+
+        length = cache.pop("length")
+        x, new_states = lax.scan(pair_step, x, (params["pairs"], cache))
+        cache["length"] = length                              # restore caller's
+        new_states["length"] = length + 1
+        x = L.rms_norm(x[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
+        return x @ params["embed"].T, new_states

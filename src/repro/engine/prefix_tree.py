@@ -1,0 +1,93 @@
+"""Radix tree over token ids — shared-prefix detection for KV reuse.
+
+Used by (i) the engine to find how much of a new prompt's KV is already
+resident (prefix-caching discount), and (ii) Halo's consolidator to pick
+the template prefix shared by a batch of workflow-bound prompts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class _Node:
+    children: Dict[int, "_Node"] = field(default_factory=dict)
+    # number of inserted sequences passing through this node
+    count: int = 0
+    # opaque payload attached at the deepest node of an inserted sequence
+    # (the engine stores (worker_id, kv_page_ids) here)
+    payload: Optional[object] = None
+
+
+class RadixPrefixTree:
+    """Token-level radix tree (one token per edge — simple and exact)."""
+
+    def __init__(self):
+        self.root = _Node()
+        self.num_sequences = 0
+
+    # ------------------------------------------------------------------
+    def insert(self, tokens: Sequence[int], payload: object = None) -> None:
+        node = self.root
+        node.count += 1
+        for t in tokens:
+            node = node.children.setdefault(int(t), _Node())
+            node.count += 1
+        node.payload = payload
+        self.num_sequences += 1
+
+    def match(self, tokens: Sequence[int]) -> Tuple[int, Optional[object]]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns (match_len, payload of the deepest payload-bearing node on
+        the matched path).
+        """
+        node = self.root
+        best_payload = node.payload
+        n = 0
+        for t in tokens:
+            child = node.children.get(int(t))
+            if child is None:
+                break
+            node = child
+            n += 1
+            if node.payload is not None:
+                best_payload = node.payload
+        return n, best_payload
+
+    # ------------------------------------------------------------------
+    def longest_common_prefix(self) -> List[int]:
+        """LCP over ALL inserted sequences (the batch's template prefix)."""
+        out: List[int] = []
+        node = self.root
+        total = node.count
+        while len(node.children) == 1:
+            (tok, child), = node.children.items()
+            if child.count != total:
+                break
+            out.append(tok)
+            node = child
+        return out
+
+
+def common_prefix_length(a: Sequence[int], b: Sequence[int]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+def batch_shared_prefix(prompts: Sequence[Sequence[int]]) -> List[int]:
+    """Longest prefix shared by every prompt in the batch."""
+    if not prompts:
+        return []
+    out = list(prompts[0])
+    for p in prompts[1:]:
+        n = common_prefix_length(out, p)
+        del out[n:]
+        if not out:
+            break
+    return out

@@ -1,0 +1,24 @@
+"""Token sampling — greedy / temperature / top-k, pure jax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, rng: jax.Array, *, temperature: float = 0.0,
+           top_k: int = 0, vocab_size: int = 0) -> jax.Array:
+    """logits: (B, Vpad) -> token ids (B,) int32.
+
+    temperature == 0 -> greedy.  ``vocab_size`` masks padded vocab tail.
+    """
+    logits = logits.astype(jnp.float32)
+    if vocab_size and vocab_size < logits.shape[-1]:
+        mask = jnp.arange(logits.shape[-1]) < vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the compute hot-spots of the serving path.
+
+Layout per kernel: ``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling),
+``ops.py`` (jit'd public wrapper), ``ref.py`` (pure-jnp oracle used by the
+allclose sweeps in tests/).
+
+Kernels are TPU-TARGETED and validated with ``interpret=True`` on CPU
+(this container has no TPU).  The XLA reference path (same math) is what
+the dry-run compiles; the kernel/XLA switch is ``cfg.attention_impl``.
+
+* flash_attention      — causal/SWA prefill attention, online softmax
+* decode_attention     — GQA flash-decode over a (ring-buffer) KV cache,
+                         KV-chunk grid + log-sum-exp combine
+* shared_prefix_attention — Hydragen-style: one pass over the SHARED prefix
+                         KV for the whole batch (B·G-row matmuls feed the
+                         MXU) + per-request suffix pass, LSE-combined.
+                         This is the kernel-level realization of Halo's
+                         KV-cache sharing.
+* rglru_scan           — RG-LRU blocked linear-recurrence scan (Griffin)
+"""

@@ -1,0 +1,118 @@
+"""GQA flash-decode — Pallas TPU kernel.
+
+Decode attention is HBM-bandwidth-bound: each step streams the whole KV
+cache once.  The kernel tiles KV into VMEM chunks — grid (B, Hkv, n_t),
+the KV-chunk dim innermost — and keeps the online-softmax state for all
+G = H/Hkv query heads of one KV head in VMEM scratch, so each KV byte is
+read exactly once per step (roofline-optimal for the memory term).
+
+The optional (m, l) outputs expose the log-sum-exp state for combining
+partial results across KV shards (shard_map flash-decoding, see
+distribution/collectives.py) or across the shared-prefix/suffix split
+(shared_prefix_attention).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_out_ref, l_out_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, window: int, n_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)            # (G, Dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bt, Dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    qp = qp_ref[0]                                       # scalar int32
+    kp = kp_ref[0, :]                                    # (bt,)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (G, bt)
+
+    mask = (kp >= 0) & (kp <= qp)
+    if window > 0:
+        mask = mask & (kp > qp - window)
+    logits = jnp.where(mask[None, :], logits, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(mask[None, :], p, 0.0)
+    l_ref[:, 0] = alpha * l_ref[:, 0] + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(it == n_t - 1)
+    def _done():
+        l = l_ref[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        m_out_ref[0, 0, :, 0] = m_ref[:, 0]
+        l_out_ref[0, 0, :, 0] = l
+
+def decode_attention_kernel(q, k, v, q_positions, kv_positions, *,
+                            window: int, block_t: int,
+                            interpret: bool = False):
+    """q: (B,H,Dh); k,v: (B,T,Hkv,Dh); T % block_t == 0.
+
+    Returns (out (B,H,Dh), m (B,H), l (B,H)).
+    """
+    B, H, Dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bt = min(block_t, T)
+    assert T % bt == 0
+    n_t = T // bt
+    grid = (B, Hkv, n_t)
+    qg = q.reshape(B, Hkv, G, Dh)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / math.sqrt(Dh), window=window, n_t=n_t)
+
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, it: (b,)),
+            pl.BlockSpec((1, bt), lambda b, h, it: (b, it)),
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, it: (b, h, 0, 0)),
+            pl.BlockSpec((1, bt, 1, Dh), lambda b, h, it: (b, it, h, 0)),
+            pl.BlockSpec((1, bt, 1, Dh), lambda b, h, it: (b, it, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, it: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, it: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions.reshape(B), kv_positions, qg, k, v)
+    return (out.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))

@@ -1,0 +1,37 @@
+"""Public jit'd wrapper for GQA flash-decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+def _pick_block(s: int, target: int) -> int:
+    if s % target == 0:
+        return target
+    b = min(s, target)
+    while s % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "block_t", "return_lse", "interpret"))
+def decode_attention(q, k, v, *, q_positions, kv_positions, window=0,
+                     block_t=1024, return_lse=False, interpret=False):
+    """q: (B,1,H,Dh) or (B,H,Dh). Returns same rank as q (plus lse)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        assert q.shape[1] == 1
+        q = q[:, 0]
+    bt = _pick_block(k.shape[1], block_t)
+    out, m, l = decode_attention_kernel(
+        q, k, v, q_positions, kv_positions, window=window, block_t=bt,
+        interpret=interpret)
+    if squeeze:
+        out = out[:, None]
+    if return_lse:
+        return out, m, l
+    return out

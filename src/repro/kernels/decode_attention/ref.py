@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for GQA flash-decode (single query position)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, *, q_positions, kv_positions, window=0,
+                         return_lse=False):
+    """q: (B,H,Dh) one new token; k,v: (B,T,Hkv,Dh); kv_positions (B,T).
+
+    Returns out (B,H,Dh); with return_lse also (m, l) each (B,H) — the
+    running max and sum used for cross-chunk / cross-pass LSE combines.
+    """
+    B, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Dh)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(Dh)
+    qp = q_positions.reshape(B)[:, None, None, None]
+    kp = kv_positions[:, None, None, :]
+    mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask = mask & (kp > qp - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = logits.max(axis=-1)                                  # (B,Hkv,G)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, k * 0 + v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.where(l == 0.0, 1.0, l)[..., None]
+    out = out.reshape(B, H, Dh).astype(q.dtype)
+    if return_lse:
+        return out, m.reshape(B, H), l.reshape(B, H)
+    return out
+
+
+def lse_combine(parts):
+    """Combine [(out_i (B,H,Dh) f32-safe, m_i (B,H), l_i (B,H))] partials."""
+    m = jnp.stack([p[1] for p in parts]).max(axis=0)         # (B,H)
+    num = 0.0
+    den = 0.0
+    for out_i, m_i, l_i in parts:
+        w = jnp.exp(m_i - m) * l_i                           # (B,H)
+        num = num + out_i.astype(jnp.float32) * w[..., None]
+        den = den + w
+    den = jnp.where(den == 0.0, 1.0, den)
+    return (num / den[..., None]).astype(parts[0][0].dtype)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash prefill attention (GQA, causal, window)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, q_positions, kv_positions,
+                        causal=True, window=0):
+    """q: (B,Sq,H,Dh); k,v: (B,Skv,Hkv,Dh); positions int32, -1 invalid."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(Dh)
+    qp = q_positions[:, None, None, :, None]
+    kp = kv_positions[:, None, None, None, :]
+    mask = kp >= 0
+    if causal:
+        mask = mask & (kp <= qp)
+    if window:
+        mask = mask & (kp > qp - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, Dh)

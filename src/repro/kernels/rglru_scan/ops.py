@@ -1,0 +1,27 @@
+"""Public jit'd wrapper for the RG-LRU blocked scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import linear_scan_kernel
+
+
+def _pick_block(s: int, target: int) -> int:
+    if s % target == 0:
+        return target
+    b = min(s, target)
+    while s % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_b", "block_s", "block_d", "interpret"))
+def linear_scan(a, b, *, block_b=8, block_s=16, block_d=512, interpret=False):
+    bb = _pick_block(a.shape[0], block_b)
+    bs = _pick_block(a.shape[1], block_s)
+    bd = _pick_block(a.shape[2], block_d)
+    return linear_scan_kernel(a, b, block_b=bb, block_s=bs, block_d=bd,
+                              interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence h_t = a_t h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def linear_scan_ref(a, b, h0=None):
+    """a, b: (B,S,D) f32. Sequential scan oracle (from h0 or zeros)."""
+    B, S, D = a.shape
+    h = jnp.zeros((B, D), a.dtype) if h0 is None else h0
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    _, hs = lax.scan(step, h, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

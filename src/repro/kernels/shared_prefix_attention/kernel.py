@@ -1,0 +1,122 @@
+"""Shared-prefix (Hydragen-style) attention — Pallas TPU kernel.
+
+Halo batches requests that share a workflow-template prompt; their KV
+caches share a prefix.  Naive decode re-reads that prefix KV once PER
+REQUEST (B× the HBM traffic) and multiplies it against G-row query tiles
+(starving the 128×128 MXU).  This kernel restructures the computation:
+
+  grid (Hkv, n_p) over the ONE shared prefix copy; each step loads a
+  (bp, Dh) KV tile once and multiplies it against the queries of ALL B
+  requests × G group heads at once — a (B·G, Dh) × (Dh, bp) matmul.
+
+HBM traffic for the prefix drops B×; matmul rows grow from G to B·G
+(e.g. 8 → 1024 at decode_32k), which is what keeps the MXU fed.  The
+per-request suffix is handled by the ordinary decode kernel and the two
+partial results are merged with the log-sum-exp combine — exactly the
+flash-decoding merge, reused across the prefix/suffix split.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefix_kernel(kp_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_out_ref, l_out_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, n_p: int):
+    ip = pl.program_id(1)
+
+    @pl.when(ip == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    BG = q_ref.shape[0]
+    q = q_ref[:, 0, :].astype(jnp.float32)              # (B*G, Dh)
+    k = k_ref[:, 0, :].astype(jnp.float32)              # (bp, Dh)
+    v = v_ref[:, 0, :].astype(jnp.float32)
+    kp = kp_ref[...]                                    # (bp,)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # (B*G, bp)
+    mask = (kp >= 0)[None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_ref[:, 0] = alpha * l_ref[:, 0] + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(ip == n_p - 1)
+    def _done():
+        # unnormalized partial: the LSE combine divides once at the end
+        o_ref[:, 0, :] = acc_ref[...].astype(o_ref.dtype)
+        m_out_ref[:, 0] = m_ref[:, 0]
+        l_out_ref[:, 0] = l_ref[:, 0]
+
+
+def prefix_attention_kernel(q, prefix_k, prefix_v, prefix_positions, *,
+                            block_p: int, interpret: bool = False):
+    """q: (B,H,Dh); prefix_k/v: (P,Hkv,Dh) shared across the batch.
+
+    Returns UNNORMALIZED (acc (B,H,Dh) f32, m (B,H), l (B,H)).
+    """
+    B, H, Dh = q.shape
+    P, Hkv = prefix_k.shape[0], prefix_k.shape[1]
+    G = H // Hkv
+    bp = min(block_p, P)
+    assert P % bp == 0
+    n_p = P // bp
+
+    # fold batch into matmul rows, grouped per KV head:  (Hkv, B*G, Dh)
+    qf = q.reshape(B, Hkv, G, Dh).transpose(1, 0, 2, 3).reshape(Hkv, B * G, Dh)
+
+    kernel = functools.partial(
+        _prefix_kernel, scale=1.0 / math.sqrt(Dh), n_p=n_p)
+
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(Hkv, n_p),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda h, ip: (ip,)),
+            pl.BlockSpec((B * G, 1, Dh), lambda h, ip: (0, h, 0)),
+            pl.BlockSpec((bp, 1, Dh), lambda h, ip: (ip, h, 0)),
+            pl.BlockSpec((bp, 1, Dh), lambda h, ip: (ip, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B * G, 1, Dh), lambda h, ip: (0, h, 0)),
+            pl.BlockSpec((B * G, 1), lambda h, ip: (0, h)),
+            pl.BlockSpec((B * G, 1), lambda h, ip: (0, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * G, Hkv, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B * G, Hkv), jnp.float32),
+            jax.ShapeDtypeStruct((B * G, Hkv), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B * G, Dh), jnp.float32),
+            pltpu.VMEM((B * G, 1), jnp.float32),
+            pltpu.VMEM((B * G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(prefix_positions, qf.swapaxes(0, 1), prefix_k, prefix_v)
+
+    # (B*G, Hkv, ...) -> (B, H, ...)
+    acc = acc.reshape(B, G, Hkv, Dh).transpose(0, 2, 1, 3).reshape(B, H, Dh)
+    m = m.reshape(B, G, Hkv).transpose(0, 2, 1).reshape(B, H)
+    l = l.reshape(B, G, Hkv).transpose(0, 2, 1).reshape(B, H)
+    return acc, m, l

@@ -1,0 +1,53 @@
+"""Public wrapper: shared-prefix pass + per-request suffix pass + LSE merge."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.shared_prefix_attention.kernel import prefix_attention_kernel
+
+
+def _pick_block(s: int, target: int) -> int:
+    if s % target == 0:
+        return target
+    b = min(s, target)
+    while s % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_p", "block_t", "interpret"))
+def shared_prefix_attention(q, prefix_k, prefix_v, suffix_k, suffix_v, *,
+                            q_positions, suffix_positions,
+                            block_p=1024, block_t=1024, interpret=False):
+    """q: (B,H,Dh); prefix_k/v: (P,Hkv,Dh) ONE shared copy; suffix per-request.
+
+    Prefix slots are absolute positions [0, P); all are visible to every
+    decode query (the prefix is strictly in the past).
+    """
+    B, H, Dh = q.shape
+    P = prefix_k.shape[0]
+    bp = _pick_block(P, block_p)
+    bt = _pick_block(suffix_k.shape[1], block_t)
+
+    prefix_positions = jnp.arange(P, dtype=jnp.int32)
+    acc_p, m_p, l_p = prefix_attention_kernel(
+        q, prefix_k, prefix_v, prefix_positions, block_p=bp,
+        interpret=interpret)
+    out_s, m_s, l_s = decode_attention_kernel(
+        q, suffix_k, suffix_v, q_positions, suffix_positions,
+        window=0, block_t=bt, interpret=interpret)
+
+    # log-sum-exp merge of the two partials (prefix acc is unnormalized)
+    out_p = acc_p / jnp.where(l_p == 0.0, 1.0, l_p)[..., None]
+    m = jnp.maximum(m_p, m_s)
+    w_p = jnp.exp(m_p - m) * l_p
+    w_s = jnp.exp(m_s - m) * l_s
+    den = jnp.where(w_p + w_s == 0.0, 1.0, w_p + w_s)
+    out = (out_p.astype(jnp.float32) * w_p[..., None]
+           + out_s.astype(jnp.float32) * w_s[..., None]) / den[..., None]
+    return out.astype(q.dtype)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for shared-prefix decode attention.
+
+The oracle materializes what the optimized path avoids: it broadcasts the
+shared prefix KV to every request and runs ordinary attention over the
+concatenated [prefix, suffix] cache.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def shared_prefix_attention_ref(q, prefix_k, prefix_v, suffix_k, suffix_v, *,
+                                q_positions, suffix_positions):
+    """q: (B,H,Dh); prefix_k/v: (P,Hkv,Dh) SHARED; suffix_k/v: (B,T,Hkv,Dh).
+
+    Prefix slots occupy absolute positions [0, P); suffix_positions (B,T)
+    carry absolute positions (−1 invalid).
+    """
+    B = q.shape[0]
+    P = prefix_k.shape[0]
+    pk = jnp.broadcast_to(prefix_k[None], (B,) + prefix_k.shape)
+    pv = jnp.broadcast_to(prefix_v[None], (B,) + prefix_v.shape)
+    k = jnp.concatenate([pk, suffix_k], axis=1)
+    v = jnp.concatenate([pv, suffix_v], axis=1)
+    prefix_pos = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None], (B, P))
+    kv_pos = jnp.concatenate([prefix_pos, suffix_positions], axis=1)
+    return decode_attention_ref(q, k, v, q_positions=q_positions,
+                                kv_positions=kv_pos)

@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh).
+
+This proves the distribution config is coherent without real hardware:
+sharding mismatches, compile-time OOM and unsupported collectives all
+surface here as failures.  Per cell we record:
+
+* per-device memory from ``compiled.memory_analysis()`` (fits 16 GiB?)
+* HLO FLOPs / bytes from ``compiled.cost_analysis()``
+* collective bytes parsed from the partitioned HLO text
+  (all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute result sizes)
+
+Outputs one JSON per cell under experiments/dryrun/ — the roofline
+analysis (launch/roofline.py) consumes these.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,
+                           shape_applicable)
+from repro.configs.base import HBM_BYTES, ModelConfig, ShapeSpec
+from repro.launch.hlo_cost import analyze_hlo
+from repro.distribution.sharding import (ShardingPolicy, cache_shardings,
+                                         input_shardings, param_shardings)
+from repro.engine.models import build_model
+from repro.launch.mesh import make_production_mesh
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.trainer import TrainerConfig, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok_type: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(tok_type, 4)
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+_COLL_LINE = re.compile(
+    r"=\s+(?P<shapes>[^=]*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum RESULT sizes of every collective op in the partitioned HLO.
+
+    Result size is the per-device payload a chip receives for that op —
+    the bytes that cross its ICI links (methodology note: for
+    reduce-scatter the operand is larger than the result; using results
+    uniformly makes the ring-traffic estimate consistent across op
+    kinds)."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        for sm in _SHAPE_RE.finditer(m.group("shapes")):
+            out[op] += _shape_bytes(sm.group(1), sm.group(2))
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+def _activation_residency(cfg: ModelConfig, shape: ShapeSpec, mesh) -> int:
+    """Analytic per-device activation residency (bytes).
+
+    Train: remat (nothing_saveable) keeps one hidden-state carry per
+    scanned layer plus one layer's working set (chunked-attention block
+    scores, FFN intermediates).  Inference: one layer's working set plus
+    (decode) nothing — the cache is in arguments.
+    """
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            dp *= mesh.shape[ax]
+    tp = mesh.shape.get("model", 1)
+    B = max(shape.global_batch // dp, 1)
+    S = shape.seq_len if shape.kind != "decode" else 1
+    D = cfg.d_model
+    L = cfg.num_layers
+    hid = B * S * D * 2                              # bf16 hidden state
+    ffn = max(cfg.d_ff, cfg.moe.d_ff_expert if cfg.moe else 0)
+    work = 3 * hid + 2 * B * S * max(ffn // tp, D) * 2
+    if shape.kind != "decode" and S > 1:
+        skv = min(S, cfg.swa_window or S)
+        bq = min(4 * 1024 * 1024 // max(skv, 1), S) or S
+        scores = B * cfg.num_heads * bq * skv * 4
+        work += scores
+    if shape.kind == "train":
+        return int(L * hid + 3 * work)               # fwd+bwd live sets
+    return int(2 * work)
+
+
+def _abstract_params(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def build_lowerable(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Returns (jitted fn, example args as ShapeDtypeStructs)."""
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    pol = ShardingPolicy.for_mesh(mesh, fsdp_params=(shape.kind == "train"))
+    # sequence-parallel attention hints (REPRO_SP_ATTENTION=0 disables)
+    from repro.engine.models.layers import set_activation_sharding
+    set_activation_sharding(mesh, batch_axes=pol.batch_axes)
+    params_shape = _abstract_params(model)
+    p_sh = param_shardings(params_shape, mesh, pol)
+    in_sh = input_shardings(cfg, shape, mesh, pol)
+
+    if shape.kind == "train":
+        tcfg = TrainerConfig(remat=True, grad_accum=1,
+                             adamw=AdamWConfig(total_steps=1000))
+        step = make_train_step(cfg, tcfg)
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        o_sh = param_shardings(opt_shape, mesh, pol)
+        batch_sh = {k: in_sh[k] for k in specs}
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, batch_sh),
+                     out_shardings=(p_sh, o_sh, None))
+        return fn, (params_shape, opt_shape, specs)
+
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            def step(p, tokens, frames):
+                return model.prefill(p, tokens, frames)
+            args = (params_shape, specs["tokens"], specs["frames"])
+            arg_sh = (p_sh, in_sh["tokens"], in_sh["frames"])
+        elif cfg.family == "vlm":
+            def step(p, tokens, patches):
+                return model.prefill(p, tokens, prefix_embeds=patches)
+            args = (params_shape, specs["tokens"], specs["patch_embeds"])
+            arg_sh = (p_sh, in_sh["tokens"], in_sh["patch_embeds"])
+        else:
+            def step(p, tokens):
+                return model.prefill(p, tokens)
+            args = (params_shape, specs["tokens"])
+            arg_sh = (p_sh, in_sh["tokens"])
+        fn = jax.jit(step, in_shardings=arg_sh)
+        return fn, args
+
+    # decode: one new token against a seq_len-deep cache (serve_step)
+    B = shape.global_batch
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len))
+    c_sh = cache_shardings(cache_shape, cfg, mesh, B,
+                           batch_axes_tree=model.cache_batch_axes(cache_shape))
+
+    def serve_step(p, token, cache):
+        return model.decode_step(p, token, cache)
+
+    fn = jax.jit(serve_step, in_shardings=(p_sh, in_sh["token"], c_sh),
+                 out_shardings=(None, c_sh))
+    return fn, (params_shape, specs["token"], cache_shape)
+
+
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = OUT_DIR) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        cell.update(status="skipped", reason=why)
+        return cell
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        fn, args = build_lowerable(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_stats = {
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                # NOTE: CPU backend reports temps WITHOUT buffer-liveness
+                # packing — a loose upper bound, kept for reference only.
+                "xla_temp_bytes_upper": getattr(mem, "temp_size_in_bytes",
+                                                None),
+                "argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                          None),
+            }
+        except Exception:
+            mem_stats = {}
+        # per-device flops/bytes/collectives with while-trip accounting;
+        # attention-score tensors (kept in VMEM by the Pallas kernels on
+        # the real deployment) are tracked separately from HBM traffic
+        score_dims = {shape.seq_len}
+        if cfg.swa_window:
+            score_dims.add(min(shape.seq_len, cfg.swa_window))
+        if cfg.family == "hybrid":
+            score_dims.add(min(shape.seq_len, cfg.local_attn_window))
+        hlo = analyze_hlo(compiled.as_text(), score_dims=score_dims)
+
+        n_dev = mesh.devices.size
+        arg_b = mem_stats.get("argument_bytes") or 0
+        est = arg_b + _activation_residency(cfg, shape, mesh)
+        cell.update(
+            status="ok",
+            devices=n_dev,
+            flops=hlo["flops"],
+            bytes_accessed=hlo["bytes"],
+            collectives={k: v for k, v in hlo.items()
+                         if k.startswith("coll")},
+            xla_cost_flops=cost.get("flops", 0.0),      # scan-body-once ref
+            memory=mem_stats,
+            per_device_bytes=est,
+            hbm_fit=bool(est <= HBM_BYTES),
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            params=cfg.param_count(),
+            active_params=cfg.active_param_count(),
+        )
+    except Exception as e:                       # failure IS the signal
+        cell.update(status="error", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-2000:])
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_name}.json".replace("/", "_")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(cell, f, indent=1, default=str)
+    return cell
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = []
+    if args.single_pod or not args.multi_pod:
+        pods.append(False)
+    if args.multi_pod or args.all:
+        pods.append(True)
+    if args.all and False in pods and True not in pods:
+        pods.append(True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                fname = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    with open(fname) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[skip-existing] {arch} {shape} {mesh_name}")
+                        continue
+                cell = run_cell(arch, shape, mp, args.out)
+                status = cell["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f"flops={cell['flops']:.3e} "
+                             f"coll={cell['collectives'].get('collective_bytes', 0):.3e}B "
+                             f"fit={cell['hbm_fit']} "
+                             f"compile={cell['compile_s']}s")
+                elif status == "error":
+                    extra = cell["error"][:160]
+                    failures += 1
+                else:
+                    extra = cell.get("reason", "")
+                print(f"[{status:7s}] {arch:20s} {shape:12s} {mesh_name}  "
+                      f"{extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

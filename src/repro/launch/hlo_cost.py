@@ -1,0 +1,351 @@
+"""HLO-text cost analyzer with correct while-loop accounting.
+
+``compiled.cost_analysis()`` counts a while (scan) body ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes by ~L×.  This analyzer
+re-derives the three roofline inputs from the partitioned HLO text:
+
+* FLOPs: 2·(result elements)·(contraction size) per dot (incl. dots in
+  fused computations), multiplied through ``known_trip_count`` of every
+  enclosing while;
+* HBM bytes: Σ over scheduled top-level ops of operand+result bytes
+  (fusion boundaries = kernel boundaries, which is exactly the fused-
+  kernel traffic model), same trip multiplication;
+* collective bytes: per-op RESULT payloads of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute, trip-multiplied.
+
+Everything is per-DEVICE (the HLO is the single-partition SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+# result shapes then the first `kind(` token (shape text never has word-parens)
+_OP_RE = re.compile(r"^(.*?)\s([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r"known_trip_count.*?\"n\":\"(\d+)\"")
+_CALL_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_ARGS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota"}
+
+
+def _shapes_bytes_elems(text: str) -> Tuple[int, int]:
+    total_b = total_e = 0
+    for m in _SHAPE_RE.finditer(text):
+        e = 1
+        for d in m.group(2).split(","):
+            if d:
+                e *= int(d)
+        total_e += e
+        total_b += e * _DTYPE_BYTES.get(m.group(1), 4)
+    return total_b, total_e
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    shape_text: str          # result shapes (lhs)
+    line: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    vmem_class_bytes: float = 0.0      # attention-score traffic a flash
+                                       # kernel keeps in VMEM (never HBM)
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_count: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.vmem_class_bytes += other.vmem_class_bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.coll_count += other.coll_count * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str, score_dims=()):
+        """``score_dims``: KV-sequence lengths; f32 tensors of rank ≥ 4
+        whose last dim matches are attention scores — the Pallas flash
+        kernels keep those in VMEM, so their traffic is tracked separately
+        (vmem_class_bytes) and excluded from the kernelized HBM total."""
+        self.comps: Dict[str, List[_Op]] = {}
+        self.shapes: Dict[str, str] = {}       # op name -> result shape text
+        self.entry: Optional[str] = None
+        self.score_dims = set(int(d) for d in score_dims)
+        self._memo: Dict[str, Cost] = {}
+        # dtype-convert fusions are CPU-backend artifacts (TPU matmuls are
+        # native bf16): treat them as aliases of their source operand
+        self.alias: Dict[str, str] = {}
+        self._parse(hlo_text)
+
+    # ------------------------------------------------------------------
+    def _is_score_shape(self, shape_text: str) -> bool:
+        if not self.score_dims:
+            return False
+        m = _SHAPE_RE.search(shape_text)
+        if not m or m.group(1) not in ("f32", "bf16"):
+            return False
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        if len(dims) < 4:
+            return False
+        # scores appear as (..., bq, Skv'), transposed (..., Skv', bq·G),
+        # with Skv' either the full KV length or a causal-truncated chunk
+        # (multiple of 1024 up to the max KV length).  f32 rank-4+ only —
+        # bf16 rank-4 tensors (KV, MoE buffers) need the exact length.
+        smax = max(self.score_dims)
+        cand = max(dims[-1], dims[-2])
+        if m.group(1) == "f32":
+            return cand >= 1024 and cand <= smax and cand % 1024 == 0
+        return dims[-1] in self.score_dims or dims[-2] in self.score_dims
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _merge_wrapped(text: str) -> List[str]:
+        """HLO pretty-printing wraps long op lines (tuple results, operand
+        lists); merge continuations back into one logical line."""
+        starter = re.compile(
+            r"^\s*(ENTRY\s+)?(ROOT\s+)?%[\w.\-]+\s*(=|\()|^\s*\}|^HloModule")
+        out: List[str] = []
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line.strip():
+                continue
+            if starter.match(line) or not out:
+                out.append(line)
+            else:
+                out[-1] += " " + line.strip()
+        return out
+
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        for line in self._merge_wrapped(text):
+            hdr = _COMP_HDR.match(line.strip())
+            if hdr and line.strip().endswith("{"):
+                current = hdr.group(2)
+                self.comps[current] = []
+                if hdr.group(1):
+                    self.entry = current
+                continue
+            if line.strip() == "}":
+                current = None
+                continue
+            if current is None:
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), _COMMENT_RE.sub("", m.group(2))
+            om = _OP_RE.match(rhs)
+            if om:
+                shape_text, kind = om.group(1), om.group(2)
+            else:
+                # e.g. "%x = f32[2]{0} parameter(0)" matched above; or consts
+                parts = rhs.split()
+                shape_text = parts[0]
+                kind = parts[1].split("(")[0] if len(parts) > 1 else "?"
+            self.shapes[name] = shape_text
+            if (kind == "convert"
+                    or (kind == "fusion" and name.split(".")[0] in (
+                        "convert_bitcast_fusion", "convert_fusion",
+                        "bitcast_convert_fusion", "wrapped_convert"))):
+                am = _ARGS_RE.search(line)
+                if am:
+                    src = am.group(1).split(",")[0].strip().lstrip("%")
+                    # alias only a pure dtype cast (same element count);
+                    # fused slice+convert reads just the slice instead
+                    src_shape = self.shapes.get(src, "")
+                    if src_shape and (_shapes_bytes_elems(src_shape)[1]
+                                      == _shapes_bytes_elems(shape_text)[1]):
+                        self.alias[name] = src
+                    else:
+                        self.alias[name] = f"__slice__{name}"
+                        self.shapes[f"__slice__{name}"] = shape_text
+            self.comps[current].append(_Op(name, kind, shape_text, line))
+
+    # ------------------------------------------------------------------
+    def _operand_byte_list(self, line: str) -> Tuple[List[int], int]:
+        """(per-operand hbm byte list, score-class bytes)."""
+        m = _ARGS_RE.search(line)
+        if not m:
+            return [], 0
+        out: List[int] = []
+        score = 0
+        for ref in m.group(1).split(","):
+            ref = ref.strip().lstrip("%")
+            for _ in range(8):                  # resolve convert aliases
+                if ref in self.alias:
+                    ref = self.alias[ref]
+                else:
+                    break
+            st = self.shapes.get(ref)
+            if st:
+                b = _shapes_bytes_elems(st)[0]
+                if self._is_score_shape(st):
+                    score += b
+                else:
+                    out.append(b)
+        return out, score
+
+    def _operand_bytes(self, line: str) -> Tuple[int, int]:
+        """(hbm bytes, score-class bytes) read by this op's operands."""
+        lst, score = self._operand_byte_list(line)
+        return sum(lst), score
+
+    def _dot_flops(self, op: _Op) -> float:
+        result_b, result_e = _shapes_bytes_elems(op.shape_text)
+        cm = _LHS_CONTRACT.search(op.line)
+        am = _ARGS_RE.search(op.line)
+        if not am:
+            return 0.0
+        lhs = am.group(1).split(",")[0].strip().lstrip("%")
+        lhs_shape = self.shapes.get(lhs, "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if not sm:
+            return 0.0
+        dims = [int(d) for d in sm.group(2).split(",") if d]
+        k = 1
+        if cm:
+            for ix in cm.group(1).split(","):
+                if ix and int(ix) < len(dims):
+                    k *= dims[int(ix)]
+        return 2.0 * result_e * k
+
+    # ------------------------------------------------------------------
+    def cost_of(self, comp: str) -> Cost:
+        hit = self._memo.get(comp)
+        if hit is not None:
+            return hit
+        self._memo[comp] = Cost()            # cycle guard
+        total = Cost()
+        for op in self.comps.get(comp, []):
+            if op.kind in _FREE_OPS:
+                continue
+            if op.kind == "while":
+                trip = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _CALL_RE.search(op.line)
+                if bm:
+                    total.add(self.cost_of(bm.group(1)), trip)
+                continue
+            rb, re_ = _shapes_bytes_elems(op.shape_text)
+            score_result = self._is_score_shape(op.shape_text)
+            ob_list, ob_score = self._operand_byte_list(op.line)
+            ob = sum(ob_list)
+
+            # in-place updates: TPU aliases the big buffer; real traffic is
+            # the written slice (≈ the non-aliased operands), not the full
+            # cache/stacked-KV tensor the HLO text nominally rewrites.
+            if ("dynamic-update-slice" in op.kind
+                    or ("dynamic-update-slice" in op.name)
+                    or ("dynamic_update_slice" in op.name)):
+                slice_b = ob - (max(ob_list) if ob_list else 0)
+                total.bytes += 2 * slice_b
+                total.vmem_class_bytes += ob_score
+                continue
+            # loop-carry copies >64 MiB: buffer-aliasing artifacts of the
+            # CPU backend (elided by TPU buffer assignment)
+            if op.kind == "copy" and rb > 64 * 1024 * 1024 \
+                    and len(ob_list) == 1 and ob_list[0] == rb:
+                continue
+            # dtype-convert aliases: no HBM traffic on TPU
+            if op.name in self.alias:
+                continue
+            # slice-class reads touch only the slice, not the source buffer
+            # (scanning a stacked cache dynamic-slices one layer per step)
+            if (op.kind in ("dynamic-slice", "gather", "slice")
+                    or "dynamic-slice" in op.name
+                    or "dynamic_slice" in op.name
+                    or op.name.startswith(("gather", "wrapped_gather",
+                                           "slice", "wrapped_slice"))):
+                total.bytes += 2 * rb
+                total.vmem_class_bytes += ob_score
+                continue
+            # scatter writes only its updates (in-place on TPU)
+            if op.kind == "scatter" or "scatter" in op.name:
+                slice_b = ob - (max(ob_list) if ob_list else 0)
+                total.bytes += 2 * max(slice_b, rb // 64)
+                total.vmem_class_bytes += ob_score
+                continue
+
+            def account():
+                if score_result:
+                    total.vmem_class_bytes += rb + ob_score
+                    total.bytes += ob
+                else:
+                    total.bytes += rb + ob
+                    total.vmem_class_bytes += ob_score
+
+            if op.kind in ("conditional", "call", "fusion", "map",
+                           "reduce", "reduce-window", "sort", "scatter",
+                           "select-and-scatter"):
+                account()                        # kernel-boundary traffic
+                # dots nested inside the called computation still count
+                cm = _CALL_RE.search(op.line)
+                if cm and cm.group(1) in self.comps:
+                    inner = self.cost_of(cm.group(1))
+                    total.flops += inner.flops
+                    total.coll_bytes += inner.coll_bytes
+                continue
+            if op.kind in ("dot",):
+                total.flops += self._dot_flops(op)
+                account()
+            elif op.kind == "convolution":
+                # approx: 2 * result * (kernel elems) — rare in this repo
+                total.flops += 2.0 * re_
+                account()
+            elif any(op.kind.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if op.kind.startswith(c))
+                if op.kind.endswith("-done"):
+                    continue                    # counted at -start
+                total.coll_bytes += rb
+                total.coll_count += 1
+                total.coll_by_kind[kind] = \
+                    total.coll_by_kind.get(kind, 0.0) + rb
+                account()
+            else:
+                account()
+        self._memo[comp] = total
+        return total
+
+    def analyze(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def analyze_hlo(hlo_text: str, score_dims=()) -> Dict[str, float]:
+    c = HloAnalyzer(hlo_text, score_dims=score_dims).analyze()
+    out = {
+        "flops": c.flops,
+        "bytes": c.bytes,                      # kernelized HBM traffic
+        "vmem_class_bytes": c.vmem_class_bytes,
+        "bytes_xla_path": c.bytes + c.vmem_class_bytes,
+        "collective_bytes": c.coll_bytes,
+        "collective_count": c.coll_count,
+    }
+    for k, v in c.coll_by_kind.items():
+        out[f"coll_{k}"] = v
+    return out

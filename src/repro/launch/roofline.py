@@ -1,0 +1,124 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline).
+
+Per (arch × shape) cell on the single-pod mesh:
+
+    compute term    = HLO_FLOPs   / (chips × 197e12 FLOP/s)
+    memory term     = HLO_bytes   / (chips × 819e9 B/s)
+    collective term = coll_bytes  / (chips × 50e9 B/s per link)
+
+HLO_FLOPs / bytes / collective bytes come from the while-trip-corrected
+HLO analyzer (launch/hlo_cost.py) and are PER-DEVICE, so the "chips ×"
+denominators cancel to per-chip peaks.  The dominant term is the
+bottleneck; MODEL_FLOPS/HLO_FLOPs exposes remat & redundancy waste.
+
+    python -m repro.launch.roofline [--json] [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N·D (train) / 2·N_active·D (inference), D = processed tokens."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch                    # one decode step
+    return 2.0 * n_active * tokens
+
+
+def analyze_cell(cell: Dict) -> Optional[Dict]:
+    if cell.get("status") != "ok":
+        return None
+    n_dev = cell["devices"]
+    flops = cell["flops"]                          # per device
+    byts = cell["bytes_accessed"]
+    coll = cell["collectives"].get("collective_bytes", 0.0)
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cell["arch"], cell["shape"]) / n_dev
+    bound = max(terms.values())
+    useful_frac = mf / max(flops, 1.0)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_dev": mf, "hlo_flops_per_dev": flops,
+        "useful_flop_ratio": useful_frac,
+        # roofline fraction: useful work at peak vs the bound the compiled
+        # program actually hits
+        "roofline_fraction": (mf / PEAK_FLOPS_BF16) / max(bound, 1e-30),
+        "hbm_fit": cell.get("hbm_fit"),
+    }
+
+
+def load_cells(dirname: str, mesh: str = "pod16x16") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if c.get("mesh") == mesh:
+            cells.append(c)
+    return cells
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=OUT_DIR)
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+    skipped = []
+    for cell in load_cells(args.dir, args.mesh):
+        r = analyze_cell(cell)
+        if r is None:
+            skipped.append((cell["arch"], cell["shape"],
+                            cell.get("reason", cell.get("error", ""))[:60]))
+            continue
+        rows.append(r)
+
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return 0
+
+    hdr = (f"{'arch':20s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s} fit")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(f"{r['arch']:20s} {r['shape']:12s} "
+              f"{r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+              f"{r['t_collective_s']:10.4f} {r['dominant']:>10s} "
+              f"{r['useful_flop_ratio']:7.2f} "
+              f"{100*r['roofline_fraction']:6.1f}% {r['hbm_fit']}")
+    if skipped:
+        print("\nskipped cells:")
+        for a, s, why in skipped:
+            print(f"  {a:20s} {s:12s} {why}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

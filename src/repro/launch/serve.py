@@ -1,0 +1,71 @@
+"""Serving launcher: Halo end-to-end over a workload.
+
+    python -m repro.launch.serve --workload w1 --queries 64 --mode sim
+    python -m repro.launch.serve --workload w1 --queries 4  --mode real
+
+``sim`` reproduces paper-scale behaviour via the discrete-event backend;
+``real`` executes tiny JAX models + minidb and verifies semantics.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_smoke
+from repro.core import (CostModel, EpochDPSolver, HARDWARE, PAPER_MODELS,
+                        SolverConfig, consolidate)
+from repro.runtime import RealProcessor, SimulatedProcessor
+from repro.workloads import build_workload
+from repro.workloads.datagen import build_database
+from repro.workloads.tools import ToolRuntime
+
+
+def build_cost_model(graph, cons, hardware="h200", **kw):
+    batch_sizes = {}
+    for nid in graph.nodes:
+        m = cons.macro(nid)
+        batch_sizes[nid] = (m.n_logical if graph.nodes[nid].is_llm()
+                            else m.n_unique)
+    return CostModel(graph, HARDWARE[hardware], PAPER_MODELS,
+                     batch_sizes=batch_sizes, **kw)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="w1")
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--mode", choices=("sim", "real"), default="sim")
+    ap.add_argument("--hardware", default="h200")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    graph, bindings, dbname = build_workload(args.workload, args.queries,
+                                             seed=args.seed)
+    cons = consolidate(graph, bindings)
+    cm = build_cost_model(graph, cons, args.hardware)
+    plan = EpochDPSolver(graph.llm_dag(), cm,
+                         SolverConfig(num_workers=args.workers)).solve()
+    print(f"plan: {len(plan.epochs)} epochs, predicted {plan.predicted_cost:.2f}s,"
+          f" solver {plan.solver_seconds*1e3:.1f}ms")
+
+    if args.mode == "sim":
+        rep = SimulatedProcessor(graph, cm, args.workers).run(cons, plan)
+    else:
+        if args.queries > 8:
+            print(f"[real mode] capping --queries {args.queries} -> 8 "
+                  "(CPU real-execution scale)")
+            cons = consolidate(graph, bindings[:8])
+        db = build_database(dbname)
+        models = {m: get_smoke("qwen3-1.7b").replace(name=m)
+                  for m in ("qwen3-14b", "qwen3-32b", "gpt-oss-20b")}
+        proc = RealProcessor(graph, models, ToolRuntime(db),
+                             num_workers=min(args.workers, 2), decode_cap=8)
+        rep = proc.run(cons, plan)
+        rep.extra.pop("results", None)
+    print(json.dumps(rep.summary(), indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,46 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+CPU-runnable with reduced configs (--smoke, the default here) and the
+same code path that lowers on the production meshes (launch/dryrun.py
+proves every full (arch × train shape) compiles there).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, get_smoke
+from repro.training import (AdamWConfig, DataConfig, TrainerConfig,
+                            train_loop)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the assigned full config (TPU-scale; "
+                    "default uses the smoke config)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full_config else get_smoke(args.arch)
+    tcfg = TrainerConfig(
+        remat=True, grad_accum=args.grad_accum,
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    out = train_loop(cfg, tcfg, dcfg, num_steps=args.steps,
+                     ckpt_dir=args.ckpt_dir, log_every=max(args.steps//20, 1))
+    first, last = out["losses"][0][1], out["losses"][-1][1]
+    print(f"\narch={cfg.name} steps={args.steps} "
+          f"loss {first:.4f} -> {last:.4f} in {out['seconds']:.1f}s")
+    return 0 if last < first else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,11 @@
+"""Halo Processor (paper §5): event-driven execution over heterogeneous
+CPU/GPU workers, with a discrete-event simulated backend (paper-scale
+numbers) and a real backend (tiny JAX models + minidb, semantics checks).
+"""
+from repro.runtime.events import RunReport, TaskRecord
+from repro.runtime.opwise import OpWiseSimulator
+from repro.runtime.simulator import SimulatedProcessor, OnlineSimulator
+from repro.runtime.processor import RealProcessor
+
+__all__ = ["RunReport", "TaskRecord", "SimulatedProcessor",
+           "OnlineSimulator", "RealProcessor", "OpWiseSimulator"]

@@ -1,0 +1,46 @@
+"""Workflow-state checkpointing: restart a half-finished batch run.
+
+Atomic JSON snapshots of the (query, node) → result map.  On resume, the
+Processor pre-populates BatchState and workers skip completed macro
+nodes — the batch-analytics analogue of training checkpoint/restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Tuple
+
+from repro.runtime.coordinator import BatchState
+
+
+def save_batch_state(state: BatchState, path: str) -> None:
+    with state.lock:
+        payload = {
+            "n_queries": state.n,
+            "results": [[q, node, val]
+                        for (q, node), val in state.results.items()],
+        }
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)                      # atomic commit
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_batch_state(state: BatchState, path: str) -> int:
+    """Populate ``state`` from a snapshot. Returns #results restored."""
+    with open(path) as f:
+        payload = json.load(f)
+    if payload["n_queries"] != state.n:
+        raise ValueError("checkpoint was taken with a different batch size")
+    n = 0
+    for q, node, val in payload["results"]:
+        state.set_result(int(q), node, val)
+        n += 1
+    return n

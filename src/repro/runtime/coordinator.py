@@ -1,0 +1,67 @@
+"""Coordinator bookkeeping shared by the real Processor backend.
+
+Tracks per-(query, node) results and macro-node completion over the
+consolidated batch; thread-safe; supports per-query wavefront promotion
+for tool nodes and macro-barrier readiness for (batched) LLM nodes.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.graphspec import GraphSpec
+
+
+class BatchState:
+    def __init__(self, graph: GraphSpec, n_queries: int):
+        self.graph = graph
+        self.n = n_queries
+        self.lock = threading.Condition()
+        self.results: Dict[Tuple[int, str], str] = {}
+        self.node_done_count: Dict[str, int] = {v: 0 for v in graph.nodes}
+        self.macro_done: Set[str] = set()
+
+    # ------------------------------------------------------------------
+    def set_result(self, q: int, node: str, value: str) -> bool:
+        """Record one (query, node) result. Returns True if the macro node
+        just completed (all queries done)."""
+        with self.lock:
+            if (q, node) in self.results:
+                return False
+            self.results[(q, node)] = value
+            self.node_done_count[node] += 1
+            if self.node_done_count[node] == self.n:
+                self.macro_done.add(node)
+                self.lock.notify_all()
+                return True
+            return False
+
+    def macro_ready(self, node: str) -> bool:
+        """All parents complete for ALL queries (LLM barrier readiness)."""
+        with self.lock:
+            return all(p in self.macro_done
+                       for p in self.graph.parents(node))
+
+    def query_ready(self, q: int, node: str) -> bool:
+        """All parents complete for ONE query (tool wavefront readiness)."""
+        with self.lock:
+            return all((q, p) in self.results
+                       for p in self.graph.parents(node))
+
+    def wait_macro_ready(self, node: str, timeout: float = 120.0) -> None:
+        with self.lock:
+            ok = self.lock.wait_for(
+                lambda: all(p in self.macro_done
+                            for p in self.graph.parents(node)),
+                timeout=timeout)
+            if not ok:
+                raise TimeoutError(f"deps of {node!r} never completed")
+
+    def upstream(self, q: int) -> Dict[str, str]:
+        with self.lock:
+            return {node: val for (qq, node), val in self.results.items()
+                    if qq == q}
+
+    def all_done(self) -> bool:
+        with self.lock:
+            return len(self.macro_done) == len(self.graph.nodes)

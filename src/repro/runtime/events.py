@@ -1,0 +1,79 @@
+"""Execution records + run reports shared by both Processor backends."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class TaskRecord:
+    node: str
+    kind: str                     # "llm" | "tool"
+    worker: str                   # "gpu0".. | "cpu"
+    start: float
+    end: float
+    batch: int = 1                # physical batch executed
+    instance: int = 0             # batch-plan instance (online mode)
+    info: str = ""
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+@dataclass
+class RunReport:
+    name: str = ""
+    makespan: float = 0.0
+    records: List[TaskRecord] = field(default_factory=list)
+    num_queries: int = 0
+    num_workers: int = 0
+    coalesce_stats: Dict[str, float] = field(default_factory=dict)
+    extra: Dict[str, float] = field(default_factory=dict)
+    # online mode
+    query_completion: List[float] = field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    def gpu_busy(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for r in self.records:
+            if r.kind == "llm":
+                out[r.worker] = out.get(r.worker, 0.0) + r.duration
+        return out
+
+    def gpu_seconds(self) -> float:
+        """Cumulative GPU usage ∫U(t)dt — the Fig. 11 cost proxy."""
+        return sum(self.gpu_busy().values())
+
+    def cpu_seconds(self) -> float:
+        return sum(r.duration for r in self.records if r.kind == "tool")
+
+    def utilization_trace(self, dt: float = 1.0) -> List[Tuple[float, float]]:
+        """(t, fraction of GPU workers busy) samples."""
+        if not self.records or self.num_workers == 0:
+            return []
+        horizon = self.makespan
+        out = []
+        llm = [r for r in self.records if r.kind == "llm"]
+        t = 0.0
+        while t < horizon:
+            busy = sum(1 for r in llm if r.start < t + dt and r.end > t)
+            out.append((t, min(busy / self.num_workers, 1.0)))
+            t += dt
+        return out
+
+    def throughput_qps(self) -> float:
+        if not self.query_completion:
+            return self.num_queries / self.makespan if self.makespan else 0.0
+        return len(self.query_completion) / max(self.query_completion)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "makespan_s": round(self.makespan, 3),
+            "queries": self.num_queries,
+            "gpu_seconds": round(self.gpu_seconds(), 3),
+            "cpu_seconds": round(self.cpu_seconds(), 3),
+            "qps": round(self.throughput_qps(), 4),
+            **{k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in self.coalesce_stats.items()},
+        }

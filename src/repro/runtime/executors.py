@@ -1,0 +1,225 @@
+"""Executors for the real Processor backend.
+
+* GPUWorkerThread — a stateful GPU executor: runs its planned node
+  sequence, hosting at most one resident model (InferenceEngine) at a
+  time; model switches unload/load (the T_model event, measured).
+* ToolDispatcher — bounded CPU pool with per-query wavefront promotion,
+  depth-priority ordering and signature coalescing.
+"""
+from __future__ import annotations
+
+import queue as _q
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.coalesce import CoalesceTable
+from repro.core.graphspec import GraphSpec
+from repro.core.parser import render
+from repro.engine.engine import InferenceEngine
+from repro.engine.tokenizer import detokenize, tokenize
+from repro.runtime.coordinator import BatchState
+from repro.runtime.events import TaskRecord
+from repro.workloads.tools import ToolRuntime
+
+
+class EngineHost:
+    """One worker's model slot: at most one resident engine."""
+
+    def __init__(self, model_configs: Dict[str, ModelConfig], seed: int = 0):
+        self.model_configs = model_configs
+        self.seed = seed
+        self._engines: Dict[str, InferenceEngine] = {}
+        self.resident: Optional[str] = None
+        self.switches = 0
+        self.switch_seconds = 0.0
+
+    def engine_for(self, model: str) -> InferenceEngine:
+        if model not in self._engines:
+            self._engines[model] = InferenceEngine(
+                self.model_configs[model], seed=self.seed)
+        eng = self._engines[model]
+        if self.resident != model:
+            if self.resident is not None:
+                self._engines[self.resident].unload()
+                self.switches += 1
+            self.switch_seconds += eng.load()
+            self.resident = model
+        return eng
+
+
+class GPUWorkerThread(threading.Thread):
+    def __init__(self, wid: int, seq: Sequence[str], graph: GraphSpec,
+                 state: BatchState, bindings: Sequence[dict],
+                 host: EngineHost, records: List[TaskRecord],
+                 records_lock: threading.Lock, t0: float,
+                 overflow: "_q.SimpleQueue[str]",
+                 die_after: Optional[int] = None):
+        super().__init__(daemon=True, name=f"gpu{wid}")
+        self.wid = wid
+        self.seq = list(seq)
+        self.graph = graph
+        self.state = state
+        self.bindings = bindings
+        self.host = host
+        self.records = records
+        self.records_lock = records_lock
+        self.t0 = t0
+        self.overflow = overflow
+        self.die_after = die_after
+        self.executed = 0
+        self.error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def _run_node(self, nid: str) -> None:
+        spec = self.graph.nodes[nid]
+        if nid in self.state.macro_done:
+            return                                   # restored from checkpoint
+        self.state.wait_macro_ready(nid)
+        eng = self.host.engine_for(spec.model)
+        prompts = []
+        for q, b in enumerate(self.bindings):
+            text = render(spec.prompt, b, self.state.upstream(q))
+            prompts.append(tokenize(text, eng.cfg.vocab_size))
+        ts = time.perf_counter() - self.t0
+        outs = eng.generate(prompts, max_new_tokens=spec.max_new_tokens,
+                            temperature=spec.temperature)
+        te = time.perf_counter() - self.t0
+        with self.records_lock:
+            self.records.append(TaskRecord(
+                node=nid, kind="llm", worker=f"gpu{self.wid}",
+                start=ts, end=te, batch=len(prompts)))
+        for q, toks in enumerate(outs):
+            self.state.set_result(q, nid, detokenize(toks))
+
+    def run(self) -> None:
+        """Process own sequence; pick up failed peers' overflow work the
+        moment it is runnable (dependencies satisfied) — never block on a
+        node another (possibly dead) worker was supposed to produce."""
+        try:
+            pending = list(self.seq)
+            while not self.state.all_done():
+                if (self.die_after is not None
+                        and self.executed >= self.die_after):
+                    for rest in pending:              # simulated failure
+                        self.overflow.put(rest)
+                    return
+                ran = False
+                # 1) own next node, if its deps are satisfied
+                while pending and pending[0] in self.state.macro_done:
+                    pending.pop(0)
+                if pending and self.state.macro_ready(pending[0]):
+                    self._run_node(pending.pop(0))
+                    self.executed += 1
+                    ran = True
+                else:
+                    # 2) a ready overflow node from a failed worker
+                    stash = []
+                    try:
+                        while True:
+                            nid = self.overflow.get_nowait()
+                            if nid in self.state.macro_done:
+                                continue
+                            if self.state.macro_ready(nid):
+                                self._run_node(nid)
+                                self.executed += 1
+                                ran = True
+                                break
+                            stash.append(nid)
+                    except _q.Empty:
+                        pass
+                    for nid in stash:
+                        self.overflow.put(nid)
+                if not ran:
+                    if not pending and self.overflow.empty():
+                        return                        # nothing left for us
+                    with self.state.lock:
+                        self.state.lock.wait(timeout=0.05)
+        except BaseException as e:                    # surfaced by Processor
+            self.error = e
+            with self.state.lock:
+                self.state.lock.notify_all()
+
+
+class ToolDispatcher(threading.Thread):
+    """Promotes per-query tool tasks as their deps land; coalesces by
+    canonical signature; executes on a bounded pool (backpressure)."""
+
+    def __init__(self, graph: GraphSpec, state: BatchState,
+                 bindings: Sequence[dict], tools: ToolRuntime,
+                 records: List[TaskRecord], records_lock: threading.Lock,
+                 t0: float, cpu_slots: int = 8, coalescing: bool = True):
+        super().__init__(daemon=True, name="tool-dispatcher")
+        self.graph = graph
+        self.state = state
+        self.bindings = bindings
+        self.tools = tools
+        self.records = records
+        self.records_lock = records_lock
+        self.t0 = t0
+        self.pool = ThreadPoolExecutor(max_workers=cpu_slots)
+        self.table = CoalesceTable(enabled=coalescing)
+        self.dispatched: set = set()
+        self.stop_flag = threading.Event()
+        self.error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def _execute(self, sig: str, op: str, args: str) -> None:
+        try:
+            ts = time.perf_counter() - self.t0
+            result, _ = self.tools.execute(op, args)
+            te = time.perf_counter() - self.t0
+            with self.state.lock:
+                requesters = self.table.complete(sig, result)
+            with self.records_lock:
+                self.records.append(TaskRecord(
+                    node=requesters[0][1] if requesters else "?",
+                    kind="tool", worker="cpu", start=ts, end=te,
+                    batch=len(requesters), info=op))
+            for q, nid in requesters:
+                self.state.set_result(q, nid, str(result))
+        except BaseException as e:
+            self.error = e
+            with self.state.lock:
+                self.state.lock.notify_all()
+
+    def _scan(self) -> int:
+        """Dispatch every ready (query, tool) task. Returns #dispatched."""
+        n = 0
+        tool_nodes = sorted(
+            self.graph.tool_nodes(),
+            key=lambda t: len(self.graph.ancestors(t)))      # depth priority
+        for nid in tool_nodes:
+            spec = self.graph.nodes[nid]
+            for q in range(self.state.n):
+                key = (q, nid)
+                if key in self.dispatched:
+                    continue
+                if (q, nid) in self.state.results:
+                    self.dispatched.add(key)                 # checkpointed
+                    continue
+                if not self.state.query_ready(q, nid):
+                    continue
+                self.dispatched.add(key)
+                args = render(spec.args, self.bindings[q],
+                              self.state.upstream(q))
+                with self.state.lock:
+                    sig, needs_exec, cached = self.table.register(
+                        spec.op, args, (q, nid))
+                if cached is not None:
+                    self.state.set_result(q, nid, str(cached))
+                elif needs_exec:
+                    self.pool.submit(self._execute, sig, spec.op, args)
+                n += 1
+        return n
+
+    def run(self) -> None:
+        try:
+            while not self.stop_flag.is_set() and not self.state.all_done():
+                self._scan()
+                with self.state.lock:
+                    self.state.lock.wait(timeout=0.02)
+        finally:
+            self.pool.shutdown(wait=True)

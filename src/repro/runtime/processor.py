@@ -1,0 +1,113 @@
+"""RealProcessor — executes an ExecutionPlan with REAL components:
+
+tiny JAX models behind InferenceEngines (continuous batching, prefix
+sharing, model switching), the minidb ToolRuntime, signature coalescing,
+per-query wavefront tool promotion, checkpoint/restart and worker-failure
+recovery.  The scheduling logic is the SAME code the simulator drives —
+real mode exists to prove the semantics: coalescing and plan choice must
+not change outputs (asserted in tests).
+"""
+from __future__ import annotations
+
+import queue as _q
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.consolidate import ConsolidatedGraph
+from repro.core.graphspec import GraphSpec
+from repro.core.plan import ExecutionPlan
+from repro.runtime.checkpoint import load_batch_state, save_batch_state
+from repro.runtime.coordinator import BatchState
+from repro.runtime.events import RunReport, TaskRecord
+from repro.runtime.executors import (EngineHost, GPUWorkerThread,
+                                     ToolDispatcher)
+from repro.workloads.tools import ToolRuntime
+
+
+class RealProcessor:
+    def __init__(self, graph: GraphSpec, model_configs: Dict[str, ModelConfig],
+                 tools: ToolRuntime, num_workers: int = 2,
+                 cpu_slots: int = 8, coalescing: bool = True, seed: int = 0,
+                 decode_cap: Optional[int] = None):
+        self.graph = graph
+        self.model_configs = model_configs
+        self.tools = tools
+        self.W = num_workers
+        self.cpu_slots = cpu_slots
+        self.coalescing = coalescing
+        self.seed = seed
+        # cap generation length in tests (CPU real mode); None = node spec
+        if decode_cap is not None:
+            nodes = [n.with_(max_new_tokens=min(n.max_new_tokens, decode_cap))
+                     if n.is_llm() else n for n in graph.nodes.values()]
+            self.graph = GraphSpec(graph.name, nodes, graph.edges)
+
+    # ------------------------------------------------------------------
+    def run(self, cons: ConsolidatedGraph, plan: ExecutionPlan,
+            checkpoint_path: Optional[str] = None,
+            resume_from: Optional[str] = None,
+            die_after: Optional[Dict[int, int]] = None) -> RunReport:
+        """Execute the consolidated batch. Returns a RunReport whose
+        ``extra['results']`` holds the per-(query,node) outputs."""
+        state = BatchState(self.graph, cons.n_queries)
+        if resume_from:
+            restored = load_batch_state(state, resume_from)
+        else:
+            restored = 0
+
+        records: List[TaskRecord] = []
+        rlock = threading.Lock()
+        t0 = time.perf_counter()
+        overflow: "_q.SimpleQueue[str]" = _q.SimpleQueue()
+
+        dispatcher = ToolDispatcher(
+            self.graph, state, cons.bindings, self.tools, records, rlock,
+            t0, cpu_slots=self.cpu_slots, coalescing=self.coalescing)
+        dispatcher.start()
+
+        seqs = plan.worker_sequences(self.W)
+        hosts = [EngineHost(self.model_configs, seed=self.seed)
+                 for _ in range(self.W)]
+        workers = [
+            GPUWorkerThread(w, seqs[w], self.graph, state, cons.bindings,
+                            hosts[w], records, rlock, t0, overflow,
+                            die_after=(die_after or {}).get(w))
+            for w in range(self.W)]
+        for wk in workers:
+            wk.start()
+        for wk in workers:
+            wk.join(timeout=600)
+        dispatcher.stop_flag.set()
+        dispatcher.join(timeout=60)
+
+        for wk in workers:
+            if wk.error:
+                raise wk.error
+        if dispatcher.error:
+            raise dispatcher.error
+        if not state.all_done():
+            missing = set(self.graph.nodes) - state.macro_done
+            raise RuntimeError(f"run incomplete; missing {sorted(missing)}")
+
+        if checkpoint_path:
+            save_batch_state(state, checkpoint_path)
+
+        report = RunReport(
+            name=plan.scheduler_name, makespan=time.perf_counter() - t0,
+            records=records, num_queries=cons.n_queries, num_workers=self.W)
+        report.coalesce_stats = {
+            "tool_logical": dispatcher.table.logical_requests,
+            "tool_physical": dispatcher.table.physical_executions,
+            "tool_dedup_ratio": dispatcher.table.dedup_ratio,
+            "restored_results": restored,
+        }
+        report.extra["results"] = {           # type: ignore[assignment]
+            f"{q}:{node}": val
+            for (q, node), val in sorted(state.results.items())}
+        report.extra["model_switches"] = sum(h.switches for h in hosts)
+        report.extra["prefill_tokens_saved"] = sum(
+            e.stats.prefill_tokens_saved
+            for h in hosts for e in h._engines.values())
+        return report

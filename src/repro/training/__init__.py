@@ -1,0 +1,12 @@
+"""Training substrate: optimizer, trainer, distributed checkpointing,
+gradient compression, resumable data pipeline."""
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.training.trainer import TrainerConfig, make_train_step, train_loop
+from repro.training.checkpoint import save_checkpoint, load_checkpoint
+from repro.training.data import DataConfig, SyntheticLMData
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+    "TrainerConfig", "make_train_step", "train_loop",
+    "save_checkpoint", "load_checkpoint", "DataConfig", "SyntheticLMData",
+]

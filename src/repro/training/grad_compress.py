@@ -1,0 +1,70 @@
+"""Int8 gradient compression with error feedback — a distributed-
+optimization hook for cross-pod (DCN) gradient reduction.
+
+Cross-pod all-reduce is the bandwidth bottleneck at 2+ pods (25 GB/s DCN
+vs 50 GB/s/link ICI): int8 quantization cuts that traffic 2× vs bf16
+(4× vs f32) at the cost of quantization noise, which ERROR FEEDBACK
+re-injects next step (residual accumulation keeps the scheme unbiased
+in the long run — Seide et al.; Karimireddy et al.).
+
+Usage inside a shard_map'd train step (see distribution/collectives.py
+for the psum wiring):
+
+    q, scale, new_err = quantize_error_feedback(g, err)
+    q_sum  = lax.psum(q.astype(jnp.int32), "pod")     # int32 accumulate
+    g_next = dequantize(q_sum, lax.pmax(scale, "pod"))
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_error_feedback(g: jax.Array, err: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize (g + carried error); the new residual feeds the next step."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize(corrected)
+    new_err = corrected - dequantize(q, scale)
+    return q, scale, new_err
+
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compress_tree(grads: Any, err_state: Any):
+    """Tree-wise quantize with error feedback.
+
+    Returns (q_tree int8, scale_tree, new_err_state).  The caller reduces
+    q_tree across the slow axis and dequantizes (see collectives)."""
+    qs, scales, errs = [], [], []
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = quantize_error_feedback(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, scales),
+            jax.tree.unflatten(treedef, errs))
+
+
+def decompress_tree(q_tree: Any, scale_tree: Any) -> Any:
+    return jax.tree.map(dequantize, q_tree, scale_tree)

@@ -1,0 +1,105 @@
+"""Train-step factory + loop.
+
+``make_train_step`` builds a jit-able (params, opt, batch) → (params,
+opt, metrics) function with optional remat and gradient accumulation
+(microbatch scan — the standard memory/compute trade for the train_4k
+shapes).  The same factory lowers under pjit for the dry-run meshes
+(launch/dryrun.py supplies in_shardings / out_shardings).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.engine.models import build_model
+from repro.training.checkpoint import (latest_checkpoint, load_checkpoint,
+                                       save_checkpoint)
+from repro.training.data import DataConfig, SyntheticLMData
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainerConfig:
+    remat: bool = True
+    grad_accum: int = 1             # microbatches per step
+    adamw: AdamWConfig = AdamWConfig()
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainerConfig
+                    ) -> Callable[[Any, Any, Dict[str, jax.Array]],
+                                  Tuple[Any, Any, Dict[str, jax.Array]]]:
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, remat=tcfg.remat)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.grad_accum > 1:
+            # split the global batch into microbatches and scan
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: x.reshape((tcfg.grad_accum,
+                                         x.shape[0] // tcfg.grad_accum)
+                                        + x.shape[1:]), b)
+
+            def acc_body(carry, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc_loss, acc_g = carry
+                return (acc_loss + loss,
+                        jax.tree.map(jnp.add, acc_g, grads)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), zeros), micro(batch))
+            loss = loss_sum / tcfg.grad_accum
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, om = adamw_update(tcfg.adamw, params, grads,
+                                             opt_state)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, tcfg: TrainerConfig, data_cfg: DataConfig,
+               num_steps: int, ckpt_dir: Optional[str] = None,
+               ckpt_every: int = 50, log_every: int = 10,
+               seed: int = 0, resume: bool = True) -> Dict[str, Any]:
+    """Single-host training loop with checkpoint/restart."""
+    model = build_model(cfg)
+    data = SyntheticLMData(data_cfg)
+    step0 = 0
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params)
+    if ckpt_dir and resume:
+        latest = latest_checkpoint(ckpt_dir)
+        if latest:
+            step0, params, opt_state, _ = load_checkpoint(
+                latest, (params, opt_state))
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(step0, num_steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps - 1:
+            loss = float(metrics["loss"])
+            losses.append((step, loss))
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, params, opt_state)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, num_steps, params, opt_state)
+    return {"losses": losses, "params": params, "opt_state": opt_state,
+            "seconds": time.perf_counter() - t0}

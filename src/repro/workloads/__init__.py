@@ -1,0 +1,7 @@
+"""Paper workloads: minidb (PostgreSQL stand-in), synthetic datasets,
+tool operators, and the W1–W6 / W+ workflow library (Table 3)."""
+from repro.workloads.library import WORKFLOWS, build_workload
+from repro.workloads.minidb import MiniDB
+from repro.workloads.tools import ToolRuntime
+
+__all__ = ["WORKFLOWS", "build_workload", "MiniDB", "ToolRuntime"]

@@ -1,0 +1,106 @@
+"""Halo core: parser decoupling, consolidation, DP solver vs oracle."""
+import pytest
+
+from repro.core import (BranchAndBoundOracle, CostModel, EpochDPSolver,
+                        HARDWARE, PAPER_MODELS, SCHEDULERS, SolverConfig,
+                        consolidate, optimality_score, parse_workflow)
+from repro.core.parser import render
+
+WF = {
+    "name": "t",
+    "nodes": [
+        {"id": "a", "type": "llm", "model": "qwen3-14b",
+         "prompt": "Use {{sql: SELECT x FROM t WHERE k='$p'}} for $p",
+         "est_prompt_tokens": 64},
+        {"id": "b", "type": "llm", "model": "qwen3-32b",
+         "prompt": "Refine ${a} via {{http: GET /x?q=$p}}",
+         "est_prompt_tokens": 96},
+        {"id": "c", "type": "llm", "model": "qwen3-14b",
+         "prompt": "Check ${a}", "est_prompt_tokens": 64},
+        {"id": "d", "type": "llm", "model": "qwen3-32b",
+         "prompt": "Merge ${b} and ${c}", "est_prompt_tokens": 128},
+    ],
+}
+
+
+def test_parser_dependency_decoupling():
+    g = parse_workflow(WF)
+    assert "a__sql0" in g.nodes and g.nodes["a__sql0"].op == "sql"
+    assert "b__http0" in g.nodes
+    assert ("a__sql0", "a") in g.edges
+    assert ("a", "b") in g.edges and ("a", "c") in g.edges
+    assert "${a__sql0}" in g.nodes["a"].prompt      # directive replaced
+    dag = g.llm_dag()
+    assert set(dag.node_ids) == {"a", "b", "c", "d"}
+    assert ("a", "b") in dag.edges and ("c", "d") in dag.edges
+
+
+def test_render_binding_and_upstream():
+    out = render("Use ${a} for $p and $pp", {"p": "X", "pp": "Y"},
+                 {"a": "RESULT"})
+    assert out == "Use RESULT for X and Y"
+
+
+def test_consolidation_influence_dedup():
+    g = parse_workflow(WF)
+    cons = consolidate(g, [{"p": "x"}, {"p": "y"}, {"p": "x"}])
+    # node a: influenced by p only -> 2 unique of 3
+    assert cons.macro("a").n_unique == 2
+    assert cons.macro("a__sql0").n_unique == 2
+    assert cons.macro("d").n_unique == 2            # transitive influence
+    assert cons.macro("a").n_logical == 3
+
+
+def _cm(g, n=4):
+    return CostModel(g, HARDWARE["h200"], PAPER_MODELS,
+                     batch_sizes={nid: n for nid in g.nodes})
+
+
+def test_dp_plan_valid_and_beats_baselines():
+    g = parse_workflow(WF)
+    dag = g.llm_dag()
+    cm = _cm(g)
+    plan = EpochDPSolver(dag, cm, SolverConfig(num_workers=2)).solve()
+    plan.validate(dag)                              # raises on violation
+    for name, fn in SCHEDULERS.items():
+        base = fn(dag, _cm(g), 2, 0) if name == "random" else fn(dag, _cm(g), 2)
+        assert plan.predicted_cost <= base.predicted_cost + 1e-6, name
+
+
+def test_dp_matches_oracle_colocation():
+    g = parse_workflow(WF)
+    dag = g.llm_dag()
+    cm = _cm(g)
+    plan = EpochDPSolver(dag, cm, SolverConfig(num_workers=2)).solve()
+    res = BranchAndBoundOracle(dag, cm, 2, time_limit=20).solve()
+    opt_halo = optimality_score(plan, res.plan, 2)
+    opt_rand = optimality_score(SCHEDULERS["random"](dag, _cm(g), 2, 3),
+                                res.plan, 2)
+    assert opt_halo >= opt_rand
+    assert opt_halo >= 0.5
+    # DP cost is close to the oracle makespan-optimal schedule
+    assert plan.predicted_cost <= 1.5 * res.makespan + 1.0
+
+
+def test_model_switch_cost_drives_chaining():
+    """Same-model chains must be cheaper than alternating models."""
+    from repro.core.state import WorkerContext
+    g = parse_workflow(WF)
+    cm = _cm(g)
+    ctx = WorkerContext()
+    t_a, ctx_a = cm.t_node("a", ctx, frozenset())
+    # running c (same model qwen3-14b) after a: no switch cost
+    t_c_after_a, _ = cm.t_node("c", ctx_a, frozenset({"a"}))
+    t_c_fresh, _ = cm.t_node("c", WorkerContext(), frozenset({"a"}))
+    assert t_c_after_a < t_c_fresh
+
+
+def test_prefix_discount_reduces_cost():
+    g = parse_workflow(WF)
+    cm = _cm(g)
+    from repro.core.state import WorkerContext
+    warm = WorkerContext(model="qwen3-32b", warm=("b",))
+    cold = WorkerContext(model="qwen3-32b", warm=())
+    t_warm = cm.t_infer(g.nodes["d"], warm, ["b", "c"])
+    t_cold = cm.t_infer(g.nodes["d"], cold, ["b", "c"])
+    assert t_warm < t_cold

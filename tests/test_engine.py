@@ -1,0 +1,98 @@
+"""Engine: shared-prefix generation equivalence, coalescing, paged cache."""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.engine.engine import InferenceEngine
+from repro.engine.kvcache import PagedKVCache
+from repro.engine.tokenizer import detokenize, tokenize
+
+
+def test_shared_prefix_equals_naive_transformer():
+    cfg = get_smoke("qwen3-1.7b")
+    prefix = list(range(10, 20))
+    prompts = [prefix + [30 + i] for i in range(4)]
+    o1 = InferenceEngine(cfg, seed=0, enable_prefix_sharing=True).generate(
+        prompts, max_new_tokens=6)
+    o2 = InferenceEngine(cfg, seed=0, enable_prefix_sharing=False).generate(
+        prompts, max_new_tokens=6)
+    assert o1 == o2
+
+
+def test_shared_prefix_saves_prefill_work():
+    cfg = get_smoke("qwen3-1.7b")
+    prefix = list(range(10, 26))
+    prompts = [prefix + [40 + i] for i in range(4)]
+    eng = InferenceEngine(cfg, seed=0, enable_prefix_sharing=True)
+    eng.generate(prompts, max_new_tokens=2)
+    assert eng.stats.prefill_tokens_saved == len(prefix) * 3
+    assert eng.stats.prefill_tokens < 4 * len(prompts[0])
+
+
+def test_engine_coalesces_exact_duplicates():
+    cfg = get_smoke("llama3.2-3b")
+    p = list(range(5, 15))
+    eng = InferenceEngine(cfg, seed=0)
+    outs = eng.generate([p, p, p], max_new_tokens=4)
+    assert outs[0] == outs[1] == outs[2]
+    assert eng.stats.coalesced_requests == 2
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "xlstm-350m"])
+def test_recurrent_state_snapshot_sharing_close(arch):
+    """Recurrent archs share state snapshots; logits match to fp noise."""
+    import jax, jax.numpy as jnp
+    from repro.engine.models import build_model
+    cfg = get_smoke(arch).replace(dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.arange(10, 24, dtype=jnp.int32)[None, :]
+    full, _ = model.prefill(params, toks)
+    lg, cache = model.prefill(params, toks[:, :10])
+    cache = model.extend_cache(cache, 8)
+    for t in range(10, 14):
+        lg, cache = model.decode_step(params, toks[:, t], cache)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_paged_kv_cache_share_and_cow():
+    pc = PagedKVCache(num_layers=2, num_pages=16, page_size=4, kv_heads=2,
+                      head_dim=8)
+    rng = np.random.default_rng(0)
+    k, v = rng.normal(size=(2, 10, 2, 8)), rng.normal(size=(2, 10, 2, 8))
+    s1 = pc.add_sequence(k, v)
+    gk, gv = pc.gather(s1)
+    np.testing.assert_allclose(gk, k)
+    # share the first 2 full pages (8 tokens)
+    k2, v2 = rng.normal(size=(2, 5, 2, 8)), rng.normal(size=(2, 5, 2, 8))
+    s2 = pc.add_sequence(k2, v2, shared_from=s1, shared_len=8)
+    gk2, _ = pc.gather(s2)
+    np.testing.assert_allclose(gk2[:, :8], k[:, :8])
+    np.testing.assert_allclose(gk2[:, 8:13], k2)
+    assert pc.tokens_reused == 8
+    # appending to s2 must not corrupt s1 (copy-on-write partial pages)
+    pc.append_token(s2, np.ones((2, 2, 8)), np.ones((2, 2, 8)))
+    np.testing.assert_allclose(pc.gather(s1)[0], k)
+    pc.free_sequence(s1)
+    pc.free_sequence(s2)
+    assert pc.pages_in_use == 0
+
+
+def test_paged_cache_oom_raises():
+    pc = PagedKVCache(num_layers=1, num_pages=2, page_size=4, kv_heads=1,
+                      head_dim=4)
+    rng = np.random.default_rng(0)
+    pc.add_sequence(rng.normal(size=(1, 8, 1, 4)),
+                    rng.normal(size=(1, 8, 1, 4)))
+    with pytest.raises(MemoryError):
+        pc.add_sequence(rng.normal(size=(1, 8, 1, 4)),
+                        rng.normal(size=(1, 8, 1, 4)))
+
+
+def test_tokenizer_deterministic_roundtrippable():
+    t1 = tokenize("revenue dropped in us market", 5000)
+    t2 = tokenize("revenue dropped in us market", 5000)
+    assert t1 == t2
+    assert t1 != tokenize("revenue dropped in eu market", 5000)
+    assert detokenize(t1) == detokenize(t2)

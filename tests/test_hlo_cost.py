@@ -1,0 +1,78 @@
+"""HLO cost analyzer: while-trip accounting, dot flops, collectives."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.launch.hlo_cost import HloAnalyzer, analyze_hlo
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_body_trip_multiplication():
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+
+    def scan10(a):
+        def body(c, _):
+            return c @ c, None
+        out, _ = lax.scan(body, a, None, length=10)
+        return out
+
+    def one(a):
+        return a @ a
+
+    r10 = analyze_hlo(_compile_text(scan10, x))
+    r1 = analyze_hlo(_compile_text(one, x))
+    assert abs(r10["flops"] / r1["flops"] - 10.0) < 0.01
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    r = analyze_hlo(_compile_text(lambda x, y: x @ y, a, b))
+    assert r["flops"] == 2 * 128 * 256 * 64
+
+
+def test_nested_scan_multiplies():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def nested(a):
+        def inner(c, _):
+            return c @ c, None
+
+        def outer(c, _):
+            c, _ = lax.scan(inner, c, None, length=3)
+            return c, None
+        out, _ = lax.scan(outer, a, None, length=4)
+        return out
+
+    r = analyze_hlo(_compile_text(nested, x))
+    one = analyze_hlo(_compile_text(lambda a: a @ a, x))
+    assert abs(r["flops"] / one["flops"] - 12.0) < 0.05
+
+
+def test_wrapped_line_merging():
+    text = """HloModule m
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %p = f32[4]{0} parameter(0)
+  %w = (s32[], f32[4]{0},
+    f32[8]{0}) tuple(%p)
+}
+"""
+    an = HloAnalyzer(text)
+    assert an.entry == "main"
+    kinds = [o.kind for o in an.comps["main"]]
+    assert "tuple" in kinds        # the wrapped tuple line parsed as one op
+
+
+def test_score_class_separation():
+    # rank-4 f32 with a score-dim trailing axis goes to vmem_class
+    def attn_like(q, k):
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k)   # (B,H,Sq,Skv)
+        return s.sum()
+    q = jax.ShapeDtypeStruct((2, 64, 4, 32), jnp.float32)
+    k = jax.ShapeDtypeStruct((2, 2048, 4, 32), jnp.float32)
+    r = analyze_hlo(_compile_text(attn_like, q, k), score_dims={2048})
+    assert r["vmem_class_bytes"] > 0
+    assert r["bytes"] < r["bytes_xla_path"]

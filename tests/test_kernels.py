@@ -1,0 +1,110 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref, lse_combine
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rglru_scan.ops import linear_scan
+from repro.kernels.rglru_scan.ref import linear_scan_ref
+from repro.kernels.shared_prefix_attention.ops import shared_prefix_attention
+from repro.kernels.shared_prefix_attention.ref import \
+    shared_prefix_attention_ref
+
+RNG = np.random.default_rng(7)
+
+
+def _mk(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,Hkv,Dh", [
+    (1, 32, 32, 2, 2, 8),          # MHA
+    (2, 64, 64, 4, 2, 16),         # GQA
+    (2, 16, 64, 8, 1, 32),         # MQA, cross-length
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 24])
+def test_flash_attention_sweep(B, Sq, Skv, H, Hkv, Dh, dtype, window):
+    q, k, v = _mk((B, Sq, H, Dh), dtype), _mk((B, Skv, Hkv, Dh), dtype), \
+        _mk((B, Skv, Hkv, Dh), dtype)
+    qp = jnp.broadcast_to(jnp.arange(Skv - Sq, Skv, dtype=jnp.int32),
+                          (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+    out = flash_attention(q, k, v, q_positions=qp, kv_positions=kp,
+                          causal=True, window=window, block_q=16,
+                          block_kv=16, interpret=True)
+    ref = flash_attention_ref(q, k, v, q_positions=qp, kv_positions=kp,
+                              causal=True, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,T,H,Hkv,Dh", [
+    (2, 64, 4, 2, 16), (1, 32, 8, 8, 8), (3, 48, 6, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, T, H, Hkv, Dh, dtype):
+    q = _mk((B, H, Dh), dtype)
+    k, v = _mk((B, T, Hkv, Dh), dtype), _mk((B, T, Hkv, Dh), dtype)
+    qp = jnp.asarray(RNG.integers(T // 2, T, size=(B,)), jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    kp = jnp.where(kp <= qp[:, None], kp, -1)
+    out = decode_attention(q, k, v, q_positions=qp, kv_positions=kp,
+                           block_t=16, interpret=True)
+    ref = decode_attention_ref(q, k, v, q_positions=qp, kv_positions=kp)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_decode_attention_lse_split_invariance():
+    """Splitting the KV into chunks + lse_combine == one full pass."""
+    B, T, H, Hkv, Dh = 2, 64, 4, 2, 16
+    q = _mk((B, H, Dh))
+    k, v = _mk((B, T, Hkv, Dh)), _mk((B, T, Hkv, Dh))
+    qp = jnp.full((B,), T - 1, jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    full = decode_attention_ref(q, k, v, q_positions=qp, kv_positions=kp)
+    parts = []
+    for lo in range(0, T, 16):
+        parts.append(decode_attention_ref(
+            q, k[:, lo:lo+16], v[:, lo:lo+16], q_positions=qp,
+            kv_positions=kp[:, lo:lo+16], return_lse=True))
+    merged = lse_combine(parts)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("P,Ts", [(32, 16), (64, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_shared_prefix_attention_sweep(P, Ts, dtype):
+    B, H, Hkv, Dh = 2, 4, 2, 16
+    q = _mk((B, H, Dh), dtype)
+    pk, pv = _mk((P, Hkv, Dh), dtype), _mk((P, Hkv, Dh), dtype)
+    sk, sv = _mk((B, Ts, Hkv, Dh), dtype), _mk((B, Ts, Hkv, Dh), dtype)
+    qp = jnp.full((B,), P + Ts - 1, jnp.int32)
+    sp = P + jnp.broadcast_to(jnp.arange(Ts, dtype=jnp.int32), (B, Ts))
+    out = shared_prefix_attention(q, pk, pv, sk, sv, q_positions=qp,
+                                  suffix_positions=sp, block_p=16,
+                                  block_t=8, interpret=True)
+    ref = shared_prefix_attention_ref(q, pk, pv, sk, sv, q_positions=qp,
+                                      suffix_positions=sp)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,D", [(2, 32, 64), (4, 64, 32), (1, 16, 128)])
+def test_rglru_scan_sweep(B, S, D):
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, size=(B, S, D)), jnp.float32)
+    b = _mk((B, S, D))
+    out = linear_scan(a, b, block_b=2, block_s=8, block_d=32, interpret=True)
+    ref = linear_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import string
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coalesce import CoalesceTable, canonical_signature
+from repro.core.cost_model import CostModel, HARDWARE, PAPER_MODELS
+from repro.core.graphspec import GraphSpec, NodeSpec, NodeType
+from repro.core.plan import ExecutionPlan
+from repro.core.solver import EpochDPSolver, SolverConfig
+from repro.engine.prefix_tree import RadixPrefixTree, batch_shared_prefix
+from repro.kernels.decode_attention.ref import decode_attention_ref, lse_combine
+
+# ---------------------------------------------------------------------------
+# coalescing
+# ---------------------------------------------------------------------------
+
+sql_text = st.text(alphabet=string.ascii_letters + " ='0123456789_",
+                   min_size=1, max_size=60)
+
+
+@given(sql_text, st.integers(0, 8), st.integers(0, 8))
+def test_signature_whitespace_invariance(body, pre, post):
+    a = canonical_signature("sql", body)
+    b = canonical_signature("sql", " " * pre + " ".join(body.split())
+                            + " " * post + ";")
+    assert a == b
+
+
+@given(st.lists(st.sampled_from(["q1", "q2", "q3", "q4"]),
+                min_size=1, max_size=30))
+def test_coalesce_physical_equals_unique(reqs):
+    tab = CoalesceTable()
+    sigs = set()
+    for i, r in enumerate(reqs):
+        sig, _, _ = tab.register("sql", f"SELECT {r}", (i, "n"))
+        sigs.add(sig)
+    assert tab.physical_executions == len(sigs)
+    assert tab.logical_requests == len(reqs)
+    # completing every physical task fans out to every logical requester
+    total = sum(len(tab.complete(s, "r")) for s in list(tab.pending))
+    assert total == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# prefix tree
+# ---------------------------------------------------------------------------
+
+tokens = st.lists(st.integers(0, 50), min_size=0, max_size=24)
+
+
+@given(tokens, tokens)
+def test_radix_match_is_common_prefix(a, b):
+    tree = RadixPrefixTree()
+    tree.insert(a)
+    n, _ = tree.match(b)
+    brute = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        brute += 1
+    assert n == brute
+
+
+@given(st.lists(tokens, min_size=1, max_size=8))
+def test_batch_shared_prefix_is_prefix_of_all(prompts):
+    p = batch_shared_prefix(prompts)
+    for x in prompts:
+        assert list(x[:len(p)]) == p
+
+
+# ---------------------------------------------------------------------------
+# LSE combine == monolithic softmax for ANY split
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4), st.lists(st.integers(1, 3), min_size=1, max_size=4),
+       st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_lse_split_invariance(B, chunk_sizes, seed):
+    rng = np.random.default_rng(seed)
+    Hkv, G, Dh = 2, 2, 8
+    T = 8 * sum(chunk_sizes)
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, Hkv, Dh)), jnp.float32)
+    qp = jnp.full((B,), T - 1, jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    full = decode_attention_ref(q, k, v, q_positions=qp, kv_positions=kp)
+    parts, lo = [], 0
+    for c in chunk_sizes:
+        hi = lo + 8 * c
+        parts.append(decode_attention_ref(
+            q, k[:, lo:hi], v[:, lo:hi], q_positions=qp,
+            kv_positions=kp[:, lo:hi], return_lse=True))
+        lo = hi
+    np.testing.assert_allclose(np.asarray(lse_combine(parts)),
+                               np.asarray(full), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# solver on random DAGs: plans are always valid & complete
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(2, 6))
+    models = ["qwen3-14b", "qwen3-32b", "gpt-oss-20b"]
+    nodes = [NodeSpec(id=f"n{i}", type=NodeType.LLM,
+                      model=models[draw(st.integers(0, 2))],
+                      prompt=f"p{i}", est_prompt_tokens=64,
+                      max_new_tokens=16)
+             for i in range(n)]
+    edges = []
+    for j in range(1, n):
+        for i in range(j):
+            if draw(st.booleans()):
+                edges.append((f"n{i}", f"n{j}"))
+    return GraphSpec("rand", nodes, edges)
+
+
+@given(random_dag(), st.integers(1, 3))
+@settings(max_examples=20, deadline=None)
+def test_dp_solver_valid_on_random_dags(graph, workers):
+    dag = graph.llm_dag()
+    cm = CostModel(graph, HARDWARE["h200"], PAPER_MODELS,
+                   batch_sizes={v: 2 for v in graph.nodes})
+    plan = EpochDPSolver(dag, cm, SolverConfig(num_workers=workers)).solve()
+    plan.validate(dag)                               # precedence + coverage
+    seen = [v for e in plan.epochs for c in e.components for v in c]
+    assert sorted(seen) == sorted(dag.node_ids)      # exactly once
+
+
+# ---------------------------------------------------------------------------
+# cost model monotonicity
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 512), st.integers(1, 512))
+@settings(max_examples=30, deadline=None)
+def test_infer_cost_monotone_in_batch(b1, b2):
+    from repro.core.state import WorkerContext
+    spec = NodeSpec(id="x", type=NodeType.LLM, model="qwen3-14b",
+                    prompt="p", est_prompt_tokens=128, max_new_tokens=32)
+    g = GraphSpec("g", [spec], [])
+    cm = CostModel(g, HARDWARE["h200"], PAPER_MODELS)
+    ctx = WorkerContext(model="qwen3-14b")
+    cm.batch_sizes["x"] = min(b1, b2)
+    lo = cm.t_infer(spec, ctx, [])
+    cm.batch_sizes["x"] = max(b1, b2)
+    hi = cm.t_infer(spec, ctx, [])
+    assert lo <= hi + 1e-12

@@ -1,0 +1,117 @@
+"""Runtime: simulator behaviour + real-processor semantics (fast paths)."""
+import pytest
+
+from repro.core import (CostModel, EpochDPSolver, HARDWARE, PAPER_MODELS,
+                        SolverConfig, consolidate, opwise_plan)
+from repro.runtime import (OpWiseSimulator, OnlineSimulator, RealProcessor,
+                           SimulatedProcessor)
+from repro.runtime.checkpoint import load_batch_state, save_batch_state
+from repro.runtime.coordinator import BatchState
+from repro.workloads import build_workload
+from repro.workloads.datagen import build_database
+from repro.workloads.tools import ToolRuntime
+
+
+def _setup(wname="w1", n=64):
+    g, bindings, dbname = build_workload(wname, n, seed=0)
+    cons = consolidate(g, bindings)
+    return g, cons, bindings, dbname
+
+
+def _cm(g, cons, logical=False, **kw):
+    b = {}
+    for nid in g.nodes:
+        m = cons.macro(nid)
+        b[nid] = m.n_logical if (g.nodes[nid].is_llm() or logical) \
+            else m.n_unique
+    return CostModel(g, HARDWARE["h200"], PAPER_MODELS, batch_sizes=b, **kw)
+
+
+def _plan(g, cons, workers=3):
+    return EpochDPSolver(g.llm_dag(), _cm(g, cons),
+                         SolverConfig(num_workers=workers)).solve()
+
+
+def test_simulator_completes_all_nodes():
+    g, cons, _, _ = _setup()
+    plan = _plan(g, cons)
+    rep = SimulatedProcessor(g, _cm(g, cons), 3).run(cons, plan)
+    llm_nodes = {r.node for r in rep.records if r.kind == "llm"}
+    tool_nodes = {r.node for r in rep.records if r.kind == "tool"}
+    assert llm_nodes == set(g.llm_nodes())
+    assert tool_nodes == set(g.tool_nodes())
+    assert rep.makespan > 0
+
+
+def test_coalescing_reduces_tool_work():
+    g, cons, _, _ = _setup()
+    plan = _plan(g, cons)
+    with_c = SimulatedProcessor(g, _cm(g, cons), 3).run(cons, plan)
+    without = SimulatedProcessor(g, _cm(g, cons, logical=True), 3,
+                                 coalescing=False).run(cons, plan)
+    assert with_c.coalesce_stats["tool_physical"] < \
+        without.coalesce_stats["tool_physical"]
+    assert with_c.makespan < without.makespan
+
+
+def test_opwise_slower_than_halo():
+    g, cons, _, _ = _setup("w1", 256)
+    plan = _plan(g, cons)
+    halo = SimulatedProcessor(g, _cm(g, cons), 3).run(cons, plan)
+    ow = OpWiseSimulator(g, _cm(g, cons), 3).run(cons)
+    assert ow.makespan > halo.makespan
+
+
+def test_simulated_worker_failure_completes():
+    g, cons, _, _ = _setup()
+    plan = _plan(g, cons)
+    sp = SimulatedProcessor(g, _cm(g, cons), 3)
+    sp.sim.add_failure(1.0, 1)
+    rep = sp.run(cons, plan)
+    assert {r.node for r in rep.records if r.kind == "llm"} == \
+        set(g.llm_nodes())
+    assert "failed_worker_1" in rep.extra
+
+
+def test_online_throughput_positive():
+    g, cons, bindings, _ = _setup("w+", 32)
+    plan = _plan(g, cons)
+    batches = []
+    for lo in range(0, 32, 8):
+        cb = consolidate(g, bindings[lo:lo + 8])
+        batches.append((cb, plan))
+    rep = OnlineSimulator(g, _cm(g, cons), 3).run(batches, 2.0)
+    assert rep.throughput_qps() > 0
+    assert len(rep.query_completion) == 32
+
+
+def test_batch_state_checkpoint_roundtrip(tmp_path):
+    g, cons, _, _ = _setup("w+", 4)
+    st = BatchState(g, 4)
+    for q in range(4):
+        st.set_result(q, "draft", f"r{q}")
+    p = str(tmp_path / "ck.json")
+    save_batch_state(st, p)
+    st2 = BatchState(g, 4)
+    n = load_batch_state(st2, p)
+    assert n == 4 and st2.results == st.results
+    assert "draft" in st2.macro_done
+
+
+@pytest.mark.slow
+def test_real_processor_semantics_wplus():
+    """Real engines + coalescing on the pure-LLM chain: outputs invariant
+    to plan choice and coalescing (semantics preserving)."""
+    from repro.configs import get_smoke
+    g, cons, _, dbname = _setup("w+", 3)
+    models = {m: get_smoke("qwen3-1.7b").replace(name=m)
+              for m in ("qwen3-14b", "qwen3-32b", "gpt-oss-20b")}
+    plan = _plan(g, cons, workers=2)
+    r1 = RealProcessor(g, models, ToolRuntime(build_database(dbname),
+                                              latency_scale=0.0),
+                       num_workers=2, decode_cap=3).run(cons, plan)
+    ow = opwise_plan(g.llm_dag(), _cm(g, cons), 2)
+    r2 = RealProcessor(g, models, ToolRuntime(build_database(dbname),
+                                              latency_scale=0.0),
+                       num_workers=2, decode_cap=3).run(cons, ow)
+    assert r1.extra["results"] == r2.extra["results"]
