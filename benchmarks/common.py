@@ -14,7 +14,7 @@ Baseline systems are modeled per §6.1:
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.core import (CostModel, EpochDPSolver, HARDWARE, PAPER_MODELS,
                         SolverConfig, consolidate, heft_plan, random_plan,
@@ -115,3 +115,44 @@ BASELINES = {
     "agentscope": run_agentscope,
     "parrot": run_parrot,
 }
+
+
+# ---------------------------------------------------------------------------
+# real-engine mode (tiny smoke models behind the continuous-batching engine)
+# ---------------------------------------------------------------------------
+
+def smoke_models_for(g: GraphSpec):
+    """Map every model the graph names onto a tiny smoke config so the
+    real continuous-batching engines can run it on CPU."""
+    from repro.configs import get_smoke
+    names = {g.nodes[n].model for n in g.llm_nodes()}
+    return {m: get_smoke("qwen3-1.7b").replace(name=m) for m in names}
+
+
+def make_real_processor(workload="w+", n=6, workers=2, decode_cap=4,
+                        seed=0):
+    """(processor, graph, cons, bindings, plan) for real-engine runs."""
+    from repro.runtime import RealProcessor
+    from repro.workloads.datagen import build_database
+    from repro.workloads.tools import ToolRuntime
+    g, bindings, dbname = build_workload(workload, n, seed=seed)
+    cons = consolidate(g, bindings)
+    plan = halo_plan(g, cons, workers)
+    proc = RealProcessor(
+        g, smoke_models_for(g),
+        ToolRuntime(build_database(dbname), latency_scale=0.0),
+        num_workers=workers, decode_cap=decode_cap, seed=seed)
+    return proc, g, cons, bindings, plan
+
+
+def engine_stat_cols(rep) -> Dict[str, float]:
+    """The continuous-batching engine counters a RunReport carries."""
+    x = rep.extra
+    return {
+        "prefill_tokens_saved": x.get("prefill_tokens_saved", 0),
+        "kv_pages_shared": x.get("pages_shared", 0),
+        "kv_tokens_reused": x.get("tokens_reused", 0),
+        "admission_waves": x.get("admission_waves", 0),
+        "peak_batch": x.get("peak_batch", 0),
+        "coalesced_requests": x.get("coalesced_requests", 0),
+    }

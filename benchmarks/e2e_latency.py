@@ -1,14 +1,22 @@
-"""Fig. 6 — end-to-end batch latency, W1–W6, Halo vs baselines."""
+"""Fig. 6 — end-to-end batch latency, W1–W6, Halo vs baselines.
+
+``real_rows`` additionally executes the continuous-batching engine for
+real (tiny smoke models on CPU) and reports its paged-KV serving
+counters — pages shared, tokens reused, admission waves — next to the
+makespan.
+"""
 from __future__ import annotations
 
 from typing import Dict, List
 
-from benchmarks.common import (BASELINES, run_vllm_serial, setup)
+from benchmarks.common import (BASELINES, engine_stat_cols,
+                               make_real_processor, run_vllm_serial, setup)
 
 WORKLOADS = ("w1", "w2", "w3", "w4", "w5", "w6")
 
 
-def run(n_queries: int = 1024, workers: int = 3) -> List[Dict]:
+def run(n_queries: int = 1024, workers: int = 3,
+        include_real: bool = False) -> List[Dict]:
     rows = []
     for w in WORKLOADS:
         g, cons, _ = setup(w, n_queries)
@@ -26,9 +34,22 @@ def run(n_queries: int = 1024, workers: int = 3) -> List[Dict]:
                      "makespan_s": round(serial.makespan, 2),
                      "speedup_vs_halo": round(serial.makespan /
                                               max(halo_t, 1e-9), 2)})
+    if include_real:
+        rows.extend(real_rows())
     return rows
 
 
+def real_rows(n_queries: int = 6, workers: int = 2,
+              decode_cap: int = 4) -> List[Dict]:
+    """Real continuous-batching engines on the pure-LLM chain (w+)."""
+    proc, _, cons, _, plan = make_real_processor(
+        "w+", n_queries, workers, decode_cap)
+    rep = proc.run(cons, plan)
+    return [{"workload": "w+", "system": "halo-real",
+             "makespan_s": round(rep.makespan, 2),
+             **engine_stat_cols(rep)}]
+
+
 if __name__ == "__main__":
-    for r in run(256):
+    for r in run(256, include_real=True):
         print(r)

@@ -4,8 +4,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from benchmarks.common import halo_plan, make_cm, run_opwise, setup
-from repro.core import EpochDPSolver, SolverConfig
+from benchmarks.common import halo_plan, make_cm, setup
 from repro.core.graphspec import GraphSpec
 from repro.runtime import OpWiseSimulator, SimulatedProcessor
 

@@ -19,8 +19,8 @@ for HTTP / local functions, continuously calibrated online.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core.graphspec import GraphSpec, NodeSpec
 from repro.core.state import SystemState, WorkerContext

@@ -9,8 +9,8 @@ control dependencies.  The optimizer plans over the LLM-only projection
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field, replace
-from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, FrozenSet, Iterable, List, Sequence, Tuple
 
 
 class NodeType(str, enum.Enum):

@@ -8,7 +8,7 @@ decisions, invariant to worker relabeling.
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List, Set, Tuple
+from typing import Set, Tuple
 
 from repro.core.plan import ExecutionPlan
 

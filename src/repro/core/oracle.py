@@ -17,7 +17,7 @@ from repro.core.cost_model import CostModel
 from repro.core.graphspec import LLMDag
 from repro.core.plan import ExecutionPlan
 from repro.core.schedulers import _continuous_to_plan
-from repro.core.state import SystemState, WorkerContext
+from repro.core.state import WorkerContext
 
 
 @dataclass

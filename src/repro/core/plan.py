@@ -7,7 +7,7 @@ sequences (for the Opt(S) metric) and validates precedence.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 from repro.core.graphspec import LLMDag
 

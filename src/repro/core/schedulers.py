@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import random
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 from repro.core.cost_model import CostModel
 from repro.core.graphspec import LLMDag

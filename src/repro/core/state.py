@@ -7,8 +7,8 @@ hashable so (D, H) keys the memo table.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import FrozenSet, Optional, Tuple
+from dataclasses import dataclass
+from typing import FrozenSet, Tuple
 
 # Compact representation: keep only the most recent K lineage ids.  K=2
 # keeps the DP state space tractable (prefix discounts look one hop back:

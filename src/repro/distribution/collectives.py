@@ -14,7 +14,6 @@ int8 quantize (+error feedback) → int32 psum over "pod" → dequantize.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

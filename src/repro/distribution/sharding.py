@@ -20,8 +20,6 @@ import re
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Sequence, Tuple
 
-import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec

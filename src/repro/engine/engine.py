@@ -1,73 +1,185 @@
-"""InferenceEngine — the per-worker LLM serving engine Halo schedules.
+"""InferenceEngine — continuous batching over a paged KV cache.
 
-This is the pure-JAX stand-in for a vLLM instance (DESIGN.md §2):
+This is the pure-JAX stand-in for a vLLM instance (DESIGN.md §2), rebuilt
+around slot-based continuous batching (the Processor's "adaptive
+batching, KV-cache sharing and migration"):
 
-* continuous batching: requests are grouped by prompt length, prefilled
-  as a padded batch, and decoded in lock-step slots;
-* prefix sharing: when a whole group shares a prompt prefix (the normal
-  case for Halo's consolidated template batches), the prefix is
-  prefilled ONCE (batch 1) and its cache is tiled across the group —
-  the compute- and memory-level realization of KV-cache sharing
-  (the Pallas shared_prefix_attention kernel is the TPU analogue at the
-  attention level; this path is its engine-level counterpart);
-* exact-duplicate memoization: identical (prompt, decode-params) calls
-  inside one batch run once (request coalescing at the engine edge);
-* stateful context: resident params (model switch cost) + a radix tree
-  of warm prefixes (Halo's ``u_w`` signature).
+* a persistent engine loop owns a fixed-capacity decode batch; requests
+  are *submitted* into it (``submit()`` returns a handle, ``generate()``
+  is submit-then-wait) and are admitted mid-decode — prefill for new
+  arrivals is interleaved between decode steps, so a request never waits
+  for the running batch to drain;
+* variable-length prompts coexist in one batch via per-row lengths and
+  attention masking — there is no group-by-prompt-length step and no
+  dense cache tiling;
+* for full-attention transformers the ONLY KV store is the refcounted
+  ``PagedKVCache``: prefill writes pages, every decode step appends one
+  token's KV per row, and the dense batch the model decodes over is a
+  materialized view gathered from pages whenever the batch composition
+  changes.  Prompt prefixes found in the ``RadixPrefixTree`` are served
+  by aliasing the donor's pages (copy-on-write guards partial pages) and
+  chunk-prefilling only the unseen suffix;
+* recurrent / ring-buffer families (ssm, hybrid, audio, SWA) have no
+  token-paged KV; the same scheduler batches their per-sequence state as
+  dense rows (split/stacked via ``cache_batch_axes``);
+* exact-duplicate (prompt, decode-params) requests are coalesced against
+  the in-flight batch (per-request sampling streams are deterministic,
+  so duplicates are provably identical at any temperature);
+* outputs are bitwise-identical at temperature 0 regardless of admission
+  timing: rows are computed independently and masked padding contributes
+  exact zeros.
 
 All numerics run on CPU with tiny smoke configs in tests; the same code
 lowers under pjit for the dry-run meshes.
 """
 from __future__ import annotations
 
+import threading
 import time
+import zlib
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.engine.kvcache import PagedKVCache
 from repro.engine.models import build_model
-from repro.engine.prefix_tree import RadixPrefixTree, batch_shared_prefix
+from repro.engine.prefix_tree import RadixPrefixTree
 from repro.engine.sampling import sample
 
 
 @dataclass
 class EngineStats:
     prefill_tokens: int = 0
-    prefill_tokens_saved: int = 0        # via shared-prefix tiling
+    prefill_tokens_saved: int = 0        # tokens served from shared pages
     decode_tokens: int = 0
-    batches: int = 0
+    batches: int = 0                     # generate() calls
     coalesced_requests: int = 0
     model_loads: int = 0
     load_seconds: float = 0.0
     prefix_hits: int = 0
+    admission_waves: int = 0             # scheduler passes that admitted >=1
+    peak_batch: int = 0                  # max concurrent decode slots
+    pages_shared: int = 0                # mirrored from PagedKVCache
+    tokens_reused: int = 0               # mirrored from PagedKVCache
 
     def as_dict(self) -> Dict[str, float]:
         return dict(self.__dict__)
 
 
+class EngineError(RuntimeError):
+    pass
+
+
+class RequestHandle:
+    """Completion handle for one submitted request."""
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self._event = threading.Event()
+        self._result: Optional[List[int]] = None
+        self._error: Optional[BaseException] = None
+
+    def _fulfill(self, tokens: List[int]) -> None:
+        self._result = tokens
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float = 600.0) -> List[int]:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not finished "
+                               f"after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+
+@dataclass
+class _Request:
+    rid: int
+    prompt: tuple
+    extra: Dict[str, Any]
+    max_new: int
+    temperature: float
+    handle: RequestHandle
+
+
+@dataclass
+class _Slot:
+    req: _Request
+    seq_id: Optional[int] = None         # paged path
+    row: Any = None                      # dense path: B=1 cache pytree
+    length: int = 0                      # tokens whose KV is stored
+    last_token: int = -1
+    remaining: int = 0                   # samples still to produce
+    generated: List[int] = field(default_factory=list)
+    followers: List[RequestHandle] = field(default_factory=list)
+    rng: Optional[jax.Array] = None
+    view_ix: int = -1                    # row index in the current view
+
+
+class _Defer(Exception):
+    """Admission must wait for pages freed by in-flight retirements."""
+
+
 class InferenceEngine:
     """One engine instance == one Halo GPU-worker's resident model."""
 
-    MIN_SHARED_PREFIX = 4                # tokens; below this, tiling not worth it
+    MIN_SHARED_PREFIX = 4        # tokens; below this, page aliasing not worth it
+    _T_QUANTUM = 32              # decode-view time bucket (bounds recompiles)
 
     def __init__(self, cfg: ModelConfig, seed: int = 0, max_batch: int = 8,
-                 enable_prefix_sharing: bool = True):
+                 enable_prefix_sharing: bool = True, page_size: int = 8,
+                 num_pages: Optional[int] = None, max_seq_len: int = 512,
+                 max_warm_sequences: int = 32):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.seed = seed
         self.max_batch = max_batch
         self.enable_prefix_sharing = enable_prefix_sharing
+        self.page_size = page_size
+        self.max_seq_len = max_seq_len
+        self.max_warm_sequences = max_warm_sequences
         self.params = None               # lazy: loading == model-switch cost
         self.stats = EngineStats()
         self.warm_prefixes = RadixPrefixTree()
+        self._paged_layout = self.model.paged_kv_layout()
+        self.num_pages = num_pages or max(
+            64, 2 * max_batch * -(-max_seq_len // page_size))
+        self.kv: Optional[PagedKVCache] = None        # lazy host allocation
         # jitted steps (cached per input/cache shape signature)
         self._decode_jit = jax.jit(
             lambda p, tok, cache: self.model.decode_step(p, tok, cache))
         self._prefill_jit = jax.jit(
             lambda p, toks: self.model.prefill(p, toks))
+        if self._paged_layout:
+            self._chunk_prefill_jit = jax.jit(
+                lambda p, toks, cache: self.model.prefill_with_cache(
+                    p, toks, cache))
+        # scheduler state — owned by the loop thread
+        self._pending: "deque[_Request]" = deque()
+        self._active: List[_Slot] = []
+        self._warm: "OrderedDict[int, tuple]" = OrderedDict()  # seq -> prompt
+        self._view = None                # dense decode batch (device)
+        self._view_pad = 0
+        self._dirty = True
+        self._cv = threading.Condition()
+        self._loop_thread: Optional[threading.Thread] = None
+        self._stepping = False           # loop thread is inside _step()
+        self._shutdown = False
+        self._rid = 0
+        self._zero_key = jax.random.PRNGKey(0)
 
     # ---------------------------------------------------------------- weights
     def load(self) -> float:
@@ -83,8 +195,15 @@ class InferenceEngine:
         return dt
 
     def unload(self) -> None:
-        self.params = None
-        self.warm_prefixes = RadixPrefixTree()
+        """Drain in-flight work, then drop params, pages and warm prefixes."""
+        with self._cv:
+            self._wait_idle_locked(time.monotonic() + 600.0)
+            self.params = None
+            self.kv = None
+            self._warm.clear()
+            self.warm_prefixes = RadixPrefixTree()
+            self._view = None
+            self._dirty = True
 
     @property
     def loaded(self) -> bool:
@@ -93,10 +212,232 @@ class InferenceEngine:
     def param_bytes(self) -> int:
         return self.cfg.param_count() * 2          # bf16
 
-    # ---------------------------------------------------------------- helpers
-    def _tile_cache(self, cache, n: int):
-        axes = self.model.cache_batch_axes(cache)
-        return {k: jnp.repeat(v, n, axis=axes[k]) for k, v in cache.items()}
+    # ----------------------------------------------------------- submission
+    def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16,
+               temperature: float = 0.0,
+               extra: Optional[Dict[str, Any]] = None) -> RequestHandle:
+        """Enqueue one request into the persistent engine loop.
+
+        Returns immediately; the request joins the running decode batch at
+        the next admission pass (mid-decode if a batch is in flight).
+        """
+        if not self._paged_layout \
+                and len(prompt) + max_new_tokens > self.max_seq_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds engine max_seq_len ({self.max_seq_len}); dense-row "
+                f"caches would wrap and corrupt state")
+        with self._cv:
+            if self._shutdown:
+                raise EngineError("engine is shut down")
+            self._rid += 1
+            req = _Request(self._rid, tuple(int(t) for t in prompt),
+                           dict(extra or {}), max_new_tokens, temperature,
+                           RequestHandle(self._rid))
+            self._pending.append(req)
+            self._ensure_loop()
+            self._cv.notify_all()
+        return req.handle
+
+    def generate(self, prompts: Sequence[Sequence[int]], *,
+                 max_new_tokens: int = 16, temperature: float = 0.0,
+                 extras: Optional[List[Dict[str, Any]]] = None,
+                 ) -> List[List[int]]:
+        """Generate continuations for a batch of token prompts.
+
+        Submit-then-wait over the continuous-batching loop: the prompts
+        join whatever is already in flight.  Deterministic for
+        temperature=0.  Identical prompts are coalesced.  Returns one
+        generated-token list per prompt (same order).
+        """
+        extras = extras or [{} for _ in prompts]
+        handles = [self.submit(p, max_new_tokens=max_new_tokens,
+                               temperature=temperature, extra=e)
+                   for p, e in zip(prompts, extras)]
+        self.stats.batches += 1
+        return [h.result() for h in handles]
+
+    def _wait_idle_locked(self, deadline: float) -> None:
+        """Wait (holding _cv) until the loop is quiescent: nothing queued,
+        nothing in flight, and the loop thread is not inside _step().
+        While the caller keeps holding _cv afterwards, the loop cannot
+        start a new step, so engine state is safe to mutate."""
+        while self._pending or self._active or self._stepping:
+            if not self._cv.wait(timeout=min(1.0,
+                                             deadline - time.monotonic())):
+                if time.monotonic() >= deadline:
+                    raise TimeoutError("engine drain timed out")
+
+    def drain(self, timeout: float = 600.0) -> None:
+        """Block until no request is pending or in flight."""
+        with self._cv:
+            self._wait_idle_locked(time.monotonic() + timeout)
+
+    def release_warm(self, timeout: float = 600.0) -> None:
+        """Free every warm (retained-for-prefix-reuse) sequence's pages.
+
+        Waits for the engine to go idle first — the warm set and page
+        refcounts belong to the loop thread while work is in flight.
+        """
+        with self._cv:
+            self._wait_idle_locked(time.monotonic() + timeout)
+            for seq_id in list(self._warm):
+                self.kv.free_sequence(seq_id)
+            self._warm.clear()
+
+    def shutdown(self) -> None:
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify_all()
+        if self._loop_thread is not None:
+            self._loop_thread.join(timeout=10)
+
+    # ------------------------------------------------------------- the loop
+    def _ensure_loop(self) -> None:
+        if self._loop_thread is None or not self._loop_thread.is_alive():
+            self._loop_thread = threading.Thread(
+                target=self._run_loop, daemon=True,
+                name=f"engine-{self.cfg.name}")
+            self._loop_thread.start()
+
+    def _run_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._shutdown and not self._pending \
+                        and not self._active:
+                    self._cv.wait()
+                if self._shutdown:
+                    return
+                self._stepping = True
+            try:
+                self._step()
+            except BaseException as e:                  # engine-fatal
+                self._fail_all(e)
+            finally:
+                with self._cv:
+                    self._stepping = False
+                    self._cv.notify_all()
+
+    def _fail_all(self, err: BaseException) -> None:
+        with self._cv:
+            victims = list(self._pending)
+            self._pending.clear()
+            slots, self._active = self._active, []
+        for req in victims:
+            req.handle._fail(err)
+        for s in slots:
+            s.req.handle._fail(err)
+            for f in s.followers:
+                f._fail(err)
+            # return the slot's pages: a failed batch must not leak them
+            if self.kv is not None and s.seq_id in self.kv.sequences:
+                try:
+                    self.kv.free_sequence(s.seq_id)
+                except Exception:
+                    pass                        # pool corrupt > pool leaked
+        self._dirty = True
+        self._view = None
+
+    def _step(self) -> None:
+        """One scheduler iteration: admit, then one decode step."""
+        self._admit()
+        if self._active:
+            self._decode_once()
+
+    # ------------------------------------------------------------- admission
+    def _admit(self) -> None:
+        admitted = 0
+        while len(self._active) < self.max_batch:
+            with self._cv:
+                if not self._pending:
+                    break
+                # peek; the request stays visible to drain() until it has
+                # a slot (only the loop thread ever pops)
+                req = self._pending[0]
+            if self._coalesce(req):
+                self._pop_pending()
+                continue
+            try:
+                slot = self._admit_one(req)
+            except _Defer:
+                break                                   # left at queue front
+            except BaseException as e:                  # per-request failure
+                self._pop_pending()
+                req.handle._fail(e)
+                continue
+            if slot.remaining > 0:
+                self._active.append(slot)
+                admitted += 1
+            else:
+                self._retire(slot)
+            self._pop_pending()
+        if admitted:
+            self.stats.admission_waves += 1
+            self.stats.peak_batch = max(self.stats.peak_batch,
+                                        len(self._active))
+            self._dirty = True
+
+    def _coalesce(self, req: _Request) -> bool:
+        """Attach an exact duplicate of an in-flight request as follower.
+
+        Per-request sampling streams are a pure function of (engine seed,
+        prompt, max_new) — see _request_rng — so two requests with equal
+        (prompt, max_new, temperature) provably decode the same tokens at
+        ANY temperature; the leader's full output is the follower's.
+        """
+        if req.extra:
+            return False
+        for s in self._active:
+            r = s.req
+            if (not r.extra and r.prompt == req.prompt
+                    and r.max_new == req.max_new
+                    and r.temperature == req.temperature):
+                s.followers.append(req.handle)
+                self.stats.coalesced_requests += 1
+                return True
+        return False
+
+    def _request_rng(self, req: _Request) -> jax.Array:
+        """Per-request stream, stable under plan/arrival reordering."""
+        h = zlib.crc32(np.asarray(req.prompt, np.int64).tobytes())
+        h = zlib.crc32(np.asarray([req.max_new], np.int64).tobytes(), h)
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), h)
+
+    def _ensure_kv(self) -> PagedKVCache:
+        if self.kv is None:
+            layers, kv_heads, head_dim = self._paged_layout
+            self.kv = PagedKVCache(layers, self.num_pages, self.page_size,
+                                   kv_heads, head_dim)
+        return self.kv
+
+    def _pop_pending(self) -> None:
+        with self._cv:
+            self._pending.popleft()
+
+    def _reserved_pages(self) -> int:
+        """Pages the in-flight batch may still allocate: each active slot
+        appends one token's KV per remaining step (+1 for page-boundary
+        slack).  Admission must leave this headroom free or a decode-time
+        ``append_token`` could exhaust the pool and fail the whole batch."""
+        ps = self.page_size
+        return sum(-(-s.remaining // ps) + 1 for s in self._active)
+
+    def _ensure_pages(self, needed: int, protect: Optional[int] = None) -> None:
+        """Evict warm sequences (LRU, never ``protect``) until ``needed``
+        pages are free beyond the active batch's decode reservation;
+        defer admission if in-flight work will free more."""
+        kv = self.kv
+        needed += self._reserved_pages()
+        while len(kv.free_pages) < needed:
+            victim = next((s for s in self._warm if s != protect), None)
+            if victim is None:
+                if self._active:
+                    raise _Defer()
+                raise MemoryError(
+                    f"KV cache out of pages ({needed} needed, "
+                    f"{len(kv.free_pages)} free, no warm sequences left)")
+            self._warm.pop(victim)
+            kv.free_sequence(victim)
 
     def _prefill(self, tokens: jax.Array, extra: Dict[str, Any]):
         if self.cfg.family == "audio":
@@ -106,97 +447,227 @@ class InferenceEngine:
                                       prefix_embeds=extra["patch_embeds"])
         return self._prefill_jit(self.params, tokens)
 
-    def _decode(self, token: jax.Array, cache):
-        return self._decode_jit(self.params, token, cache)
-
-    # ---------------------------------------------------------------- generate
-    def generate(self, prompts: Sequence[Sequence[int]], *,
-                 max_new_tokens: int = 16, temperature: float = 0.0,
-                 extras: Optional[List[Dict[str, Any]]] = None,
-                 ) -> List[List[int]]:
-        """Generate continuations for a batch of token prompts.
-
-        Deterministic for temperature=0.  Identical prompts are coalesced.
-        Returns one generated-token list per prompt (same order).
-        """
+    def _admit_one(self, req: _Request) -> _Slot:
         if self.params is None:
             self.load()
-        extras = extras or [{} for _ in prompts]
+        S = len(req.prompt)
+        slot = _Slot(req=req, remaining=req.max_new,
+                     rng=self._request_rng(req))
+        shareable = (self.enable_prefix_sharing and not req.extra and S > 1)
 
-        # ---- engine-edge coalescing of exact duplicates ------------------
-        uniq: Dict[Tuple[int, ...], int] = {}
-        order: List[int] = []
-        uniq_prompts: List[Sequence[int]] = []
-        uniq_extras: List[Dict[str, Any]] = []
-        for p, e in zip(prompts, extras):
-            key = tuple(p)
-            if key in uniq and not e:
-                self.stats.coalesced_requests += 1
+        if self._paged_layout:
+            kv = self._ensure_kv()
+            donor = None
+            shared = 0
+            if shareable:
+                _, cands = self.warm_prefixes.match_all(req.prompt)
+                for depth, payload in cands:     # deepest-first fallback
+                    cand = min(depth, S - 1)
+                    if (cand >= self.MIN_SHARED_PREFIX
+                            and isinstance(payload, int)
+                            and payload in kv.sequences
+                            and kv.sequences[payload].length >= cand):
+                        donor, shared = payload, cand
+                        break
+            fresh_tokens = S - shared + req.max_new
+            if req.extra.get("patch_embeds") is not None:
+                fresh_tokens += req.extra["patch_embeds"].shape[-2]
+            self._ensure_pages(-(-fresh_tokens // self.page_size) + 1,
+                               protect=donor)
+            if donor is not None:
+                logits = self._prefill_shared(slot, donor, shared)
+                self.stats.prefix_hits += 1
+                self.stats.prefill_tokens += S - shared
+                self.stats.prefill_tokens_saved += shared
             else:
-                uniq[key] = len(uniq_prompts)
-                uniq_prompts.append(p)
-                uniq_extras.append(e)
-            order.append(uniq[key])
-
-        # ---- group by prompt length (padding-free batching) --------------
-        groups: Dict[int, List[int]] = {}
-        for i, p in enumerate(uniq_prompts):
-            groups.setdefault(len(p), []).append(i)
-
-        results: List[Optional[List[int]]] = [None] * len(uniq_prompts)
-        for idxs in groups.values():
-            for j0 in range(0, len(idxs), self.max_batch):
-                chunk = idxs[j0:j0 + self.max_batch]
-                outs = self._generate_group(
-                    [uniq_prompts[i] for i in chunk],
-                    [uniq_extras[i] for i in chunk],
-                    max_new_tokens, temperature)
-                for i, o in zip(chunk, outs):
-                    results[i] = o
-        self.stats.batches += 1
-        return [list(results[j]) for j in order]
-
-    # ---------------------------------------------------------------- group
-    def _generate_group(self, prompts, extras, max_new, temperature):
-        B, S = len(prompts), len(prompts[0])
-        tokens = jnp.asarray(prompts, jnp.int32)
-        shared = batch_shared_prefix(prompts) if (
-            self.enable_prefix_sharing and B > 1 and not any(extras)) else []
-        # recurrent archs share state snapshots only for EXACT prefixes,
-        # which is what batch_shared_prefix computes — always valid; but
-        # only profitable beyond a minimum length.
-        P = len(shared)
-        use_shared = P >= self.MIN_SHARED_PREFIX and P < S
-
-        if use_shared:
-            # prefill shared prefix ONCE, tile the cache across the group
-            logits1, cache = self._prefill(tokens[:1, :P], {})
-            cache = self.model.extend_cache(cache, (S - P) + max_new)
-            cache = self._tile_cache(cache, B)
-            self.stats.prefill_tokens += P
-            self.stats.prefill_tokens_saved += P * (B - 1)
-            self.warm_prefixes.insert(shared)
-            # teacher-force per-request suffixes (uniform length S - P)
-            logits = jnp.repeat(logits1, B, axis=0)
-            for t in range(P, S):
-                logits, cache = self._decode(tokens[:, t], cache)
-                self.stats.decode_tokens += B
+                tokens = jnp.asarray([req.prompt], jnp.int32)
+                logits, cache = self._prefill(tokens, req.extra)
+                k_row, v_row = self.model.cache_kv_rows(cache, 0)
+                slot.seq_id = kv.add_sequence(k_row, v_row)
+                self.stats.prefill_tokens += k_row.shape[1]
+            slot.length = kv.sequences[slot.seq_id].length
+            if shareable:
+                self.warm_prefixes.insert(req.prompt, payload=slot.seq_id,
+                                          stamp_path=True)
+            self.stats.pages_shared = kv.pages_shared
+            self.stats.tokens_reused = kv.tokens_reused
         else:
-            logits, cache = self._prefill(tokens, extras[0] if any(extras)
-                                          else {})
-            cache = self.model.extend_cache(cache, max_new)
-            self.stats.prefill_tokens += B * S
+            tokens = jnp.asarray([req.prompt], jnp.int32)
+            logits, cache = self._prefill(tokens, req.extra)
+            t_cur = S
+            slot.row = self.model.extend_cache(cache,
+                                               self.max_seq_len - t_cur)
+            slot.length = S
+            self.stats.prefill_tokens += S
 
-        # ---- sampling loop ------------------------------------------------
-        rng = jax.random.PRNGKey(self.seed)
-        outs = [[] for _ in range(B)]
-        for step in range(max_new):
-            rng, sub = jax.random.split(rng)
-            nxt = sample(logits, sub, temperature=temperature,
+        if req.max_new > 0:
+            self._emit_token(slot, logits[0:1])
+        return slot
+
+    def _prefill_shared(self, slot: _Slot, donor: int, shared: int):
+        """Admit via page aliasing: reuse the donor's first ``shared``
+        tokens, chunk-prefill only the unseen suffix, append its KV."""
+        kv = self.kv
+        req = slot.req
+        seq = kv.add_sequence(shared_from=donor, shared_len=shared)
+        slot.seq_id = seq
+        kp, vp = kv.gather(seq)                       # (L, shared, H, D)
+        S = len(req.prompt)
+        T1 = self._round_t(S + req.max_new)
+        L, _, H, D = kp.shape
+        k_rows = np.zeros((1, L, T1, H, D), np.float32)
+        v_rows = np.zeros((1, L, T1, H, D), np.float32)
+        k_rows[0, :, :shared] = kp
+        v_rows[0, :, :shared] = vp
+        cache = self.model.paged_cache_view(k_rows, v_rows, [shared])
+        suffix = jnp.asarray([req.prompt[shared:]], jnp.int32)
+        logits, cache = self._chunk_prefill_jit(self.params, suffix, cache)
+        k_row, v_row = self.model.cache_kv_rows(cache, 0)   # (L, S, H, D)
+        for t in range(shared, S):
+            kv.append_token(seq, k_row[:, t], v_row[:, t])
+        return logits
+
+    # ---------------------------------------------------------------- decode
+    def _round_t(self, n: int) -> int:
+        q = self._T_QUANTUM
+        return -(-n // q) * q
+
+    @staticmethod
+    def _round_b(n: int) -> int:
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def _rebuild_view(self) -> None:
+        """Re-materialize the dense decode batch after composition change.
+
+        Paged models gather every active row from its pages (the pages
+        stay authoritative); dense-row models restack per-sequence rows.
+        Batch is padded to a power of two and time to _T_QUANTUM multiples
+        so recompiles stay bounded; padded rows compute garbage that is
+        never sampled and never written back anywhere.
+        """
+        slots = self._active
+        b_pad = self._round_b(len(slots))
+        if self._paged_layout:
+            kv = self.kv
+            t_view = self._round_t(max(s.length + s.remaining for s in slots))
+            layers, heads, dh = self._paged_layout
+            k_rows = np.zeros((b_pad, layers, t_view, heads, dh), np.float32)
+            v_rows = np.zeros_like(k_rows)
+            lengths = [0] * b_pad
+            for i, s in enumerate(slots):
+                kr, vr = kv.gather(s.seq_id)
+                k_rows[i, :, :s.length] = kr
+                v_rows[i, :, :s.length] = vr
+                lengths[i] = s.length
+            self._view = self.model.paged_cache_view(k_rows, v_rows, lengths)
+        else:
+            rows = self._dense_rows() + [None] * (b_pad - len(slots))
+            axes = self.model.cache_batch_axes(rows[0])
+            dummy = jax.tree.map(jnp.zeros_like, rows[0])
+            rows = [dummy if r is None else r for r in rows]
+            self._view = {
+                key: jnp.concatenate([r[key] for r in rows], axis=ax)
+                for key, ax in axes.items()}
+        self._view_pad = b_pad
+        self._dirty = False
+
+    def _dense_rows(self) -> List[Any]:
+        """Per-slot cache rows; slots already in the current view are
+        sliced back out of it (they carry the decoded state)."""
+        out = []
+        for s in self._active:
+            if s.row is None:
+                s.row = self._slice_row(self._view, s.view_ix)
+            out.append(s.row)
+            s.row = None                    # ownership moves into the view
+        return out
+
+    def _slice_row(self, view, ix: int):
+        axes = self.model.cache_batch_axes(view)
+        return {k: jax.lax.slice_in_dim(v, ix, ix + 1, axis=axes[k])
+                for k, v in view.items()}
+
+    def _decode_once(self) -> None:
+        if self._dirty:
+            self._rebuild_view()
+            for i, s in enumerate(self._active):
+                s.view_ix = i
+        slots = self._active
+        b_real = len(slots)
+        tokens = np.zeros((self._view_pad,), np.int32)
+        tokens[:b_real] = [s.last_token for s in slots]
+        prev_lengths = [s.length for s in slots]
+        logits, self._view = self._decode_jit(
+            self.params, jnp.asarray(tokens), self._view)
+        if self._paged_layout:
+            taps_ix = np.zeros((self._view_pad,), np.int32)
+            taps_ix[:b_real] = prev_lengths      # identity slots (no wrap)
+            k_taps, v_taps = self.model.decode_kv_taps(self._view, taps_ix)
+            for i, s in enumerate(slots):
+                self.kv.append_token(s.seq_id, k_taps[:, i], v_taps[:, i])
+        for s in slots:
+            s.length += 1
+        self.stats.decode_tokens += b_real
+        self._advance(logits)
+
+    def _emit_token(self, slot: _Slot, logits) -> None:
+        """Sample one token for ``slot`` from (1, Vpad) logits."""
+        if slot.req.temperature == 0.0:
+            nxt = sample(logits, self._zero_key, temperature=0.0,
                          vocab_size=self.cfg.vocab_size)
-            for b in range(B):
-                outs[b].append(int(nxt[b]))
-            if step + 1 < max_new:
-                logits, cache = self._decode(nxt, cache)
-                self.stats.decode_tokens += B
-        return outs
+        else:
+            slot.rng, sub = jax.random.split(slot.rng)
+            nxt = sample(logits, sub, temperature=slot.req.temperature,
+                         vocab_size=self.cfg.vocab_size)
+        tok = int(nxt[0])
+        slot.generated.append(tok)
+        slot.last_token = tok
+        slot.remaining -= 1
+
+    def _advance(self, logits) -> None:
+        finished = []
+        for i, s in enumerate(list(self._active)):
+            self._emit_token(s, logits[i:i + 1])
+            if s.remaining == 0:
+                finished.append(s)
+        for s in finished:
+            self._active.remove(s)
+            self._retire(s)
+        if finished:
+            self._dirty = True
+
+    def _retire(self, slot: _Slot) -> None:
+        req = slot.req
+        if self._paged_layout and slot.seq_id is not None:
+            keep = (self.enable_prefix_sharing and not req.extra)
+            if keep:
+                self._warm[slot.seq_id] = req.prompt
+                self._warm.move_to_end(slot.seq_id)
+                while len(self._warm) > self.max_warm_sequences:
+                    victim, _ = self._warm.popitem(last=False)
+                    self.kv.free_sequence(victim)
+                self._maybe_prune_tree()
+            else:
+                self.kv.free_sequence(slot.seq_id)
+        out = list(slot.generated)
+        req.handle._fulfill(out)
+        for f in slot.followers:
+            f._fulfill(list(out))
+
+    def _maybe_prune_tree(self) -> None:
+        """Rebuild the radix tree from live donors once stale entries
+        dominate — evicted sequences leave nodes and stamped payloads
+        behind, and a persistent-host engine would otherwise grow the
+        tree with every prompt it ever served."""
+        if self.warm_prefixes.num_sequences <= 8 * self.max_warm_sequences:
+            return
+        tree = RadixPrefixTree()
+        for seq_id, prompt in self._warm.items():
+            tree.insert(prompt, payload=seq_id, stamp_path=True)
+        for s in self._active:
+            if s.seq_id is not None and not s.req.extra:
+                tree.insert(s.req.prompt, payload=s.seq_id, stamp_path=True)
+        self.warm_prefixes = tree

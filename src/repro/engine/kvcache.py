@@ -7,18 +7,26 @@ per sequence.  ``gather()`` materializes a sequence's KV as a contiguous
 ``(T, kv_heads, head_dim)`` block (a dense gather XLA turns into efficient
 dynamic-slices), which the decode kernel then streams through VMEM.
 
+This is the authoritative KV store behind the continuous-batching
+``InferenceEngine``: every full-attention transformer sequence lives here
+from admission to retirement, and the engine's dense decode batch is a
+materialized *view* over these pages (rebuilt whenever the batch
+composition changes, appended in lock-step with the pages otherwise).
+
 Prefix sharing: pages are REFCOUNTED.  When a new sequence's prompt hits
-a cached prefix (radix tree), its page table aliases the existing pages —
-the shared prefix is stored (and was computed) exactly once.  Full pages
-are immutable, so aliasing needs no copy-on-write; only the last, partial
-page is private to a sequence.
+a cached prefix (the engine's radix tree), its page table aliases the
+donor's pages — the shared prefix is stored (and was computed) exactly
+once.  Full pages are immutable, so aliasing them needs no copy; a
+*partial* trailing page may be aliased too (the prefix need not be
+page-aligned), in which case the first append by EITHER sequence into a
+page with refcount > 1 triggers copy-on-write, so neither sequence can
+corrupt the other's tokens.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -33,7 +41,7 @@ class PagedKVCache:
     """Host-managed paged KV store for ONE layer-stacked model."""
 
     def __init__(self, num_layers: int, num_pages: int, page_size: int,
-                 kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+                 kv_heads: int, head_dim: int, dtype=np.float32):
         self.num_layers = num_layers
         self.num_pages = num_pages
         self.page_size = page_size
@@ -41,8 +49,8 @@ class PagedKVCache:
         self.head_dim = head_dim
         # (L, P, page, Hkv, Dh) — numpy on host; device transfer on gather
         shape = (num_layers, num_pages, page_size, kv_heads, head_dim)
-        self.k = np.zeros(shape, np.float32)
-        self.v = np.zeros(shape, np.float32)
+        self.k = np.zeros(shape, dtype)
+        self.v = np.zeros(shape, dtype)
         self.refcount = np.zeros((num_pages,), np.int64)
         self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
         self.sequences: Dict[int, SequenceEntry] = {}
@@ -72,14 +80,20 @@ class PagedKVCache:
         return int((self.refcount > 0).sum())
 
     # --------------------------------------------------------------- write
-    def add_sequence(self, k: np.ndarray, v: np.ndarray,
+    def add_sequence(self, k: Optional[np.ndarray] = None,
+                     v: Optional[np.ndarray] = None,
                      shared_from: Optional[int] = None,
                      shared_len: int = 0) -> int:
-        """Store a prefilled sequence's KV. k/v: (L, S, Hkv, Dh).
+        """Store a prefilled sequence's KV. k/v: (L, S, Hkv, Dh) or None.
 
         If ``shared_from`` names an existing sequence, its first
-        ``shared_len`` tokens are aliased (must be page-aligned; the caller
-        rounds down) and k/v carry only the remaining suffix.
+        ``shared_len`` tokens are aliased.  A non-page-aligned
+        ``shared_len`` additionally aliases the donor's *partial* page;
+        that page stays copy-on-write protected, so the caller must then
+        pass no bulk suffix (k is None / empty) and extend the sequence
+        via :meth:`append_token`, which performs the COW copy before the
+        first private write.  Page-aligned sharing may carry a bulk
+        suffix in k/v as before.
         """
         ps = self.page_size
         seq_id = self._next_seq
@@ -88,25 +102,29 @@ class PagedKVCache:
         length = 0
 
         if shared_from is not None and shared_len:
-            assert shared_len % ps == 0, "shared prefix must be page-aligned"
             donor = self.sequences[shared_from]
-            n_shared = shared_len // ps
             assert donor.length >= shared_len
-            for p in donor.page_ids[:n_shared]:
+            n_full, tail = divmod(shared_len, ps)
+            n_alias = n_full + (1 if tail else 0)
+            for p in donor.page_ids[:n_alias]:
                 self._ref_page(p)
                 page_ids.append(p)
             length = shared_len
-            self.pages_shared += n_shared
+            self.pages_shared += n_alias
             self.tokens_reused += shared_len
 
-        S = k.shape[1]
-        for s0 in range(0, S, ps):
-            p = self._alloc_page()
-            n = min(ps, S - s0)
-            self.k[:, p, :n] = k[:, s0:s0 + n]
-            self.v[:, p, :n] = v[:, s0:s0 + n]
-            page_ids.append(p)
-        length += S
+        S = 0 if k is None else k.shape[1]
+        if S:
+            assert length % ps == 0, \
+                "bulk suffix requires a page-aligned shared prefix; " \
+                "append_token() handles the copy-on-write case"
+            for s0 in range(0, S, ps):
+                p = self._alloc_page()
+                n = min(ps, S - s0)
+                self.k[:, p, :n] = k[:, s0:s0 + n]
+                self.v[:, p, :n] = v[:, s0:s0 + n]
+                page_ids.append(p)
+            length += S
         self.sequences[seq_id] = SequenceEntry(seq_id, page_ids, length)
         return seq_id
 

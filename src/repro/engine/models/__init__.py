@@ -7,6 +7,17 @@ All models implement the same protocol:
   init_cache(batch, max_len) -> cache pytree
   prefill(params, tokens, ...) -> (last_logits, cache)
   decode_step(params, token, cache) -> (logits, cache)
+  cache_batch_axes(cache) -> {leaf: batch axis}      # row split/stack
+  extend_cache(cache, extra) -> cache                # grow decode headroom
+  paged_kv_layout() -> (layers, kv_heads, head_dim) | None
+
+Models whose ``paged_kv_layout()`` is non-None additionally implement the
+paged-KV hooks the continuous-batching engine drives (KV lives in a
+refcounted ``PagedKVCache``; the dense cache is a materialized view):
+  cache_kv_rows(cache, row) -> (k, v) float32 numpy  # page-store writes
+  paged_cache_view(k_rows, v_rows, lengths) -> cache # pages -> dense view
+  decode_kv_taps(cache, slots) -> (k, v) numpy       # per-step page append
+  prefill_with_cache(params, tokens, cache) -> (last_logits, cache)
 """
 from __future__ import annotations
 

@@ -10,7 +10,6 @@ over the encoder output (frames length = min(enc_max_len, seq_len)).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -171,6 +170,11 @@ class EncDecLM:
     def cache_batch_axes(self, cache):
         return {k: (0 if k in ("length", "enc_len") else 1) for k in cache}
 
+    def paged_kv_layout(self):
+        """Cross-attention KV is frame-indexed, not token-paged — the
+        continuous-batching engine keeps enc/dec state as dense rows."""
+        return None
+
     def extend_cache(self, cache, extra: int):
         out = dict(cache)
         for key in ("k", "v"):
@@ -178,6 +182,16 @@ class EncDecLM:
             pad = [(0, 0)] * c.ndim
             pad[2] = (0, extra)
             out[key] = jnp.pad(c, pad)
+        # normalize cross-attn KV to enc_max_len so rows from requests
+        # with different frame counts stack into one decode batch
+        # (enc_len masks the padded slots, contributing exact zeros)
+        t_enc = cache["xk"].shape[2]
+        if t_enc < self.cfg.enc_max_len:
+            for key in ("xk", "xv"):
+                c = out[key]
+                pad = [(0, 0)] * c.ndim
+                pad[2] = (0, self.cfg.enc_max_len - t_enc)
+                out[key] = jnp.pad(c, pad)
         return out
 
     def init_cache(self, batch: int, max_len: int) -> Dict[str, jax.Array]:

@@ -224,6 +224,11 @@ class GriffinLM:
         return {k: (0 if (k == "length" or k.startswith("l")) else 1)
                 for k in cache}
 
+    def paged_kv_layout(self):
+        """Hybrid blocks mix ring-buffer local attention with recurrent
+        state — neither fits immutable pages; dense rows instead."""
+        return None
+
     def extend_cache(self, cache, extra: int):
         keys = [k for k in cache if k.startswith("g") and
                 (k.endswith("_k") or k.endswith("_v"))]

@@ -14,6 +14,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig
@@ -145,6 +146,66 @@ class TransformerLM:
         """Batch axis per cache leaf (for tiling/splitting request batches)."""
         return {k: (0 if k == "length" else 1) for k in cache}
 
+    # ------------------------------------------------- paged-KV engine hooks
+    def paged_kv_layout(self) -> Optional[Tuple[int, int, int]]:
+        """(layers, kv_heads, head_dim) for a PagedKVCache backing this
+        model's KV, or None when pages can't back it (SWA ring buffers
+        wrap in place, which fights immutable full pages)."""
+        if self.cfg.swa_window:
+            return None
+        return (self.cfg.num_layers, self.cfg.num_kv_heads, self.head_dim)
+
+    def cache_kv_rows(self, cache, row: int):
+        """One sequence's KV from a dense cache as float32 numpy
+        ``(L_total, length, Hkv, Dh)`` — lead layers first, then scanned.
+        This is the page-store write format (host-side, exact for bf16)."""
+        ln = int(cache["length"][row])
+        ks = [cache["k"][:, row, :ln]]
+        vs = [cache["v"][:, row, :ln]]
+        if "lead_k" in cache:
+            ks.insert(0, cache["lead_k"][:, row, :ln])
+            vs.insert(0, cache["lead_v"][:, row, :ln])
+        k = jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0]
+        v = jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+        return (np.asarray(k, dtype=np.float32),
+                np.asarray(v, dtype=np.float32))
+
+    def paged_cache_view(self, k_rows, v_rows, lengths):
+        """Materialize the dense decode cache from gathered page rows.
+
+        k_rows/v_rows: float32 numpy ``(B, L_total, T, Hkv, Dh)`` (zero-
+        padded past each row's length); lengths: per-row token counts.
+        The float32→model-dtype cast is exact for bf16 page contents.
+        """
+        k = jnp.asarray(k_rows, self.dtype).swapaxes(0, 1)  # (L,B,T,H,D)
+        v = jnp.asarray(v_rows, self.dtype).swapaxes(0, 1)
+        cache = {"k": k[self.n_lead:], "v": v[self.n_lead:],
+                 "length": jnp.asarray(lengths, jnp.int32)}
+        if self.n_lead:
+            cache["lead_k"] = k[:self.n_lead]
+            cache["lead_v"] = v[:self.n_lead]
+        return cache
+
+    def decode_kv_taps(self, cache, slots):
+        """KV written at per-row ``slots`` (the last decode step's token)
+        as float32 numpy ``(L_total, B, Hkv, Dh)`` — the page-append
+        payload mirroring one `decode_step`."""
+        ix = jnp.asarray(slots, jnp.int32)[None, :, None, None, None]
+
+        def tap(a):                                   # (L,B,T,H,D)->(L,B,H,D)
+            idx = jnp.broadcast_to(ix, a.shape[:2] + (1,) + a.shape[3:])
+            return jnp.take_along_axis(a, idx, axis=2)[:, :, 0]
+
+        ks = [tap(cache["k"])]
+        vs = [tap(cache["v"])]
+        if "lead_k" in cache:
+            ks.insert(0, tap(cache["lead_k"]))
+            vs.insert(0, tap(cache["lead_v"]))
+        k = jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0]
+        v = jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+        return (np.asarray(k, dtype=np.float32),
+                np.asarray(v, dtype=np.float32))
+
     def cache_capacity(self, max_len: int) -> int:
         cfg = self.cfg
         return min(max_len, cfg.swa_window) if cfg.swa_window else max_len
@@ -254,6 +315,78 @@ class TransformerLM:
         x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
         return x[:, -1] @ head, cache
+
+    # ----------------------------------------------------- chunked prefill
+    def prefill_with_cache(self, params: Params, tokens: jax.Array,
+                           cache: Dict[str, jax.Array],
+                           impl: Optional[str] = None
+                           ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Prefill ``tokens`` (B, S_suf) as a continuation of ``cache``.
+
+        The chunk's queries attend to the cached KV (a reused prefix, in
+        the engine: gathered from shared pages) plus the chunk itself;
+        the chunk's KV is written into the cache at its absolute slots.
+        Full-attention caches only (slot s holds position s), so the
+        result is bitwise what a monolithic ``prefill`` of prefix+chunk
+        would produce for these positions.
+        """
+        cfg = self.cfg
+        assert not cfg.swa_window, "chunked prefill needs full attention"
+        B, Ssuf = tokens.shape
+        pos0 = cache["length"]                               # (B,)
+        x = params["embed"][tokens]
+        positions = pos0[:, None] + jnp.arange(Ssuf, dtype=jnp.int32)[None, :]
+        T = cache["k"].shape[2]
+        arange_t = jnp.arange(T, dtype=jnp.int32)[None, :]
+        kv_pos = jnp.where(arange_t < (pos0 + Ssuf)[:, None], arange_t, -1)
+        batch_ix = jnp.arange(B)[:, None]
+
+        def run_block(p, x, k_cache, v_cache):
+            if cfg.family == "dense":      # sequence-parallel residual (SP)
+                x = L.constrain_hidden(x)
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=self.head_dim, positions=positions,
+                                 rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                                 norm_eps=cfg.norm_eps)
+            k_cache = k_cache.at[batch_ix, positions].set(k)
+            v_cache = v_cache.at[batch_ix, positions].set(v)
+            o = L.attention(q, k_cache, v_cache, q_positions=positions,
+                            kv_positions=kv_pos, causal=True, window=0,
+                            impl=impl or cfg.attention_impl)
+            x = x + L.attn_out(p["attn"], o)
+            h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            if "moe" in p:
+                y, _ = M.moe_ffn(h, p["moe"], cfg.moe)
+            else:
+                y = L.ffn_apply(p["ffn"], h)
+            return x + y, k_cache, v_cache
+
+        new_cache = dict(cache)
+        if self.n_lead:
+            lk, lv = [], []
+            for i, p in enumerate(params["lead_blocks"]):
+                x, k_c, v_c = run_block(p, x, cache["lead_k"][i],
+                                        cache["lead_v"][i])
+                lk.append(k_c)
+                lv.append(v_c)
+            new_cache["lead_k"] = jnp.stack(lk)
+            new_cache["lead_v"] = jnp.stack(lv)
+
+        def body(x, xs):
+            p, k_c, v_c = xs
+            x, k_c, v_c = run_block(p, x, k_c, v_c)
+            return x, (k_c, v_c)
+
+        x, (ks, vs) = lax.scan(body, x,
+                               (params["blocks"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+        new_cache["length"] = pos0 + Ssuf
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return x[:, -1] @ head, new_cache
 
     # ------------------------------------------------------------ decode step
     def decode_step(self, params: Params, token: jax.Array,

@@ -203,6 +203,11 @@ class XLSTMLM:
     def cache_batch_axes(self, cache):
         return {k: (0 if k == "length" else 1) for k in cache}
 
+    def paged_kv_layout(self):
+        """O(1) recurrent state has no KV to page; the engine batches
+        per-sequence state rows instead."""
+        return None
+
     def extend_cache(self, cache, extra: int):
         return cache                    # O(1) recurrent state — nothing to grow
 

@@ -16,8 +16,20 @@ class _Node:
     # number of inserted sequences passing through this node
     count: int = 0
     # opaque payload attached at the deepest node of an inserted sequence
-    # (the engine stores (worker_id, kv_page_ids) here)
+    # (the engine stores the paged-KV sequence id here)
     payload: Optional[object] = None
+    # recent path-stamped payloads, newest first (bounded): fallback
+    # donors for when the newest one's KV pages get evicted
+    payloads: List[object] = field(default_factory=list)
+
+    MAX_STAMPS = 4
+
+    def stamp(self, payload: object) -> None:
+        self.payloads = [p for p in self.payloads
+                         if p is not payload and p != payload]
+        self.payloads.insert(0, payload)
+        del self.payloads[self.MAX_STAMPS:]
+        self.payload = payload
 
 
 class RadixPrefixTree:
@@ -28,12 +40,23 @@ class RadixPrefixTree:
         self.num_sequences = 0
 
     # ------------------------------------------------------------------
-    def insert(self, tokens: Sequence[int], payload: object = None) -> None:
+    def insert(self, tokens: Sequence[int], payload: object = None,
+               stamp_path: bool = False) -> None:
+        """Insert ``tokens``; attach ``payload`` at the deepest node.
+
+        With ``stamp_path`` the payload is also stamped on every interior
+        node of the path, making this sequence the *representative donor*
+        for each of its prefixes — a later ``match()`` that diverges
+        mid-sequence then still yields a payload covering the matched
+        prefix (the engine uses this for partial-prompt KV-page reuse).
+        """
         node = self.root
         node.count += 1
         for t in tokens:
             node = node.children.setdefault(int(t), _Node())
             node.count += 1
+            if stamp_path:
+                node.stamp(payload)
         node.payload = payload
         self.num_sequences += 1
 
@@ -43,8 +66,30 @@ class RadixPrefixTree:
         Returns (match_len, payload of the deepest payload-bearing node on
         the matched path).
         """
+        n, cands = self.match_all(tokens)
+        return n, cands[0][1] if cands else None
+
+    def match_all(self, tokens: Sequence[int]
+                  ) -> Tuple[int, List[Tuple[int, object]]]:
+        """Longest cached prefix plus every (depth, payload) pair on the
+        matched path, deepest-first and payload-deduplicated.
+
+        A payload stamped at depth d certifies only that its sequence
+        shares the first d tokens, so each candidate carries its own
+        depth.  Callers whose payloads can go stale (the engine's
+        evicted KV sequences) walk the candidates instead of giving up
+        when the most recent donor stamped over an older, still-valid
+        one.
+        """
+        def node_payloads(node) -> List[object]:
+            ps = list(node.payloads)
+            if node.payload is not None and all(
+                    q is not node.payload and q != node.payload for q in ps):
+                ps.insert(0, node.payload)
+            return ps
+
         node = self.root
-        best_payload = node.payload
+        found: List[Tuple[int, List[object]]] = [(0, node_payloads(node))]
         n = 0
         for t in tokens:
             child = node.children.get(int(t))
@@ -52,9 +97,13 @@ class RadixPrefixTree:
                 break
             node = child
             n += 1
-            if node.payload is not None:
-                best_payload = node.payload
-        return n, best_payload
+            found.append((n, node_payloads(node)))
+        out: List[Tuple[int, object]] = []
+        for depth, ps in reversed(found):              # deepest first
+            for p in ps:                               # newest first
+                if all(q is not p and q != p for _, q in out):
+                    out.append((depth, p))
+        return n, out
 
     # ------------------------------------------------------------------
     def longest_common_prefix(self) -> List[int]:

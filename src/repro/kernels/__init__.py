@@ -18,3 +18,11 @@ the dry-run compiles; the kernel/XLA switch is ``cfg.attention_impl``.
                          KV-cache sharing.
 * rglru_scan           — RG-LRU blocked linear-recurrence scan (Griffin)
 """
+
+import os
+
+
+def env_interpret(interpret: bool) -> bool:
+    """Force Pallas interpret mode via REPRO_PALLAS_INTERPRET=1 (CI runs
+    the kernel suite this way on CPU runners)."""
+    return interpret or os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1"

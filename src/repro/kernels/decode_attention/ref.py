@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import math
 
-import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30

@@ -5,7 +5,10 @@ import functools
 
 import jax
 
+from repro.kernels import env_interpret
+
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
 
 
 def _pick_block(s: int, target: int) -> int:
@@ -20,10 +23,21 @@ def _pick_block(s: int, target: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "block_q", "block_kv", "interpret"))
-def flash_attention(q, k, v, *, q_positions, kv_positions, causal=True,
-                    window=0, block_q=512, block_kv=512, interpret=False):
+def _flash_attention_jit(q, k, v, *, q_positions, kv_positions, causal=True,
+                         window=0, block_q=512, block_kv=512,
+                         interpret=False):
     bq = _pick_block(q.shape[1], block_q)
     bk = _pick_block(k.shape[1], block_kv)
     return flash_attention_kernel(
         q, k, v, q_positions, kv_positions, causal=causal, window=window,
         block_q=bq, block_kv=bk, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, q_positions, kv_positions, causal=True,
+                    window=0, block_q=512, block_kv=512, interpret=False):
+    """``interpret`` is resolved against REPRO_PALLAS_INTERPRET before
+    the jit boundary so the env override is part of the jit cache key."""
+    return _flash_attention_jit(
+        q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+        causal=causal, window=window, block_q=block_q, block_kv=block_kv,
+        interpret=env_interpret(interpret))

@@ -5,7 +5,10 @@ import functools
 
 import jax
 
+from repro.kernels import env_interpret
+
 from repro.kernels.rglru_scan.kernel import linear_scan_kernel
+
 
 
 def _pick_block(s: int, target: int) -> int:
@@ -19,9 +22,18 @@ def _pick_block(s: int, target: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=(
     "block_b", "block_s", "block_d", "interpret"))
-def linear_scan(a, b, *, block_b=8, block_s=16, block_d=512, interpret=False):
+def _linear_scan_jit(a, b, *, block_b=8, block_s=16, block_d=512,
+                     interpret=False):
     bb = _pick_block(a.shape[0], block_b)
     bs = _pick_block(a.shape[1], block_s)
     bd = _pick_block(a.shape[2], block_d)
     return linear_scan_kernel(a, b, block_b=bb, block_s=bs, block_d=bd,
                               interpret=interpret)
+
+
+def linear_scan(a, b, *, block_b=8, block_s=16, block_d=512, interpret=False):
+    """``interpret`` is resolved against REPRO_PALLAS_INTERPRET before
+    the jit boundary so the env override is part of the jit cache key."""
+    return _linear_scan_jit(a, b, block_b=block_b, block_s=block_s,
+                            block_d=block_d,
+                            interpret=env_interpret(interpret))

@@ -4,10 +4,13 @@ from __future__ import annotations
 import functools
 
 import jax
+
+from repro.kernels import env_interpret
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import decode_attention_kernel
 from repro.kernels.shared_prefix_attention.kernel import prefix_attention_kernel
+
 
 
 def _pick_block(s: int, target: int) -> int:
@@ -21,14 +24,10 @@ def _pick_block(s: int, target: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=(
     "block_p", "block_t", "interpret"))
-def shared_prefix_attention(q, prefix_k, prefix_v, suffix_k, suffix_v, *,
-                            q_positions, suffix_positions,
-                            block_p=1024, block_t=1024, interpret=False):
-    """q: (B,H,Dh); prefix_k/v: (P,Hkv,Dh) ONE shared copy; suffix per-request.
-
-    Prefix slots are absolute positions [0, P); all are visible to every
-    decode query (the prefix is strictly in the past).
-    """
+def _shared_prefix_attention_jit(q, prefix_k, prefix_v, suffix_k, suffix_v, *,
+                                 q_positions, suffix_positions,
+                                 block_p=1024, block_t=1024,
+                                 interpret=False):
     B, H, Dh = q.shape
     P = prefix_k.shape[0]
     bp = _pick_block(P, block_p)
@@ -51,3 +50,19 @@ def shared_prefix_attention(q, prefix_k, prefix_v, suffix_k, suffix_v, *,
     out = (out_p.astype(jnp.float32) * w_p[..., None]
            + out_s.astype(jnp.float32) * w_s[..., None]) / den[..., None]
     return out.astype(q.dtype)
+
+
+def shared_prefix_attention(q, prefix_k, prefix_v, suffix_k, suffix_v, *,
+                            q_positions, suffix_positions,
+                            block_p=1024, block_t=1024, interpret=False):
+    """q: (B,H,Dh); prefix_k/v: (P,Hkv,Dh) ONE shared copy; suffix per-request.
+
+    Prefix slots are absolute positions [0, P); all are visible to every
+    decode query (the prefix is strictly in the past).  ``interpret`` is
+    resolved against REPRO_PALLAS_INTERPRET before the jit boundary so
+    the env override is part of the jit cache key.
+    """
+    return _shared_prefix_attention_jit(
+        q, prefix_k, prefix_v, suffix_k, suffix_v,
+        q_positions=q_positions, suffix_positions=suffix_positions,
+        block_p=block_p, block_t=block_t, interpret=env_interpret(interpret))

@@ -25,10 +25,9 @@ import json
 import re
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,
                            shape_applicable)

@@ -36,10 +36,37 @@ _TRIP_RE = re.compile(r"known_trip_count.*?\"n\":\"(\d+)\"")
 _CALL_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_ARGS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_KIND_PAREN_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
 
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
+
+
+def _operand_refs(rhs: str) -> List[str]:
+    """Operand names of an op definition's right-hand side.
+
+    Handles both the legacy bare syntax ``dot(%a, %b)`` and the typed
+    syntax newer jax versions print, ``dot(f32[2,3]{1,0} %a, ...)``.  The
+    operand list is the first parenthesized group following the op kind;
+    scanning stops at its matching close paren so trailing attributes
+    (``body=%c``, metadata) are never picked up.  Tuple-typed operands may
+    nest parens, hence the depth tracking.
+    """
+    m = _KIND_PAREN_RE.search(rhs)
+    if not m:
+        return []
+    start = m.end() - 1                    # index of the opening paren
+    depth = 0
+    for i in range(start, len(rhs)):
+        ch = rhs[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return _REF_RE.findall(rhs[start:i])
+    return _REF_RE.findall(rhs[start:])
 _FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
              "bitcast", "after-all", "iota"}
 
@@ -170,9 +197,9 @@ class HloAnalyzer:
                     or (kind == "fusion" and name.split(".")[0] in (
                         "convert_bitcast_fusion", "convert_fusion",
                         "bitcast_convert_fusion", "wrapped_convert"))):
-                am = _ARGS_RE.search(line)
-                if am:
-                    src = am.group(1).split(",")[0].strip().lstrip("%")
+                refs = _operand_refs(rhs)
+                if refs:
+                    src = refs[0]
                     # alias only a pure dtype cast (same element count);
                     # fused slice+convert reads just the slice instead
                     src_shape = self.shapes.get(src, "")
@@ -187,13 +214,9 @@ class HloAnalyzer:
     # ------------------------------------------------------------------
     def _operand_byte_list(self, line: str) -> Tuple[List[int], int]:
         """(per-operand hbm byte list, score-class bytes)."""
-        m = _ARGS_RE.search(line)
-        if not m:
-            return [], 0
         out: List[int] = []
         score = 0
-        for ref in m.group(1).split(","):
-            ref = ref.strip().lstrip("%")
+        for ref in _operand_refs(line):
             for _ in range(8):                  # resolve convert aliases
                 if ref in self.alias:
                     ref = self.alias[ref]
@@ -216,10 +239,10 @@ class HloAnalyzer:
     def _dot_flops(self, op: _Op) -> float:
         result_b, result_e = _shapes_bytes_elems(op.shape_text)
         cm = _LHS_CONTRACT.search(op.line)
-        am = _ARGS_RE.search(op.line)
-        if not am:
+        refs = _operand_refs(op.line)
+        if not refs:
             return 0.0
-        lhs = am.group(1).split(",")[0].strip().lstrip("%")
+        lhs = refs[0]
         lhs_shape = self.shapes.get(lhs, "")
         sm = _SHAPE_RE.search(lhs_shape)
         if not sm:

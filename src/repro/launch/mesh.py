@@ -15,9 +15,21 @@ from __future__ import annotations
 import jax
 
 
-def _make(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+def compat_make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist on newer
+    jax; older versions create Auto-typed meshes by default, so omitting
+    the argument is behaviour-preserving.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+_make = compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

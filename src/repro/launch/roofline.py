@@ -21,7 +21,7 @@ import json
 import os
 from typing import Dict, List, Optional
 
-from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs import SHAPES, get_config
 from repro.configs.base import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",

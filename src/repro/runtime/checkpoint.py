@@ -9,7 +9,6 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-from typing import Dict, Tuple
 
 from repro.runtime.coordinator import BatchState
 

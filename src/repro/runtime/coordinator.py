@@ -7,7 +7,7 @@ for tool nodes and macro-barrier readiness for (batched) LLM nodes.
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Set, Tuple
 
 from repro.core.graphspec import GraphSpec
 

@@ -1,8 +1,12 @@
 """Executors for the real Processor backend.
 
+* EngineHost — a worker's model slot: at most one resident continuous-
+  batching engine; ``submit()`` feeds requests into the engine's
+  persistent loop (admitted mid-decode) and returns handles.
 * GPUWorkerThread — a stateful GPU executor: runs its planned node
-  sequence, hosting at most one resident model (InferenceEngine) at a
-  time; model switches unload/load (the T_model event, measured).
+  sequence, submitting each node's requests into the resident engine and
+  collecting handles; model switches drain/unload/load (the T_model
+  event, measured).
 * ToolDispatcher — bounded CPU pool with per-query wavefront promotion,
   depth-priority ordering and signature coalescing.
 """
@@ -12,13 +16,13 @@ import queue as _q
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
 from repro.core.coalesce import CoalesceTable
 from repro.core.graphspec import GraphSpec
 from repro.core.parser import render
-from repro.engine.engine import InferenceEngine
+from repro.engine.engine import InferenceEngine, RequestHandle
 from repro.engine.tokenizer import detokenize, tokenize
 from repro.runtime.coordinator import BatchState
 from repro.runtime.events import TaskRecord
@@ -48,6 +52,26 @@ class EngineHost:
             self.switch_seconds += eng.load()
             self.resident = model
         return eng
+
+    def submit(self, model: str, prompts: Sequence[Sequence[int]], *,
+               max_new_tokens: int = 16, temperature: float = 0.0,
+               extras: Optional[List[Dict[str, Any]]] = None,
+               ) -> List[RequestHandle]:
+        """Submit prompts into the resident engine's persistent loop.
+
+        Non-blocking: the requests join the engine's running decode batch
+        (continuous batching); callers wait on the returned handles.
+        """
+        eng = self.engine_for(model)
+        extras = extras or [{} for _ in prompts]
+        return [eng.submit(p, max_new_tokens=max_new_tokens,
+                           temperature=temperature, extra=e)
+                for p, e in zip(prompts, extras)]
+
+    def shutdown(self) -> None:
+        """Stop every engine's loop thread (stats stay readable)."""
+        for eng in self._engines.values():
+            eng.shutdown()
 
 
 class GPUWorkerThread(threading.Thread):
@@ -84,8 +108,10 @@ class GPUWorkerThread(threading.Thread):
             text = render(spec.prompt, b, self.state.upstream(q))
             prompts.append(tokenize(text, eng.cfg.vocab_size))
         ts = time.perf_counter() - self.t0
-        outs = eng.generate(prompts, max_new_tokens=spec.max_new_tokens,
-                            temperature=spec.temperature)
+        handles = self.host.submit(
+            spec.model, prompts, max_new_tokens=spec.max_new_tokens,
+            temperature=spec.temperature)
+        outs = [h.result() for h in handles]
         te = time.perf_counter() - self.t0
         with self.records_lock:
             self.records.append(TaskRecord(

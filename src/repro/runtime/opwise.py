@@ -13,7 +13,7 @@ batch size.  Consequences the paper measures, reproduced mechanically:
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from repro.core.consolidate import ConsolidatedGraph
 from repro.core.cost_model import CostModel

@@ -12,7 +12,7 @@ from __future__ import annotations
 import queue as _q
 import threading
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.consolidate import ConsolidatedGraph
@@ -48,9 +48,14 @@ class RealProcessor:
     def run(self, cons: ConsolidatedGraph, plan: ExecutionPlan,
             checkpoint_path: Optional[str] = None,
             resume_from: Optional[str] = None,
-            die_after: Optional[Dict[int, int]] = None) -> RunReport:
+            die_after: Optional[Dict[int, int]] = None,
+            hosts: Optional[List[EngineHost]] = None) -> RunReport:
         """Execute the consolidated batch. Returns a RunReport whose
-        ``extra['results']`` holds the per-(query,node) outputs."""
+        ``extra['results']`` holds the per-(query,node) outputs.
+
+        ``hosts`` lets an online driver keep engines (resident models,
+        warm KV pages) alive across successive micro-batches; by default
+        each run gets fresh hosts."""
         state = BatchState(self.graph, cons.n_queries)
         if resume_from:
             restored = load_batch_state(state, resume_from)
@@ -68,28 +73,37 @@ class RealProcessor:
         dispatcher.start()
 
         seqs = plan.worker_sequences(self.W)
-        hosts = [EngineHost(self.model_configs, seed=self.seed)
-                 for _ in range(self.W)]
+        own_hosts = hosts is None
+        if hosts is None:
+            hosts = [EngineHost(self.model_configs, seed=self.seed)
+                     for _ in range(self.W)]
+        assert len(hosts) == self.W
         workers = [
             GPUWorkerThread(w, seqs[w], self.graph, state, cons.bindings,
                             hosts[w], records, rlock, t0, overflow,
                             die_after=(die_after or {}).get(w))
             for w in range(self.W)]
-        for wk in workers:
-            wk.start()
-        for wk in workers:
-            wk.join(timeout=600)
-        dispatcher.stop_flag.set()
-        dispatcher.join(timeout=60)
+        try:
+            for wk in workers:
+                wk.start()
+            for wk in workers:
+                wk.join(timeout=600)
+            dispatcher.stop_flag.set()
+            dispatcher.join(timeout=60)
 
-        for wk in workers:
-            if wk.error:
-                raise wk.error
-        if dispatcher.error:
-            raise dispatcher.error
-        if not state.all_done():
-            missing = set(self.graph.nodes) - state.macro_done
-            raise RuntimeError(f"run incomplete; missing {sorted(missing)}")
+            for wk in workers:
+                if wk.error:
+                    raise wk.error
+            if dispatcher.error:
+                raise dispatcher.error
+            if not state.all_done():
+                missing = set(self.graph.nodes) - state.macro_done
+                raise RuntimeError(
+                    f"run incomplete; missing {sorted(missing)}")
+        finally:
+            if own_hosts:               # persistent hosts outlive the run
+                for h in hosts:
+                    h.shutdown()
 
         if checkpoint_path:
             save_batch_state(state, checkpoint_path)
@@ -107,7 +121,10 @@ class RealProcessor:
             f"{q}:{node}": val
             for (q, node), val in sorted(state.results.items())}
         report.extra["model_switches"] = sum(h.switches for h in hosts)
-        report.extra["prefill_tokens_saved"] = sum(
-            e.stats.prefill_tokens_saved
-            for h in hosts for e in h._engines.values())
+        engines = [e for h in hosts for e in h._engines.values()]
+        for key in ("prefill_tokens_saved", "admission_waves",
+                    "pages_shared", "tokens_reused", "coalesced_requests"):
+            report.extra[key] = sum(getattr(e.stats, key) for e in engines)
+        report.extra["peak_batch"] = max(
+            (e.stats.peak_batch for e in engines), default=0)
         return report

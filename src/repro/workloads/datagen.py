@@ -8,7 +8,6 @@ crew a many-to-many bridge, pages indexed by title).
 from __future__ import annotations
 
 import random
-from typing import Dict
 
 from repro.workloads.minidb import MiniDB
 

@@ -1,5 +1,4 @@
 """Halo core: parser decoupling, consolidation, DP solver vs oracle."""
-import pytest
 
 from repro.core import (BranchAndBoundOracle, CostModel, EpochDPSolver,
                         HARDWARE, PAPER_MODELS, SCHEDULERS, SolverConfig,

@@ -4,6 +4,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -17,8 +19,8 @@ from repro.launch.hlo_cost import analyze_hlo
 from repro.training.optimizer import AdamWConfig, adamw_init
 from repro.training.trainer import TrainerConfig, make_train_step
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 cfg = get_smoke("qwen3-8b").replace(d_model=64, d_ff=256, vocab_size=512)
 model = build_model(cfg)
 pol = ShardingPolicy.for_mesh(mesh)
@@ -43,6 +45,7 @@ print("DRYRUN_OK", r["flops"])
 """
 
 
+@pytest.mark.multidevice
 def test_lower_compile_on_8_device_mesh():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)

@@ -3,12 +3,15 @@ import string
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.coalesce import CoalesceTable, canonical_signature
 from repro.core.cost_model import CostModel, HARDWARE, PAPER_MODELS
 from repro.core.graphspec import GraphSpec, NodeSpec, NodeType
-from repro.core.plan import ExecutionPlan
 from repro.core.solver import EpochDPSolver, SolverConfig
 from repro.engine.prefix_tree import RadixPrefixTree, batch_shared_prefix
 from repro.kernels.decode_attention.ref import decode_attention_ref, lse_combine
