@@ -130,8 +130,11 @@ def smoke_models_for(g: GraphSpec):
 
 
 def make_real_processor(workload="w+", n=6, workers=2, decode_cap=4,
-                        seed=0):
-    """(processor, graph, cons, bindings, plan) for real-engine runs."""
+                        seed=0, latency_scale=0.0, **proc_kw):
+    """(processor, graph, cons, bindings, plan) for real-engine runs.
+
+    ``proc_kw`` forwards to RealProcessor (``pipelining``,
+    ``engine_kwargs``, ...)."""
     from repro.runtime import RealProcessor
     from repro.workloads.datagen import build_database
     from repro.workloads.tools import ToolRuntime
@@ -140,8 +143,8 @@ def make_real_processor(workload="w+", n=6, workers=2, decode_cap=4,
     plan = halo_plan(g, cons, workers)
     proc = RealProcessor(
         g, smoke_models_for(g),
-        ToolRuntime(build_database(dbname), latency_scale=0.0),
-        num_workers=workers, decode_cap=decode_cap, seed=seed)
+        ToolRuntime(build_database(dbname), latency_scale=latency_scale),
+        num_workers=workers, decode_cap=decode_cap, seed=seed, **proc_kw)
     return proc, g, cons, bindings, plan
 
 
@@ -155,4 +158,6 @@ def engine_stat_cols(rep) -> Dict[str, float]:
         "admission_waves": x.get("admission_waves", 0),
         "peak_batch": x.get("peak_batch", 0),
         "coalesced_requests": x.get("coalesced_requests", 0),
+        "cpu_gpu_overlap_s": x.get("cpu_gpu_overlap_s", 0.0),
+        "replans": x.get("replans", 0),
     }

@@ -47,7 +47,35 @@ def real_rows(n_queries: int = 6, workers: int = 2,
     rep = proc.run(cons, plan)
     return [{"workload": "w+", "system": "halo-real",
              "makespan_s": round(rep.makespan, 2),
-             **engine_stat_cols(rep)}]
+             **engine_stat_cols(rep)}] + pipelining_rows(
+        n_queries, workers, max(decode_cap, 6))
+
+
+def pipelining_rows(n_queries: int = 6, workers: int = 2,
+                    decode_cap: int = 6) -> List[Dict]:
+    """WT tool-pipeline: per-request pipelining vs the macro barrier on
+    WARM engines (steady-state serving; a first run pays JIT compile).
+    The pipelined row shows ``cpu_gpu_overlap_s > 0`` — tool tasks of
+    early-retiring queries running under the stragglers' decode."""
+    from repro.runtime.executors import EngineHost
+    rows = []
+    for pipe, name in ((False, "halo-real-barrier"),
+                       (True, "halo-real-pipelined")):
+        proc, _, cons, _, plan = make_real_processor(
+            "wt", n_queries, workers, decode_cap,
+            latency_scale=1.0, pipelining=pipe)
+        hosts = [EngineHost(proc.model_configs, seed=proc.seed)
+                 for _ in range(workers)]
+        try:
+            proc.run(cons, plan, hosts=hosts)          # warm the engines
+            rep = proc.run(cons, plan, hosts=hosts)
+        finally:
+            for h in hosts:
+                h.shutdown()
+        rows.append({"workload": "wt", "system": name,
+                     "makespan_s": round(rep.makespan, 3),
+                     **engine_stat_cols(rep)})
+    return rows
 
 
 if __name__ == "__main__":

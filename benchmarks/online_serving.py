@@ -54,25 +54,39 @@ def run(n_queries: int = 128, workers: int = 3, micro_batch: int = 16,
 
 def real_stream_rows(n_queries: int = 8, workers: int = 2,
                      micro_batch: int = 4, decode_cap: int = 3) -> List[Dict]:
-    """Micro-batched arrival against real engines with persistent hosts."""
+    """Micro-batched arrival against real engines with persistent hosts
+    AND a persistent OnlineOptimizer: later micro-batches run on warm KV
+    pages and on a cost model calibrated by the earlier ones (replans
+    fire when observed epoch cost drifts off the plan)."""
     from benchmarks.common import make_real_processor
+    from repro.runtime import OnlineOptimizer
     from repro.runtime.executors import EngineHost
     proc, g, _, bindings, plan = make_real_processor(
         "w+", n_queries, workers, decode_cap)
     hosts = [EngineHost(proc.model_configs, seed=proc.seed)
              for _ in range(workers)]
+    cm = make_cm(g, consolidate(g, bindings[:micro_batch]))
+    opt = OnlineOptimizer(cm)      # run() rebinds cm to the capped graph
     t0 = time.perf_counter()
     rep = None
+    replans = 0
     for lo in range(0, len(bindings), micro_batch):
         cb = consolidate(g, bindings[lo:lo + micro_batch])
-        rep = proc.run(cb, plan, hosts=hosts)        # engines stay warm
+        rep = proc.run(cb, plan, hosts=hosts,        # engines stay warm
+                       optimizer=opt)
+        replans += rep.extra["replans"]
     wall = time.perf_counter() - t0
     for h in hosts:
         h.shutdown()
+    calib = opt.calibration_summary()
     return [{"workload": "w+", "system": "halo-real",
              "qps": round(n_queries / wall, 3),
              "makespan_s": round(wall, 1),
-             **engine_stat_cols(rep)}]
+             **engine_stat_cols(rep),
+             "replans": replans,
+             "mfu_eff": round(calib["mfu_eff"], 5),
+             "bw_eff_eff": round(calib["bw_eff_eff"], 5),
+             "calib_samples": calib["samples"]}]
 
 
 if __name__ == "__main__":

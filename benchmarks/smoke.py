@@ -1,0 +1,46 @@
+"""Nightly benchmark smoke — tiny-N e2e latency + online serving.
+
+    PYTHONPATH=src python -m benchmarks.smoke
+
+Runs the simulated baselines at small N plus the REAL continuous-
+batching engines (pipelined-vs-barrier WT rows, calibrated online
+stream) and writes one ``BENCH_<section>.json`` per section into
+``experiments/results/`` — CI uploads them as artifacts so the perf
+trajectory is recorded run over run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks import e2e_latency, online_serving
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "results")
+
+
+def main() -> int:
+    sections = {
+        "BENCH_e2e_latency": lambda: e2e_latency.run(
+            64, include_real=True),
+        "BENCH_online_serving": lambda: (
+            online_serving.run(32)
+            + online_serving.real_stream_rows()),
+    }
+    os.makedirs(OUT, exist_ok=True)
+    for name, fn in sections.items():
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = time.perf_counter() - t0
+        path = os.path.join(OUT, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print(f"{name}: {len(rows)} rows in {dt:.1f}s -> {path}")
+        for r in rows:
+            if str(r.get("system", "")).startswith("halo-real"):
+                print("  ", r)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

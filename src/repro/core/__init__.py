@@ -18,8 +18,8 @@ from repro.core.coalesce import CoalesceTable, canonical_signature
 from repro.core.consolidate import ConsolidatedGraph, consolidate
 from repro.core.cost_model import (
     A100, H100, H200, HARDWARE, PAPER_MODELS, TPU_V5E, CostModel,
-    EpochWeights, HardwareProfile, LLMProfile, OperatorProfiler,
-    profile_from_config,
+    EpochWeights, HardwareCalibration, HardwareProfile, LLMProfile,
+    OperatorProfiler, profile_from_config,
 )
 from repro.core.graphspec import GraphSpec, LLMDag, NodeSpec, NodeType
 from repro.core.optimality import optimality_score
@@ -34,7 +34,8 @@ from repro.core.state import SystemState, WorkerContext
 
 __all__ = [
     "CoalesceTable", "canonical_signature", "ConsolidatedGraph",
-    "consolidate", "CostModel", "EpochWeights", "HardwareProfile",
+    "consolidate", "CostModel", "EpochWeights", "HardwareCalibration",
+    "HardwareProfile",
     "LLMProfile", "OperatorProfiler", "profile_from_config", "HARDWARE",
     "PAPER_MODELS", "H200", "H100", "A100", "TPU_V5E", "GraphSpec",
     "LLMDag", "NodeSpec", "NodeType", "optimality_score",

@@ -19,7 +19,7 @@ for HTTP / local functions, continuously calibrated online.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core.graphspec import GraphSpec, NodeSpec
@@ -135,6 +135,69 @@ class OperatorProfiler:
             self.alpha * observed + (1 - self.alpha) * prev)
         self._count[key] = self._count.get(key, 0) + 1
 
+    @property
+    def observations(self) -> int:
+        return sum(self._count.values())
+
+    def calibrated_keys(self) -> int:
+        return len(self._ewma)
+
+
+class HardwareCalibration:
+    """Fit the roofline's effective ``mfu``/``bw_eff`` knobs online.
+
+    Only TOTAL node latency is observable, so this is a single
+    time-scale fit: the ratio of predicted to observed latency rescales
+    both knobs together (apportioning the total by predicted phase
+    shares collapses to the same scalar, so the knobs stay correlated —
+    decoupling them needs separately measured prefill/decode timings,
+    a ROADMAP item).  An EWMA tracks the scale; ``profile()`` returns
+    the base HardwareProfile with the calibrated knobs substituted —
+    feed it back into a CostModel and predictions converge onto the
+    machine actually running the batch.
+    """
+
+    def __init__(self, base: HardwareProfile, alpha: float = 0.5,
+                 lo: float = 1e-4, hi: float = 10.0):
+        self.base = base
+        self.alpha = alpha
+        self.lo, self.hi = lo, hi
+        self.mfu = base.mfu
+        self.bw_eff = base.bw_eff
+        self.samples = 0
+
+    def observe(self, t_prefill_pred: float, t_decode_pred: float,
+                observed_s: float) -> None:
+        """One (predicted prefill s, predicted decode s, measured s) sample.
+
+        The predictions must come from a cost model currently using
+        ``self.profile()`` (or ``base`` for the first sample) so the
+        implied correction composes with prior calibration.
+        """
+        t_pred = t_prefill_pred + t_decode_pred
+        if t_pred <= 0.0 or observed_s <= 0.0:
+            return
+        # single observable (total latency) -> single implied time-scale
+        r = t_pred / observed_s            # <1: machine slower than modeled
+        a = self.alpha
+        self.mfu = (1 - a) * self.mfu + a * self._clip(self.mfu * r)
+        self.bw_eff = (1 - a) * self.bw_eff + a * self._clip(self.bw_eff * r)
+        self.samples += 1
+
+    def _clip(self, x: float) -> float:
+        return min(max(x, self.lo), self.hi)
+
+    def profile(self) -> HardwareProfile:
+        return replace(self.base, mfu=self.mfu, bw_eff=self.bw_eff)
+
+    def deltas(self) -> Dict[str, float]:
+        """Calibrated-vs-static knob drift (for RunReport surfacing)."""
+        return {
+            "mfu_base": self.base.mfu, "mfu_eff": self.mfu,
+            "bw_eff_base": self.base.bw_eff, "bw_eff_eff": self.bw_eff,
+            "samples": self.samples,
+        }
+
 
 # ---------------------------------------------------------------------------
 # the cost model
@@ -150,7 +213,7 @@ class CostModel:
     def __init__(self, graph: GraphSpec, hardware: HardwareProfile,
                  models: Dict[str, LLMProfile],
                  profiler: Optional[OperatorProfiler] = None,
-                 weights: EpochWeights = EpochWeights(),
+                 weights: Optional[EpochWeights] = None,
                  batch_sizes: Optional[Dict[str, int]] = None,
                  avg_context_tokens: float = 256.0,
                  use_profiling: bool = True,
@@ -160,7 +223,9 @@ class CostModel:
         self.hw = hardware
         self.models = models
         self.profiler = profiler or OperatorProfiler()
-        self.weights = weights
+        # fresh instance per model: a module-level default would be shared
+        # (and mutable) across every CostModel in the process
+        self.weights = weights if weights is not None else EpochWeights()
         # physical batch size per LLM node (after coalescing); default 1
         self.batch_sizes = dict(batch_sizes or {})
         self.avg_context_tokens = avg_context_tokens
@@ -188,28 +253,46 @@ class CostModel:
         if warm_parent is None:
             return p
         prof = self.models[v.model]
-        shared = min(self.avg_context_tokens, 0.75 * p)
         if not prof.supports_partial_prefix:
             # recurrent state: only whole-prefix snapshots reusable; credit
-            # the snapshot only when the parent context IS the whole prompt
-            return p if shared < p else 0.0
+            # the snapshot only when the warm parent context covers the
+            # whole prompt (prompt == parent context + nothing new)
+            return 0.0 if self.avg_context_tokens >= p else p
+        shared = min(self.avg_context_tokens, 0.75 * p)
         return p - shared
 
-    def t_infer(self, v: NodeSpec, ctx: WorkerContext,
-                parents: Sequence[str]) -> float:
+    def _roofline_times(self, v: NodeSpec, eff_p: float, n: int
+                        ) -> Tuple[float, float]:
+        """(t_prefill, t_decode): the single source of the roofline
+        formulas — both planning (t_infer) and online calibration
+        (infer_breakdown) must price GPU work identically or the
+        calibrated knobs decouple from the plans they steer."""
         prof = self.models[v.model]
-        n = self._batch(v)
-        if not self.use_profiling:
-            # ablation "w/o profiling scoring": score by dependency count
-            return 0.05 * (1 + len(parents)) * n
-        eff_p = self.effective_prefill_tokens(v, ctx, parents)
         t_prefill = (2.0 * prof.active_param_count * eff_p * n
                      / (self.hw.flops * self.hw.mfu))
         # decode: each step reads the weights once + the batch's KV
         ctx_len = self.avg_context_tokens + v.est_prompt_tokens
         kv_read = n * prof.kv_bytes_per_token * ctx_len
-        t_step = (prof.param_bytes + kv_read) / (self.hw.hbm_bw * self.hw.bw_eff)
-        t_decode = v.max_new_tokens * t_step
+        t_step = (prof.param_bytes + kv_read) / (self.hw.hbm_bw
+                                                 * self.hw.bw_eff)
+        return t_prefill, v.max_new_tokens * t_step
+
+    def infer_breakdown(self, v: NodeSpec,
+                        batch: Optional[int] = None
+                        ) -> Tuple[float, float]:
+        """(t_prefill, t_decode) for a cold context — the two roofline
+        phases the online HardwareCalibration fits its knobs from."""
+        n = batch if batch is not None else self._batch(v)
+        return self._roofline_times(v, float(v.est_prompt_tokens), n)
+
+    def t_infer(self, v: NodeSpec, ctx: WorkerContext,
+                parents: Sequence[str]) -> float:
+        n = self._batch(v)
+        if not self.use_profiling:
+            # ablation "w/o profiling scoring": score by dependency count
+            return 0.05 * (1 + len(parents)) * n
+        eff_p = self.effective_prefill_tokens(v, ctx, parents)
+        t_prefill, t_decode = self._roofline_times(v, eff_p, n)
         return t_prefill + t_decode
 
     # -------------------------------------------------------------- T_prep
@@ -244,6 +327,14 @@ class CostModel:
         return t, ctx.after(v_id, v.model)
 
     # ---------------------------------------------------------- epoch cost
+    def epoch_blend(self, busy_values: Sequence[float]) -> float:
+        """The epoch scoring blend over per-worker busy times — shared by
+        the solver's predictions AND the online drift monitor's observed
+        costs: both must score identically or drift over/under-fires."""
+        mu, lam = self.weights.mu, self.weights.lam
+        return (mu * max(busy_values) + (1 - mu) * sum(busy_values)
+                + lam * self.hw.dispatch_overhead)
+
     def epoch_cost(self, components: Sequence[Sequence[str]],
                    workers: Sequence[int], state: SystemState
                    ) -> Tuple[float, Tuple[WorkerContext, ...], Dict[int, float]]:
@@ -265,8 +356,4 @@ class CostModel:
                 done.add(v_id)
             ctxs[w] = ctx
             t_w[w] = t_w.get(w, 0.0) + busy
-        mu, lam = self.weights.mu, self.weights.lam
-        c = (mu * max(t_w.values())
-             + (1 - mu) * sum(t_w.values())
-             + lam * self.hw.dispatch_overhead)
-        return c, tuple(ctxs), t_w
+        return self.epoch_blend(list(t_w.values())), tuple(ctxs), t_w

@@ -51,8 +51,10 @@ class ExecutionPlan:
         return {v: w for v, w in self.node_order()}
 
     # ------------------------------------------------------------------
-    def validate(self, dag: LLMDag) -> None:
-        done: set = set()
+    def validate(self, dag: LLMDag, done=()) -> None:
+        """Check precedence/coverage; ``done`` seeds the completed set
+        for tail plans solved from a non-empty SystemState."""
+        done = set(done)
         for e in self.epochs:
             batch = {v for comp in e.components for v in comp}
             if len(e.components) != len(e.workers):

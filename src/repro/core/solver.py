@@ -42,10 +42,12 @@ class SolverConfig:
 
 class EpochDPSolver:
     def __init__(self, dag: LLMDag, cost_model: CostModel,
-                 config: SolverConfig = SolverConfig()):
+                 config: Optional[SolverConfig] = None):
         self.dag = dag
         self.cm = cost_model
-        self.cfg = config
+        # fresh instance per solver: a module-level default would be one
+        # shared mutable object across every EpochDPSolver in the process
+        self.cfg = config if config is not None else SolverConfig()
         self.memo: Dict[Tuple, Tuple[float, Optional[Tuple]]] = {}
         self.states_explored = 0
 
@@ -138,6 +140,7 @@ class EpochDPSolver:
     def solve(self, initial: Optional[SystemState] = None) -> ExecutionPlan:
         t0 = time.perf_counter()
         state = initial or SystemState.initial(self.cfg.num_workers)
+        start_done = state.done
         total, _ = self._solve(state)
         # plan reconstruction from the memo chain
         plan = ExecutionPlan(predicted_cost=total, scheduler_name="halo-dp")
@@ -149,5 +152,5 @@ class EpochDPSolver:
                                      list(workers), c_now))
             state = nxt
         plan.solver_seconds = time.perf_counter() - t0
-        plan.validate(self.dag)
+        plan.validate(self.dag, start_done)
         return plan

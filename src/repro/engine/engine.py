@@ -76,24 +76,62 @@ class EngineError(RuntimeError):
 
 
 class RequestHandle:
-    """Completion handle for one submitted request."""
+    """Completion handle for one submitted request.
+
+    ``add_done_callback`` is the per-request pipelining hook: the real
+    Processor publishes each query's result (and wakes its downstream
+    tool tasks) the moment that request retires, instead of waiting for
+    the slowest request of the macro-batch.
+    """
 
     def __init__(self, rid: int):
         self.rid = rid
         self._event = threading.Event()
         self._result: Optional[List[int]] = None
         self._error: Optional[BaseException] = None
+        self._callbacks: List[Any] = []
+        self._cb_lock = threading.Lock()
+
+    def add_done_callback(self, fn) -> None:
+        """Call ``fn(handle)`` when the request completes (or failed).
+
+        Runs on the engine loop thread (or inline if already done) —
+        callbacks must be quick and must not block on engine work.
+        """
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _fire_callbacks(self) -> None:
+        with self._cb_lock:
+            cbs, self._callbacks = self._callbacks, []
+        for fn in cbs:
+            # callbacks run inside the engine loop's fatal-error scope;
+            # one misbehaving observer must not fail every in-flight
+            # request (or kill the loop thread during _fail_all)
+            try:
+                fn(self)
+            except Exception:
+                pass
 
     def _fulfill(self, tokens: List[int]) -> None:
         self._result = tokens
         self._event.set()
+        self._fire_callbacks()
 
     def _fail(self, err: BaseException) -> None:
         self._error = err
         self._event.set()
+        self._fire_callbacks()
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def exception(self) -> Optional[BaseException]:
+        """The failure, if the request failed (None while pending/ok)."""
+        return self._error
 
     def result(self, timeout: float = 600.0) -> List[int]:
         if not self._event.wait(timeout):

@@ -6,6 +6,8 @@ from repro.runtime.events import RunReport, TaskRecord
 from repro.runtime.opwise import OpWiseSimulator
 from repro.runtime.simulator import SimulatedProcessor, OnlineSimulator
 from repro.runtime.processor import RealProcessor
+from repro.runtime.replan import OnlineOptimizer
 
 __all__ = ["RunReport", "TaskRecord", "SimulatedProcessor",
-           "OnlineSimulator", "RealProcessor", "OpWiseSimulator"]
+           "OnlineSimulator", "RealProcessor", "OpWiseSimulator",
+           "OnlineOptimizer"]

@@ -1,15 +1,26 @@
 """Coordinator bookkeeping shared by the real Processor backend.
 
-Tracks per-(query, node) results and macro-node completion over the
-consolidated batch; thread-safe; supports per-query wavefront promotion
-for tool nodes and macro-barrier readiness for (batched) LLM nodes.
+* ``BatchState`` tracks per-(query, node) results and macro-node
+  completion over the consolidated batch; thread-safe; supports per-query
+  wavefront promotion for tool nodes, per-request pipelining for LLM
+  nodes, and macro-barrier readiness (checkpoint restore / barrier mode).
+  Listeners registered with ``add_listener`` get every (query, node)
+  result as it lands — the event feed driving the ToolDispatcher and the
+  replanning monitor without polling.
+* ``PlanBoard`` is the mutable view of an ExecutionPlan's per-worker node
+  sequences.  Workers *claim* nodes in sequence order; a node is released
+  only once all its LLM-DAG parents are claimed, so the global claim
+  order is a topological order of the LLM DAG — which is what makes a
+  mid-run replan splice (claimed prefix + re-solved tail) a valid plan.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
-from repro.core.graphspec import GraphSpec
+from repro.core.graphspec import GraphSpec, LLMDag
+from repro.core.plan import Epoch, ExecutionPlan
+from repro.core.state import WorkerContext
 
 
 class BatchState:
@@ -20,8 +31,18 @@ class BatchState:
         self.results: Dict[Tuple[int, str], str] = {}
         self.node_done_count: Dict[str, int] = {v: 0 for v in graph.nodes}
         self.macro_done: Set[str] = set()
+        self._listeners: List[Callable[[int, str], None]] = []
 
     # ------------------------------------------------------------------
+    def add_listener(self, fn: Callable[[int, str], None]) -> None:
+        """Register a per-result observer ``fn(query, node)``.
+
+        Called after every ``set_result`` *outside* the state lock, on
+        whichever thread produced the result — observers must be cheap
+        and non-blocking (enqueue + wake, not work).
+        """
+        self._listeners.append(fn)
+
     def set_result(self, q: int, node: str, value: str) -> bool:
         """Record one (query, node) result. Returns True if the macro node
         just completed (all queries done)."""
@@ -30,11 +51,15 @@ class BatchState:
                 return False
             self.results[(q, node)] = value
             self.node_done_count[node] += 1
-            if self.node_done_count[node] == self.n:
+            macro = self.node_done_count[node] == self.n
+            if macro:
                 self.macro_done.add(node)
-                self.lock.notify_all()
-                return True
-            return False
+            # per-result wakeup: pipelined workers wait on single-query
+            # readiness, not just macro completion
+            self.lock.notify_all()
+        for fn in self._listeners:
+            fn(q, node)
+        return macro
 
     def macro_ready(self, node: str) -> bool:
         """All parents complete for ALL queries (LLM barrier readiness)."""
@@ -43,7 +68,7 @@ class BatchState:
                        for p in self.graph.parents(node))
 
     def query_ready(self, q: int, node: str) -> bool:
-        """All parents complete for ONE query (tool wavefront readiness)."""
+        """All parents complete for ONE query (wavefront readiness)."""
         with self.lock:
             return all((q, p) in self.results
                        for p in self.graph.parents(node))
@@ -65,3 +90,129 @@ class BatchState:
     def all_done(self) -> bool:
         with self.lock:
             return len(self.macro_done) == len(self.graph.nodes)
+
+
+class PlanBoard:
+    """Claimable per-worker node sequences with atomic tail replacement.
+
+    The GPU workers pull their next node from here instead of a frozen
+    list, which is what lets the replanning monitor swap every worker's
+    unclaimed tail mid-run.  Overflow from failed workers also routes
+    through the board (claimable by any surviving worker).
+    """
+
+    def __init__(self, plan: ExecutionPlan, dag: LLMDag, num_workers: int):
+        self.lock = threading.Condition()
+        self.dag = dag
+        self.W = num_workers
+        self.seqs: List[List[str]] = plan.worker_sequences(num_workers)
+        self.claimed: List[str] = []                   # global claim order
+        self.claimed_set: Set[str] = set()
+        self.claim_chain: List[List[str]] = [[] for _ in range(num_workers)]
+        self.overflow: List[str] = []                  # from failed workers
+        self.dead: Set[int] = set()                    # abandoned workers
+        self.splices = 0
+
+    # ------------------------------------------------------------------
+    def _releasable(self, nid: str) -> bool:
+        return all(p in self.claimed_set for p in self.dag.parents(nid))
+
+    def _claim_locked(self, wid: int, nid: str) -> str:
+        self.claimed.append(nid)
+        self.claimed_set.add(nid)
+        self.claim_chain[wid].append(nid)
+        self.lock.notify_all()
+        return nid
+
+    def try_claim(self, wid: int) -> Optional[str]:
+        """Next node for worker ``wid``: own sequence head if releasable,
+        else a releasable overflow node. None if nothing claimable now."""
+        with self.lock:
+            while self.seqs[wid] and self.seqs[wid][0] in self.claimed_set:
+                self.seqs[wid].pop(0)
+            if self.seqs[wid] and self._releasable(self.seqs[wid][0]):
+                return self._claim_locked(wid, self.seqs[wid].pop(0))
+            for i, nid in enumerate(self.overflow):
+                if nid in self.claimed_set:
+                    continue
+                if self._releasable(nid):
+                    self.overflow.pop(i)
+                    return self._claim_locked(wid, nid)
+            return None
+
+    def abandon(self, wid: int) -> None:
+        """A (simulated-)failed worker returns its unclaimed tail."""
+        with self.lock:
+            rest = [n for n in self.seqs[wid] if n not in self.claimed_set]
+            self.seqs[wid] = []
+            self.dead.add(wid)
+            self.overflow.extend(rest)
+            self.lock.notify_all()
+
+    def exhausted(self, wid: int) -> bool:
+        """True when worker ``wid`` can never claim anything again.
+
+        Deliberately global: an idle worker must stay parked (not exit)
+        while ANY node is unclaimed, because a mid-run replan splice may
+        hand it part of the new tail.
+        """
+        with self.lock:
+            return len(self.claimed) == len(self.dag.node_ids)
+
+    def remaining(self) -> int:
+        with self.lock:
+            return len(self.dag.node_ids) - len(self.claimed)
+
+    # ------------------------------------------------------------------
+    def contexts_locked(self) -> Tuple[WorkerContext, ...]:
+        """Live per-worker contexts implied by each claim chain.
+        Caller must hold ``self.lock``."""
+        out = []
+        for chain in self.claim_chain:
+            ctx = WorkerContext()
+            for nid in chain:
+                ctx = ctx.after(nid, self.dag.spec(nid).model)
+            out.append(ctx)
+        return tuple(out)
+
+    def contexts(self) -> Tuple[WorkerContext, ...]:
+        with self.lock:
+            return self.contexts_locked()
+
+    def claimed_prefix_epochs_locked(self) -> List[Epoch]:
+        """The executed prefix as singleton epochs in claim order — valid
+        by construction because claims follow DAG topological order.
+        Caller must hold ``self.lock``."""
+        chains = self.claim_chain
+        return [Epoch([[nid]],
+                      [next(w for w in range(self.W)
+                            if nid in chains[w])])
+                for nid in self.claimed]
+
+    def claimed_prefix_epochs(self) -> List[Epoch]:
+        with self.lock:
+            return self.claimed_prefix_epochs_locked()
+
+    def splice(self, tail: ExecutionPlan) -> None:
+        """Replace every worker's unclaimed tail with ``tail``'s sequences.
+
+        The caller must have solved ``tail`` from an initial SystemState
+        whose done-set equals the current claimed set.
+        """
+        with self.lock:
+            seqs = tail.worker_sequences(self.W)
+            self.seqs = [[n for n in seqs[w] if n not in self.claimed_set]
+                         for w in range(self.W)]
+            # tail work planned onto an abandoned worker would be
+            # unclaimable (try_claim only reads seqs[wid] + overflow) —
+            # reroute it through overflow for the survivors
+            orphaned: List[str] = []
+            for w in self.dead:
+                orphaned.extend(self.seqs[w])
+                self.seqs[w] = []
+            self.overflow = [n for n in self.overflow
+                             if n not in self.claimed_set
+                             and not any(n in s for s in self.seqs)
+                             and n not in orphaned] + orphaned
+            self.splices += 1
+            self.lock.notify_all()

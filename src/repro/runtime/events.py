@@ -48,6 +48,35 @@ class RunReport:
     def cpu_seconds(self) -> float:
         return sum(r.duration for r in self.records if r.kind == "tool")
 
+    def cpu_gpu_overlap(self) -> float:
+        """Seconds during which tool (CPU) work and LLM (GPU) work ran
+        concurrently — the fine-grained pipelining win (§5); 0 under a
+        strict macro barrier on a linear llm→tool chain."""
+        def merged(kind: str) -> List[List[float]]:
+            iv = sorted([r.start, r.end] for r in self.records
+                        if r.kind == kind)
+            out: List[List[float]] = []
+            for s, e in iv:
+                if out and s <= out[-1][1]:
+                    out[-1][1] = max(out[-1][1], e)
+                else:
+                    out.append([s, e])
+            return out
+
+        llm, tool = merged("llm"), merged("tool")
+        i = j = 0
+        total = 0.0
+        while i < len(llm) and j < len(tool):
+            s = max(llm[i][0], tool[j][0])
+            e = min(llm[i][1], tool[j][1])
+            if e > s:
+                total += e - s
+            if llm[i][1] < tool[j][1]:
+                i += 1
+            else:
+                j += 1
+        return total
+
     def utilization_trace(self, dt: float = 1.0) -> List[Tuple[float, float]]:
         """(t, fraction of GPU workers busy) samples."""
         if not self.records or self.num_workers == 0:

@@ -3,12 +3,16 @@
 * EngineHost — a worker's model slot: at most one resident continuous-
   batching engine; ``submit()`` feeds requests into the engine's
   persistent loop (admitted mid-decode) and returns handles.
-* GPUWorkerThread — a stateful GPU executor: runs its planned node
-  sequence, submitting each node's requests into the resident engine and
-  collecting handles; model switches drain/unload/load (the T_model
-  event, measured).
+* GPUWorkerThread — a stateful GPU executor: claims its planned nodes
+  from the PlanBoard and, in pipelined mode, submits each query's
+  request the moment THAT query's deps land and publishes each result
+  the moment its request retires (per-handle callbacks) — no macro
+  barrier; barrier mode (``pipelining=False``) keeps the historical
+  wait-all semantics for A/B comparison.
 * ToolDispatcher — bounded CPU pool with per-query wavefront promotion,
-  depth-priority ordering and signature coalescing.
+  depth-priority ordering and signature coalescing; event-driven (woken
+  by per-result listeners, incremental candidate scan) instead of a
+  periodic full rescan.
 """
 from __future__ import annotations
 
@@ -24,7 +28,7 @@ from repro.core.graphspec import GraphSpec
 from repro.core.parser import render
 from repro.engine.engine import InferenceEngine, RequestHandle
 from repro.engine.tokenizer import detokenize, tokenize
-from repro.runtime.coordinator import BatchState
+from repro.runtime.coordinator import BatchState, PlanBoard
 from repro.runtime.events import TaskRecord
 from repro.workloads.tools import ToolRuntime
 
@@ -32,9 +36,11 @@ from repro.workloads.tools import ToolRuntime
 class EngineHost:
     """One worker's model slot: at most one resident engine."""
 
-    def __init__(self, model_configs: Dict[str, ModelConfig], seed: int = 0):
+    def __init__(self, model_configs: Dict[str, ModelConfig], seed: int = 0,
+                 engine_kwargs: Optional[Dict[str, Any]] = None):
         self.model_configs = model_configs
         self.seed = seed
+        self.engine_kwargs = dict(engine_kwargs or {})
         self._engines: Dict[str, InferenceEngine] = {}
         self.resident: Optional[str] = None
         self.switches = 0
@@ -43,7 +49,8 @@ class EngineHost:
     def engine_for(self, model: str) -> InferenceEngine:
         if model not in self._engines:
             self._engines[model] = InferenceEngine(
-                self.model_configs[model], seed=self.seed)
+                self.model_configs[model], seed=self.seed,
+                **self.engine_kwargs)
         eng = self._engines[model]
         if self.resident != model:
             if self.resident is not None:
@@ -75,15 +82,15 @@ class EngineHost:
 
 
 class GPUWorkerThread(threading.Thread):
-    def __init__(self, wid: int, seq: Sequence[str], graph: GraphSpec,
+    def __init__(self, wid: int, board: PlanBoard, graph: GraphSpec,
                  state: BatchState, bindings: Sequence[dict],
                  host: EngineHost, records: List[TaskRecord],
                  records_lock: threading.Lock, t0: float,
-                 overflow: "_q.SimpleQueue[str]",
-                 die_after: Optional[int] = None):
+                 die_after: Optional[int] = None, pipelining: bool = True,
+                 optimizer=None):
         super().__init__(daemon=True, name=f"gpu{wid}")
         self.wid = wid
-        self.seq = list(seq)
+        self.board = board
         self.graph = graph
         self.state = state
         self.bindings = bindings
@@ -91,17 +98,34 @@ class GPUWorkerThread(threading.Thread):
         self.records = records
         self.records_lock = records_lock
         self.t0 = t0
-        self.overflow = overflow
         self.die_after = die_after
+        self.pipelining = pipelining
+        self.optimizer = optimizer
         self.executed = 0
         self.error: Optional[BaseException] = None
+        self._outstanding: List[RequestHandle] = []
 
     # ------------------------------------------------------------------
-    def _run_node(self, nid: str) -> None:
+    def _fail(self, err: BaseException) -> None:
+        if self.error is None:
+            self.error = err
+        with self.state.lock:
+            self.state.lock.notify_all()
+
+    def _pending_queries(self, nid: str) -> List[int]:
+        with self.state.lock:
+            return [q for q in range(self.state.n)
+                    if (q, nid) not in self.state.results]
+
+    # ----------------------------------------------------- barrier mode
+    def _run_node_barrier(self, nid: str) -> None:
         spec = self.graph.nodes[nid]
         if nid in self.state.macro_done:
             return                                   # restored from checkpoint
-        self.state.wait_macro_ready(nid)
+        # the board releases claims on parents-CLAIMED, so this wait is
+        # real in barrier mode — give it the same 600s budget as every
+        # other dependency wait
+        self.state.wait_macro_ready(nid, timeout=600.0)
         eng = self.host.engine_for(spec.model)
         prompts = []
         for q, b in enumerate(self.bindings):
@@ -117,66 +141,171 @@ class GPUWorkerThread(threading.Thread):
             self.records.append(TaskRecord(
                 node=nid, kind="llm", worker=f"gpu{self.wid}",
                 start=ts, end=te, batch=len(prompts)))
+        if self.optimizer is not None:
+            self.optimizer.observe_llm(nid, len(prompts), te - ts,
+                                       f"gpu{self.wid}", span=(ts, te))
         for q, toks in enumerate(outs):
             self.state.set_result(q, nid, detokenize(toks))
 
+    # --------------------------------------------------- pipelined mode
+    def _run_node_pipelined(self, nid: str) -> None:
+        """Submit ``nid``'s per-query requests as each query's deps land;
+        publish each result from the handle's completion callback.
+
+        Returns once every query is SUBMITTED (not completed): the worker
+        moves on to its next node while this one is still decoding, so
+        same-model successors join the running continuous batch.
+        """
+        spec = self.graph.nodes[nid]
+        state = self.state
+        todo = self._pending_queries(nid)        # checkpoint-restored skipped
+        if not todo:
+            return
+        node_track = {"done": 0, "expected": len(todo)}
+        tlock = threading.Lock()
+        eng = None
+        pending = set(todo)
+        deadline = time.monotonic() + 600.0
+        while pending:
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"deps of {nid!r} never completed")
+            wave = self._settle_ready_wave(nid, pending)
+            if not wave:
+                with state.lock:
+                    state.lock.wait(timeout=0.05)
+                continue
+            if eng is None:
+                # first ready query pays the (measured) model switch
+                eng = self.host.engine_for(spec.model)
+            # one TaskRecord per submission wave: a wave's span is real
+            # engine-busy time, whereas one node-wide record would count
+            # the gaps spent waiting for later queries' deps as GPU work
+            # (inflating overlap and poisoning calibration samples)
+            wave_track = {"done": 0, "expected": len(wave),
+                          "start": time.perf_counter() - self.t0}
+            for q in wave:
+                text = render(spec.prompt, self.bindings[q],
+                              state.upstream(q))
+                h = eng.submit(tokenize(text, eng.cfg.vocab_size),
+                               max_new_tokens=spec.max_new_tokens,
+                               temperature=spec.temperature)
+                h.add_done_callback(
+                    self._on_request_done(nid, q, node_track, wave_track,
+                                          tlock))
+                self._outstanding.append(h)
+                pending.discard(q)
+
+    def _settle_ready_wave(self, nid: str, pending: set) -> List[int]:
+        """Queries of ``nid`` ready right now, after a short settle loop.
+
+        Same-decode-step completions upstream land microseconds apart;
+        without settling they would trickle into the engine one by one
+        and fragment the partial batch (and, on the JIT path, recompile
+        per batch shape).  Bounded at ~20 ms — still far finer-grained
+        than the macro barrier it replaces.
+        """
+        ready = {q for q in pending if self.state.query_ready(q, nid)}
+        if not ready:
+            return []
+        for _ in range(10):
+            time.sleep(0.002)
+            grown = {q for q in pending if self.state.query_ready(q, nid)}
+            if grown == ready:
+                break
+            ready = grown
+        return sorted(ready)
+
+    def _on_request_done(self, nid: str, q: int, node_track: dict,
+                         wave_track: dict, tlock: threading.Lock):
+        """Per-handle callback: publish this query's result immediately
+        (its tool tasks wake without waiting on batch stragglers)."""
+        def _cb(h: RequestHandle) -> None:
+            try:
+                self._publish(h, nid, q, node_track, wave_track, tlock)
+            except BaseException as e:     # engine swallows callback raises
+                self._fail(e)
+        return _cb
+
+    def _publish(self, h: RequestHandle, nid: str, q: int,
+                 node_track: dict, wave_track: dict,
+                 tlock: threading.Lock) -> None:
+        err = h.exception()
+        if err is not None:
+            self._fail(err)
+            return
+        toks = h.result(timeout=1.0)
+        te = time.perf_counter() - self.t0
+        with tlock:
+            wave_track["done"] += 1
+            node_track["done"] += 1
+            wave_done = wave_track["done"] == wave_track["expected"]
+            node_done = node_track["done"] == node_track["expected"]
+        if wave_done:                     # record before the final publish
+            ts = wave_track["start"]
+            with self.records_lock:
+                self.records.append(TaskRecord(
+                    node=nid, kind="llm", worker=f"gpu{self.wid}",
+                    start=ts, end=te, batch=wave_track["expected"]))
+            if self.optimizer is not None:
+                self.optimizer.observe_llm(
+                    nid, wave_track["expected"], te - ts,
+                    f"gpu{self.wid}", node_complete=node_done,
+                    span=(ts, te))
+        self.state.set_result(q, nid, detokenize(toks))
+
+    # ------------------------------------------------------------------
+    def _drain_outstanding(self) -> None:
+        for h in self._outstanding:
+            try:
+                h.result(timeout=600)
+            except BaseException as e:
+                if self.error is None:
+                    self.error = e
+        self._outstanding.clear()
+
     def run(self) -> None:
-        """Process own sequence; pick up failed peers' overflow work the
-        moment it is runnable (dependencies satisfied) — never block on a
-        node another (possibly dead) worker was supposed to produce."""
+        """Claim nodes off the board until nothing is left for us; pick
+        up failed peers' overflow work the moment it is claimable."""
         try:
-            pending = list(self.seq)
             while not self.state.all_done():
                 if (self.die_after is not None
                         and self.executed >= self.die_after):
-                    for rest in pending:              # simulated failure
-                        self.overflow.put(rest)
-                    return
-                ran = False
-                # 1) own next node, if its deps are satisfied
-                while pending and pending[0] in self.state.macro_done:
-                    pending.pop(0)
-                if pending and self.state.macro_ready(pending[0]):
-                    self._run_node(pending.pop(0))
-                    self.executed += 1
-                    ran = True
+                    self.board.abandon(self.wid)     # simulated failure
+                    break
+                nid = self.board.try_claim(self.wid)
+                if nid is None:
+                    if self.board.exhausted(self.wid):
+                        break                        # nothing left for us
+                    with self.board.lock:
+                        self.board.lock.wait(timeout=0.05)
+                    continue
+                if self.pipelining:
+                    self._run_node_pipelined(nid)
                 else:
-                    # 2) a ready overflow node from a failed worker
-                    stash = []
-                    try:
-                        while True:
-                            nid = self.overflow.get_nowait()
-                            if nid in self.state.macro_done:
-                                continue
-                            if self.state.macro_ready(nid):
-                                self._run_node(nid)
-                                self.executed += 1
-                                ran = True
-                                break
-                            stash.append(nid)
-                    except _q.Empty:
-                        pass
-                    for nid in stash:
-                        self.overflow.put(nid)
-                if not ran:
-                    if not pending and self.overflow.empty():
-                        return                        # nothing left for us
-                    with self.state.lock:
-                        self.state.lock.wait(timeout=0.05)
+                    self._run_node_barrier(nid)
+                self.executed += 1
+            self._drain_outstanding()
         except BaseException as e:                    # surfaced by Processor
-            self.error = e
-            with self.state.lock:
-                self.state.lock.notify_all()
+            self._fail(e)
 
 
 class ToolDispatcher(threading.Thread):
     """Promotes per-query tool tasks as their deps land; coalesces by
-    canonical signature; executes on a bounded pool (backpressure)."""
+    canonical signature; executes on a bounded pool (backpressure).
+
+    Event-driven: a BatchState listener feeds every landed (query, node)
+    result into a queue; each event only wakes the *children* tool tasks
+    of that result (incremental scan) instead of re-walking the whole
+    O(nodes × queries) grid on a timer.
+    """
+
+    _FULL_SCAN_EVERY = 40          # safety-net sweeps (~10 s apart)
 
     def __init__(self, graph: GraphSpec, state: BatchState,
                  bindings: Sequence[dict], tools: ToolRuntime,
                  records: List[TaskRecord], records_lock: threading.Lock,
-                 t0: float, cpu_slots: int = 8, coalescing: bool = True):
+                 t0: float, cpu_slots: int = 8, coalescing: bool = True,
+                 optimizer=None):
         super().__init__(daemon=True, name="tool-dispatcher")
         self.graph = graph
         self.state = state
@@ -185,14 +314,35 @@ class ToolDispatcher(threading.Thread):
         self.records = records
         self.records_lock = records_lock
         self.t0 = t0
+        self.optimizer = optimizer
         self.pool = ThreadPoolExecutor(max_workers=cpu_slots)
         self.table = CoalesceTable(enabled=coalescing)
         self.dispatched: set = set()
         self.stop_flag = threading.Event()
         self.error: Optional[BaseException] = None
+        self._events: "_q.SimpleQueue" = _q.SimpleQueue()
+        self._wake = threading.Event()
+        self._depth = {t: len(graph.ancestors(t))
+                       for t in graph.tool_nodes()}
+        self._tool_children = {
+            nid: [c for c in graph.children(nid)
+                  if not graph.nodes[c].is_llm()]
+            for nid in graph.nodes}
+        state.add_listener(self._on_result)
 
     # ------------------------------------------------------------------
-    def _execute(self, sig: str, op: str, args: str) -> None:
+    def _on_result(self, q: int, node: str) -> None:
+        """BatchState listener — runs on the producing thread; enqueue
+        and wake only (no dispatch work here)."""
+        self._events.put((q, node))
+        self._wake.set()
+
+    def stop(self) -> None:
+        self.stop_flag.set()
+        self._wake.set()
+
+    # ------------------------------------------------------------------
+    def _execute(self, sig: str, op: str, args: str, origin: str) -> None:
         try:
             ts = time.perf_counter() - self.t0
             result, _ = self.tools.execute(op, args)
@@ -200,10 +350,13 @@ class ToolDispatcher(threading.Thread):
             with self.state.lock:
                 requesters = self.table.complete(sig, result)
             with self.records_lock:
+                # ``origin`` keeps the record attributable even when a
+                # coalesced signature completes with no live requesters
                 self.records.append(TaskRecord(
-                    node=requesters[0][1] if requesters else "?",
-                    kind="tool", worker="cpu", start=ts, end=te,
-                    batch=len(requesters), info=op))
+                    node=origin, kind="tool", worker="cpu", start=ts,
+                    end=te, batch=max(len(requesters), 1), info=op))
+            if self.optimizer is not None:
+                self.optimizer.observe_tool(origin, op, te - ts)
             for q, nid in requesters:
                 self.state.set_result(q, nid, str(result))
         except BaseException as e:
@@ -211,41 +364,78 @@ class ToolDispatcher(threading.Thread):
             with self.state.lock:
                 self.state.lock.notify_all()
 
+    def _maybe_dispatch(self, q: int, nid: str) -> bool:
+        """Dispatch one (query, tool) task if ready. Returns True if it
+        was dispatched (or served from the coalesce cache) just now."""
+        key = (q, nid)
+        if key in self.dispatched:
+            return False
+        with self.state.lock:
+            if key in self.state.results:
+                self.dispatched.add(key)                 # checkpointed
+                return False
+        if not self.state.query_ready(q, nid):
+            return False
+        self.dispatched.add(key)
+        spec = self.graph.nodes[nid]
+        args = render(spec.args, self.bindings[q], self.state.upstream(q))
+        with self.state.lock:
+            sig, needs_exec, cached = self.table.register(
+                spec.op, args, (q, nid))
+        if cached is not None:
+            self.state.set_result(q, nid, str(cached))
+        elif needs_exec:
+            self.pool.submit(self._execute, sig, spec.op, args, nid)
+        return True
+
     def _scan(self) -> int:
-        """Dispatch every ready (query, tool) task. Returns #dispatched."""
+        """Full sweep: dispatch every ready (query, tool) task.  Used at
+        startup (roots + checkpoint-restored deps) and as a low-frequency
+        safety net; steady-state promotion is event-driven."""
         n = 0
-        tool_nodes = sorted(
-            self.graph.tool_nodes(),
-            key=lambda t: len(self.graph.ancestors(t)))      # depth priority
+        tool_nodes = sorted(self.graph.tool_nodes(),
+                            key=lambda t: self._depth[t])    # depth priority
         for nid in tool_nodes:
-            spec = self.graph.nodes[nid]
             for q in range(self.state.n):
-                key = (q, nid)
-                if key in self.dispatched:
-                    continue
-                if (q, nid) in self.state.results:
-                    self.dispatched.add(key)                 # checkpointed
-                    continue
-                if not self.state.query_ready(q, nid):
-                    continue
-                self.dispatched.add(key)
-                args = render(spec.args, self.bindings[q],
-                              self.state.upstream(q))
-                with self.state.lock:
-                    sig, needs_exec, cached = self.table.register(
-                        spec.op, args, (q, nid))
-                if cached is not None:
-                    self.state.set_result(q, nid, str(cached))
-                elif needs_exec:
-                    self.pool.submit(self._execute, sig, spec.op, args)
+                if self._maybe_dispatch(q, nid):
+                    n += 1
+        return n
+
+    def _drain_events(self) -> int:
+        """Incremental promotion: only the tool children of freshly
+        landed results are candidates."""
+        batch = []
+        try:
+            while True:
+                batch.append(self._events.get_nowait())
+        except _q.Empty:
+            pass
+        cand = {(q, c) for q, node in batch
+                for c in self._tool_children.get(node, ())}
+        n = 0
+        for q, nid in sorted(cand,
+                             key=lambda t: (self._depth[t[1]], t[0], t[1])):
+            if self._maybe_dispatch(q, nid):
                 n += 1
         return n
 
     def run(self) -> None:
         try:
+            self._scan()
+            idle = 0
             while not self.stop_flag.is_set() and not self.state.all_done():
-                self._scan()
-                with self.state.lock:
-                    self.state.lock.wait(timeout=0.02)
+                if self._wake.wait(timeout=0.25):
+                    self._wake.clear()
+                    idle = 0
+                else:
+                    idle += 1
+                self._drain_events()
+                if idle >= self._FULL_SCAN_EVERY:
+                    idle = 0
+                    self._scan()
+        except BaseException as e:
+            self.error = e
+            with self.state.lock:
+                self.state.lock.notify_all()
         finally:
             self.pool.shutdown(wait=True)

@@ -4,33 +4,47 @@ tiny JAX models behind InferenceEngines (continuous batching, prefix
 sharing, model switching), the minidb ToolRuntime, signature coalescing,
 per-query wavefront tool promotion, checkpoint/restart and worker-failure
 recovery.  The scheduling logic is the SAME code the simulator drives —
-real mode exists to prove the semantics: coalescing and plan choice must
-not change outputs (asserted in tests).
+real mode exists to prove the semantics: coalescing, plan choice,
+per-request pipelining and mid-run replanning must not change outputs
+(asserted in tests).
+
+Per-request CPU-GPU pipelining is on by default: each query's result is
+published the moment its request retires (releasing that query's tool
+tasks immediately) and a node's per-query requests are submitted as soon
+as that query's deps land — no macro barrier.  Pass an
+``OnlineOptimizer`` to ``run`` to additionally calibrate the cost model
+from measured latencies and re-solve the remaining DAG mid-run when
+observed epoch cost drifts from the plan's predictions.
 """
 from __future__ import annotations
 
-import queue as _q
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.consolidate import ConsolidatedGraph
 from repro.core.graphspec import GraphSpec
 from repro.core.plan import ExecutionPlan
 from repro.runtime.checkpoint import load_batch_state, save_batch_state
-from repro.runtime.coordinator import BatchState
+from repro.runtime.coordinator import BatchState, PlanBoard
 from repro.runtime.events import RunReport, TaskRecord
 from repro.runtime.executors import (EngineHost, GPUWorkerThread,
                                      ToolDispatcher)
 from repro.workloads.tools import ToolRuntime
+
+# engine counters that accumulate monotonically (reported as per-run
+# deltas so persistent hosts don't leak prior runs into each report)
+_ENGINE_COUNTERS = ("prefill_tokens_saved", "admission_waves",
+                    "pages_shared", "tokens_reused", "coalesced_requests")
 
 
 class RealProcessor:
     def __init__(self, graph: GraphSpec, model_configs: Dict[str, ModelConfig],
                  tools: ToolRuntime, num_workers: int = 2,
                  cpu_slots: int = 8, coalescing: bool = True, seed: int = 0,
-                 decode_cap: Optional[int] = None):
+                 decode_cap: Optional[int] = None, pipelining: bool = True,
+                 engine_kwargs: Optional[Dict[str, Any]] = None):
         self.graph = graph
         self.model_configs = model_configs
         self.tools = tools
@@ -38,6 +52,8 @@ class RealProcessor:
         self.cpu_slots = cpu_slots
         self.coalescing = coalescing
         self.seed = seed
+        self.pipelining = pipelining
+        self.engine_kwargs = engine_kwargs
         # cap generation length in tests (CPU real mode); None = node spec
         if decode_cap is not None:
             nodes = [n.with_(max_new_tokens=min(n.max_new_tokens, decode_cap))
@@ -45,17 +61,29 @@ class RealProcessor:
             self.graph = GraphSpec(graph.name, nodes, graph.edges)
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _engine_totals(hosts: List[EngineHost]) -> Dict[str, int]:
+        engines = [e for h in hosts for e in h._engines.values()]
+        out = {k: sum(getattr(e.stats, k) for e in engines)
+               for k in _ENGINE_COUNTERS}
+        out["model_switches"] = sum(h.switches for h in hosts)
+        return out
+
+    # ------------------------------------------------------------------
     def run(self, cons: ConsolidatedGraph, plan: ExecutionPlan,
             checkpoint_path: Optional[str] = None,
             resume_from: Optional[str] = None,
             die_after: Optional[Dict[int, int]] = None,
-            hosts: Optional[List[EngineHost]] = None) -> RunReport:
+            hosts: Optional[List[EngineHost]] = None,
+            optimizer=None) -> RunReport:
         """Execute the consolidated batch. Returns a RunReport whose
         ``extra['results']`` holds the per-(query,node) outputs.
 
         ``hosts`` lets an online driver keep engines (resident models,
         warm KV pages) alive across successive micro-batches; by default
-        each run gets fresh hosts."""
+        each run gets fresh hosts.  ``optimizer`` (an OnlineOptimizer)
+        enables cost calibration + mid-run replanning; like ``hosts`` it
+        may persist across runs so calibration compounds."""
         state = BatchState(self.graph, cons.n_queries)
         if resume_from:
             restored = load_batch_state(state, resume_from)
@@ -65,37 +93,67 @@ class RealProcessor:
         records: List[TaskRecord] = []
         rlock = threading.Lock()
         t0 = time.perf_counter()
-        overflow: "_q.SimpleQueue[str]" = _q.SimpleQueue()
+        board = PlanBoard(plan, self.graph.llm_dag(), self.W)
+        base_replans = 0
+        if optimizer is not None:
+            optimizer.bind_graph(self.graph)   # decode_cap-rewritten copy
+            optimizer.solver_config.num_workers = self.W
+            optimizer.attach_plan(plan)
+            base_replans = optimizer.replans
 
         dispatcher = ToolDispatcher(
             self.graph, state, cons.bindings, self.tools, records, rlock,
-            t0, cpu_slots=self.cpu_slots, coalescing=self.coalescing)
+            t0, cpu_slots=self.cpu_slots, coalescing=self.coalescing,
+            optimizer=optimizer)
         dispatcher.start()
 
-        seqs = plan.worker_sequences(self.W)
         own_hosts = hosts is None
         if hosts is None:
-            hosts = [EngineHost(self.model_configs, seed=self.seed)
+            hosts = [EngineHost(self.model_configs, seed=self.seed,
+                                engine_kwargs=self.engine_kwargs)
                      for _ in range(self.W)]
         assert len(hosts) == self.W
+        base = self._engine_totals(hosts)       # persistent-host baseline
+
         workers = [
-            GPUWorkerThread(w, seqs[w], self.graph, state, cons.bindings,
-                            hosts[w], records, rlock, t0, overflow,
-                            die_after=(die_after or {}).get(w))
+            GPUWorkerThread(w, board, self.graph, state, cons.bindings,
+                            hosts[w], records, rlock, t0,
+                            die_after=(die_after or {}).get(w),
+                            pipelining=self.pipelining, optimizer=optimizer)
             for w in range(self.W)]
         try:
             for wk in workers:
                 wk.start()
-            for wk in workers:
-                wk.join(timeout=600)
-            dispatcher.stop_flag.set()
+            deadline = time.monotonic() + 600.0
+            while any(wk.is_alive() for wk in workers):
+                if any(wk.error for wk in workers) or dispatcher.error:
+                    break
+                for wk in workers:
+                    wk.join(timeout=0.05)
+                if optimizer is not None:
+                    optimizer.maybe_replan(board)
+                if time.monotonic() > deadline:
+                    break
+            err = next((wk.error for wk in workers if wk.error), None) \
+                or dispatcher.error
+            if err is None:
+                # results land from engine callbacks; tool tasks may still
+                # be draining — wait for full completion (or a late
+                # failure, which also notifies the state lock), then stop
+                target = len(self.graph.nodes)
+                with state.lock:
+                    state.lock.wait_for(
+                        lambda: (len(state.macro_done) == target
+                                 or dispatcher.error is not None
+                                 or any(wk.error for wk in workers)),
+                        timeout=60.0)
+            dispatcher.stop()
             dispatcher.join(timeout=60)
 
-            for wk in workers:
-                if wk.error:
-                    raise wk.error
-            if dispatcher.error:
-                raise dispatcher.error
+            err = err or next((wk.error for wk in workers if wk.error),
+                              None) or dispatcher.error
+            if err is not None:
+                raise err
             if not state.all_done():
                 missing = set(self.graph.nodes) - state.macro_done
                 raise RuntimeError(
@@ -120,11 +178,19 @@ class RealProcessor:
         report.extra["results"] = {           # type: ignore[assignment]
             f"{q}:{node}": val
             for (q, node), val in sorted(state.results.items())}
-        report.extra["model_switches"] = sum(h.switches for h in hosts)
+        # per-run deltas against the at-start totals: persistent hosts
+        # must not re-report earlier micro-batches' counts
+        totals = self._engine_totals(hosts)
+        for key, cur in totals.items():
+            report.extra[key] = max(cur - base.get(key, 0), 0)
         engines = [e for h in hosts for e in h._engines.values()]
-        for key in ("prefill_tokens_saved", "admission_waves",
-                    "pages_shared", "tokens_reused", "coalesced_requests"):
-            report.extra[key] = sum(getattr(e.stats, key) for e in engines)
-        report.extra["peak_batch"] = max(
+        report.extra["peak_batch"] = max(      # gauge, not a counter
             (e.stats.peak_batch for e in engines), default=0)
+        report.extra["cpu_gpu_overlap_s"] = round(
+            report.cpu_gpu_overlap(), 6)
+        report.extra["plan_splices"] = board.splices
+        if optimizer is not None:
+            report.extra["replans"] = optimizer.replans - base_replans
+            report.extra["calibration"] = (   # type: ignore[assignment]
+                optimizer.calibration_summary())
         return report

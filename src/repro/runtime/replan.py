@@ -1,0 +1,227 @@
+"""Online cost calibration + mid-batch replanning (paper §5's feedback
+loop from the Processor back into the Optimizer).
+
+``OnlineOptimizer`` sits between the real executors and the planning
+stack:
+
+* every completed tool task feeds ``OperatorProfiler.update()`` (the
+  EXPLAIN/EWMA terms of T_prep);
+* every completed LLM macro-node feeds ``HardwareCalibration`` — the
+  observed latency is split into its predicted prefill/decode shares and
+  the roofline's effective ``mfu``/``bw_eff`` knobs are re-fit, then
+  substituted back into the live CostModel;
+* after each plan epoch fully completes, the observed epoch cost (same
+  mu/lambda blend the solver scored) is compared against the epoch's
+  predicted cost; past ``drift_threshold`` the remaining LLM DAG is
+  re-solved from the live SystemState (claimed nodes + per-worker
+  contexts) and the new tail is spliced into the PlanBoard.
+
+The spliced plan (claimed prefix as singleton epochs + re-solved tail)
+is validated against the DAG before splicing — replanning can only ever
+reorder *unclaimed* work, so outputs are untouched (asserted in tests).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from repro.core.cost_model import CostModel, HardwareCalibration
+from repro.core.plan import ExecutionPlan
+from repro.core.solver import EpochDPSolver, SolverConfig
+from repro.core.state import SystemState
+from repro.runtime.coordinator import PlanBoard
+
+
+class OnlineOptimizer:
+    """Continuously calibrated cost model + mid-run replanner."""
+
+    def __init__(self, cost_model: CostModel,
+                 solver_config: Optional[SolverConfig] = None,
+                 drift_threshold: float = 0.35,
+                 calibration_alpha: float = 0.5,
+                 max_replans: int = 8):
+        self.cm = cost_model
+        self.dag = cost_model.graph.llm_dag()
+        self.solver_config = solver_config or SolverConfig()
+        self.drift_threshold = drift_threshold
+        self.calib = HardwareCalibration(cost_model.hw,
+                                         alpha=calibration_alpha)
+        self.max_replans = max_replans
+        self.lock = threading.Lock()
+        # plan bookkeeping
+        self.plan: Optional[ExecutionPlan] = None
+        self._epoch_nodes: List[List[str]] = []
+        self._evaluated: set = set()
+        self._llm_obs: Dict[str, tuple] = {}     # nid -> (worker, seconds)
+        self._llm_partial: Dict[str, tuple] = {}  # waves of unfinished nodes
+        # outcomes
+        self.replans = 0
+        self.epoch_drifts: List[Dict[str, float]] = []
+        self.predicted_errors: List[float] = []  # |pred-obs|/obs per LLM node
+        self.spliced_plan: Optional[ExecutionPlan] = None
+
+    # ------------------------------------------------------------------
+    def bind_graph(self, graph) -> None:
+        """Point the cost model at the graph the Processor actually
+        executes.  RealProcessor rewrites ``max_new_tokens`` onto a copy
+        when ``decode_cap`` is set; calibrating against the caller's
+        uncapped graph would price decode work that never runs."""
+        if self.cm.graph is graph:
+            return
+        if set(self.cm.graph.nodes) != set(graph.nodes):
+            raise ValueError(
+                "optimizer cost model was built for a different workflow "
+                f"({self.cm.graph.name!r} vs {graph.name!r})")
+        with self.lock:
+            self.cm.graph = graph
+            self.dag = graph.llm_dag()
+
+    def attach_plan(self, plan: ExecutionPlan, fresh: bool = True,
+                    evaluated_prefix: int = 0) -> None:
+        """Start tracking ``plan``'s epochs.
+
+        ``fresh=True`` (a new run) clears the per-run node observations;
+        ``fresh=False`` (a mid-run splice) keeps them.  A splice passes
+        ``evaluated_prefix`` = its claimed-prefix length: those singleton
+        epochs are history with no solver-predicted cost (Epoch defaults
+        to 0.0), so evaluating drift on them would divide by ~0 and
+        re-trigger replanning forever.  Calibration state (roofline
+        knobs, tool EWMAs) always persists — that is the whole point of
+        reusing one optimizer across micro-batches.
+        """
+        with self.lock:
+            self.plan = plan
+            if fresh:
+                self._llm_obs = {}
+                self._llm_partial = {}
+            self._epoch_nodes = [
+                [v for comp in e.components for v in comp]
+                for e in plan.epochs]
+            self._evaluated = set(range(evaluated_prefix)) | {
+                i for i, nodes in enumerate(self._epoch_nodes)
+                if nodes and all(n in self._llm_obs for n in nodes)}
+
+    # --------------------------------------------------- observations
+    def observe_tool(self, node_id: str, op: str, seconds: float) -> None:
+        with self.lock:
+            self.cm.profiler.update(node_id, op, seconds)
+
+    @staticmethod
+    def _union_seconds(spans: List[tuple]) -> float:
+        """Total length of the union of (start, end) intervals —
+        concurrent waves of one continuous batch must not double-count
+        the shared busy time."""
+        total = 0.0
+        hi = float("-inf")
+        for s, e in sorted(spans):
+            if s > hi:
+                total += e - s
+                hi = e
+            elif e > hi:
+                total += e - hi
+                hi = e
+        return total
+
+    def observe_llm(self, node_id: str, batch: int, seconds: float,
+                    worker: str = "", node_complete: bool = True,
+                    span: Optional[tuple] = None) -> None:
+        """Measured LLM latency → roofline knob re-fit.
+
+        Pipelined workers report once per submission wave (``batch`` =
+        wave size, ``node_complete`` only on the node's last wave); the
+        barrier path reports the whole macro-node at once.  Epoch drift
+        is evaluated on a node only once it is complete, over the UNION
+        of its waves' ``span`` intervals (waves can overlap inside one
+        continuous batch).  Calibration treats each wave's sample
+        independently — concurrent waves share the engine, so individual
+        samples are noisy and the EWMA does the smoothing.
+        """
+        spec = self.cm.graph.nodes[node_id]
+        with self.lock:
+            tp, td = self.cm.infer_breakdown(spec, batch)
+            if tp + td > 0 and seconds > 0:
+                self.predicted_errors.append(
+                    abs((tp + td) - seconds) / seconds)
+            self.calib.observe(tp, td, seconds)
+            self.cm.hw = self.calib.profile()
+            _, spans, plain = self._llm_partial.get(node_id,
+                                                    (worker, [], 0.0))
+            if span is not None:
+                spans = spans + [tuple(span)]
+            else:                       # span-less callers: plain summing
+                plain += seconds
+            if node_complete:
+                self._llm_partial.pop(node_id, None)
+                self._llm_obs[node_id] = (
+                    worker, plain + self._union_seconds(spans))
+            else:
+                self._llm_partial[node_id] = (worker, spans, plain)
+
+    # ----------------------------------------------------- replanning
+    def _observed_epoch_cost(self, nodes: List[str]) -> float:
+        """Observed per-worker busy times scored with the SAME blend the
+        solver used for the prediction (CostModel.epoch_blend)."""
+        busy: Dict[str, float] = {}
+        for n in nodes:
+            w, s = self._llm_obs[n]
+            busy[w] = busy.get(w, 0.0) + s
+        return self.cm.epoch_blend(list(busy.values()))
+
+    def maybe_replan(self, board: PlanBoard) -> bool:
+        """Evaluate drift on freshly completed epochs; replan past the
+        threshold.  Called from the Processor's monitor loop."""
+        with self.lock:
+            if self.plan is None or self.replans >= self.max_replans:
+                return False
+            trigger = False
+            for i, nodes in enumerate(self._epoch_nodes):
+                if i in self._evaluated or not nodes:
+                    continue
+                if not all(n in self._llm_obs for n in nodes):
+                    continue
+                self._evaluated.add(i)
+                obs = self._observed_epoch_cost(nodes)
+                pred = self.plan.epochs[i].predicted_cost
+                drift = abs(obs - pred) / max(pred, 1e-9)
+                self.epoch_drifts.append(
+                    {"epoch": i, "predicted": pred, "observed": obs,
+                     "drift": drift})
+                if drift > self.drift_threshold:
+                    trigger = True
+        if not trigger:
+            return False
+        return self._replan(board)
+
+    def _replan(self, board: PlanBoard) -> bool:
+        """Re-solve the unclaimed DAG from the live state and splice."""
+        with board.lock:                          # one consistent snapshot
+            done = frozenset(board.claimed_set)
+            contexts = board.contexts_locked()
+            prefix = board.claimed_prefix_epochs_locked()
+        if len(done) == len(self.dag.node_ids):
+            return False                          # nothing left to replan
+        solver = EpochDPSolver(self.dag, self.cm, self.solver_config)
+        tail = solver.solve(initial=SystemState(done, contexts))
+        spliced = ExecutionPlan(
+            epochs=prefix + tail.epochs,
+            predicted_cost=tail.predicted_cost,
+            scheduler_name=(self.plan.scheduler_name or "halo-dp")
+            + "+replan")
+        spliced.validate(self.dag)                # splice validity
+        board.splice(tail)
+        with self.lock:
+            self.replans += 1
+            self.spliced_plan = spliced
+        self.attach_plan(spliced, fresh=False, evaluated_prefix=len(prefix))
+        return True
+
+    # ------------------------------------------------------- reporting
+    def calibration_summary(self) -> Dict[str, float]:
+        with self.lock:
+            out = self.calib.deltas()
+            out["tool_keys"] = self.cm.profiler.calibrated_keys()
+            out["tool_observations"] = self.cm.profiler.observations
+            if self.predicted_errors:
+                out["first_llm_error"] = round(self.predicted_errors[0], 4)
+                out["last_llm_error"] = round(self.predicted_errors[-1], 4)
+            return out

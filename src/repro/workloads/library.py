@@ -283,6 +283,37 @@ def wplus_linear() -> Tuple[dict, Callable]:
     return wf, _bind_sampler(pool)
 
 
+# ---------------------------------------------------------------------------
+def wt_tool_pipeline() -> Tuple[dict, Callable]:
+    """WT: llm → dependent tools → llm, all on one model.
+
+    Unlike W1–W6 (whose tool args reference only bindings, so every tool
+    is a DAG root), WT's tools consume the upstream LLM *output* — the
+    shape where per-request CPU-GPU pipelining pays: query i's tools can
+    run the moment ITS generation retires, overlapping the stragglers'
+    decode, and its final-stage request joins the running batch.
+    Bindings are per-query distinct so nothing coalesces away.
+    """
+    nodes = [
+        {"id": "gen", "type": "llm", "model": M14, "max_new_tokens": 24,
+         "est_prompt_tokens": 96,
+         "prompt": "Angle $k: draft a claim about $topic."},
+        {"id": "verify", "type": "tool", "op": "http",
+         "args": "GET /api/verify?claim=${gen}&k=$k"},
+        {"id": "count", "type": "tool", "op": "pyfn",
+         "args": "wordcount(${gen})"},
+        {"id": "final", "type": "llm", "model": M14, "max_new_tokens": 16,
+         "est_prompt_tokens": 128,
+         "prompt": "Finalize angle $k with ${verify} and ${count}."},
+    ]
+    wf = {"name": "WT-ToolPipeline", "nodes": nodes}
+
+    def pool(rng: random.Random) -> Dict:
+        return {"topic": GENRES[rng.randrange(len(GENRES))],
+                "k": rng.randrange(100000)}
+    return wf, _bind_sampler(pool)
+
+
 WORKFLOWS: Dict[str, WorkloadBuilder] = {
     "w1": w1_imdb_diamond,
     "w2": w2_imdb_triplechain,
@@ -291,11 +322,12 @@ WORKFLOWS: Dict[str, WorkloadBuilder] = {
     "w5": w5_tpch_trident,
     "w6": w6_tpch_fanout,
     "w+": wplus_linear,
+    "wt": wt_tool_pipeline,
 }
 
 DATABASE_OF = {
     "w1": "imdb", "w2": "imdb", "w3": "finewiki", "w4": "finewiki",
-    "w5": "tpch", "w6": "tpch", "w+": "finewiki",
+    "w5": "tpch", "w6": "tpch", "w+": "finewiki", "wt": "finewiki",
 }
 
 

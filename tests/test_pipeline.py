@@ -1,0 +1,257 @@
+"""Per-request CPU-GPU pipelining, online calibration and replanning.
+
+Covers the Processor's fine-grained dataflow path (PAPER.md §5): results
+published per request (not per macro-batch), event-driven tool
+promotion, roofline-knob calibration from measured latencies, and
+mid-run replan splicing — plus regression pins for the shared-default,
+whole-prefix-credit and persistent-host stat-counting bugfixes.
+"""
+import pytest
+
+from repro.core import (CostModel, EpochDPSolver, HARDWARE, HardwareCalibration,
+                        LLMProfile, PAPER_MODELS, SolverConfig, consolidate)
+from repro.core.graphspec import GraphSpec, NodeSpec, NodeType
+from repro.core.state import WorkerContext
+from repro.runtime import OnlineOptimizer, RealProcessor
+from repro.workloads import build_workload
+from repro.workloads.datagen import build_database
+from repro.workloads.tools import ToolRuntime
+
+
+def _setup(wname, n, workers=2):
+    g, bindings, dbname = build_workload(wname, n, seed=0)
+    cons = consolidate(g, bindings)
+    b = {}
+    for nid in g.nodes:
+        m = cons.macro(nid)
+        b[nid] = m.n_logical if g.nodes[nid].is_llm() else m.n_unique
+    cm = CostModel(g, HARDWARE["h200"], PAPER_MODELS, batch_sizes=b)
+    plan = EpochDPSolver(g.llm_dag(), cm,
+                         SolverConfig(num_workers=workers)).solve()
+    return g, cons, dbname, cm, plan
+
+
+def _models(g):
+    from repro.configs import get_smoke
+    names = {g.nodes[x].model for x in g.llm_nodes()}
+    return {m: get_smoke("qwen3-1.7b").replace(name=m) for m in names}
+
+
+def _proc(g, dbname, latency_scale=0.0, **kw):
+    return RealProcessor(
+        g, _models(g), ToolRuntime(build_database(dbname),
+                                   latency_scale=latency_scale),
+        num_workers=2, decode_cap=6, **kw)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: per-request pipelining
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_tool_starts_before_macro_batch_finishes():
+    """A query's tool task must begin while the same macro-batch is still
+    decoding its slower queries (the macro barrier would forbid this).
+
+    max_batch=2 with 4 queries forces two admission waves for ``gen``:
+    wave 1 retires strictly before wave 2, so wave-1 queries' tools run
+    during wave-2 decode."""
+    g, cons, dbname, _, plan = _setup("wt", 4)
+    proc = _proc(g, dbname, latency_scale=1.0,
+                 engine_kwargs={"max_batch": 2})
+    rep = proc.run(cons, plan)
+    gen_end = max(r.end for r in rep.records       # last submission wave
+                  if r.kind == "llm" and r.node == "gen")
+    first_tool = min(r.start for r in rep.records if r.kind == "tool")
+    assert first_tool < gen_end, (
+        f"no overlap: first tool at {first_tool:.3f}, "
+        f"gen macro-batch finished at {gen_end:.3f}")
+    assert rep.extra["cpu_gpu_overlap_s"] > 0
+
+
+@pytest.mark.slow
+def test_pipelined_outputs_bitwise_match_barrier_and_replan():
+    """Temperature-0 outputs are invariant to pipelining AND to forced
+    mid-run replanning (semantics preservation, the §5 contract)."""
+    g, cons, dbname, _, plan = _setup("wt", 4)
+    base = _proc(g, dbname, pipelining=False).run(cons, plan)
+    piped = _proc(g, dbname, pipelining=True).run(cons, plan)
+    assert piped.extra["results"] == base.extra["results"]
+
+    _, _, _, cm, _ = _setup("wt", 4)
+    opt = OnlineOptimizer(cm, drift_threshold=0.0)
+    replanned = _proc(g, dbname, pipelining=True).run(
+        cons, plan, optimizer=opt)
+    assert replanned.extra["results"] == base.extra["results"]
+    assert replanned.extra["replans"] == replanned.extra["plan_splices"]
+
+
+# ---------------------------------------------------------------------------
+# calibration + replanning
+# ---------------------------------------------------------------------------
+
+def test_calibration_convergence():
+    """The EWMA-fit roofline knobs tighten predicted-vs-observed error
+    geometrically under a stable observed latency."""
+    g, _, _, cm, _ = _setup("wt", 4)
+    spec = g.nodes["gen"]
+    tp0, td0 = cm.infer_breakdown(spec, 4)
+    true_seconds = 3.0 * (tp0 + td0)          # machine 3x slower than model
+    calib = HardwareCalibration(cm.hw)
+    errors = []
+    for _ in range(8):
+        tp, td = cm.infer_breakdown(spec, 4)
+        errors.append(abs((tp + td) - true_seconds) / true_seconds)
+        calib.observe(tp, td, true_seconds)
+        cm.hw = calib.profile()
+    assert errors[-1] < 0.05
+    assert errors[-1] < errors[0]
+    assert all(b <= a + 1e-12 for a, b in zip(errors, errors[1:]))
+    d = calib.deltas()
+    assert d["samples"] == 8 and d["mfu_eff"] != d["mfu_base"]
+
+
+def test_replan_splice_is_valid_plan():
+    """After drift triggers a replan, claimed-prefix + re-solved tail is
+    a valid ExecutionPlan and the board covers every remaining node."""
+    from repro.runtime.coordinator import PlanBoard
+    g, cons, dbname, cm, plan = _setup("w1", 4)
+    dag = g.llm_dag()
+    assert len(plan.epochs) >= 2, "need a multi-epoch plan for this test"
+    board = PlanBoard(plan, dag, 2)
+    opt = OnlineOptimizer(cm, drift_threshold=0.0)
+    opt.solver_config.num_workers = 2
+    opt.attach_plan(plan)
+
+    e0 = plan.epochs[0]
+    for comp, w in zip(e0.components, e0.workers):
+        for nid in comp:
+            assert board.try_claim(w) == nid
+            opt.observe_llm(nid, cons.n_queries, 123.0, f"gpu{w}")
+    assert opt.maybe_replan(board) is True
+    assert opt.replans == 1 and board.splices == 1
+    spliced = opt.spliced_plan
+    spliced.validate(dag)                     # raises on a bad splice
+    planned = set(board.claimed) | {
+        n for seq in board.seqs for n in seq}
+    assert planned == set(dag.node_ids)
+    assert opt.epoch_drifts and opt.epoch_drifts[0]["drift"] > 0
+
+
+def test_splice_routes_dead_worker_tail_to_overflow():
+    """Tail work planned onto an abandoned worker must stay claimable by
+    the survivors (via overflow), not strand on the dead sequence."""
+    from repro.runtime.coordinator import PlanBoard
+    g, cons, dbname, cm, plan = _setup("w1", 2)
+    dag = g.llm_dag()
+    board = PlanBoard(plan, dag, 2)
+    board.abandon(0)
+    board.splice(plan)          # re-solve "tail" = whole plan (0 claimed)
+    assert board.seqs[0] == []
+    assert set(board.overflow) | set(board.seqs[1]) == set(dag.node_ids)
+    # and a survivor can actually claim an orphaned, releasable node
+    assert board.try_claim(1) is not None
+
+
+@pytest.mark.slow
+def test_worker_failure_recovery_completes():
+    """die_after: a failed worker's remaining nodes are picked up by the
+    survivor the moment they are claimable."""
+    g, cons, dbname, _, plan = _setup("w+", 2)
+    rep = _proc(g, dbname).run(cons, plan, die_after={0: 1})
+    assert len(rep.extra["results"]) == 2 * len(g.nodes)
+
+
+def test_wave_span_union_does_not_double_count():
+    """Overlapping submission waves of one continuous batch contribute
+    their union, not their sum, to observed node time."""
+    u = OnlineOptimizer._union_seconds
+    assert u([(10.0, 15.0), (11.0, 15.5), (20.0, 21.0)]) == 6.5
+    assert u([]) == 0.0
+    g, _, _, cm, _ = _setup("wt", 2)
+    opt = OnlineOptimizer(cm)
+    opt.observe_llm("gen", 1, 5.0, "gpu0", node_complete=False,
+                    span=(10.0, 15.0))
+    opt.observe_llm("gen", 1, 4.5, "gpu0", node_complete=True,
+                    span=(11.0, 15.5))
+    assert opt._llm_obs["gen"] == ("gpu0", 5.5)
+
+
+def test_operator_profiler_feedback_via_optimizer():
+    g, _, _, cm, _ = _setup("wt", 2)
+    opt = OnlineOptimizer(cm)
+    opt.observe_tool("verify", "http", 0.25)
+    opt.observe_tool("verify", "http", 0.35)
+    est = cm.profiler.estimate(g.nodes["verify"])
+    assert 0.25 <= est <= 0.35
+    assert cm.profiler.observations == 2
+
+
+# ---------------------------------------------------------------------------
+# bugfix pins
+# ---------------------------------------------------------------------------
+
+def test_cost_model_weights_not_shared_between_instances():
+    g, _, _, cm1, _ = _setup("wt", 2)
+    cm1.weights.mu = 0.123
+    _, _, _, cm2, _ = _setup("wt", 2)
+    assert cm2.weights.mu != 0.123
+    assert cm1.weights is not cm2.weights
+
+
+def test_solver_config_not_shared_between_instances():
+    g, cons, _, cm, _ = _setup("wt", 2)
+    s1 = EpochDPSolver(g.llm_dag(), cm)
+    s1.cfg.beam = 1
+    s2 = EpochDPSolver(g.llm_dag(), cm)
+    assert s2.cfg.beam != 1
+    assert s1.cfg is not s2.cfg
+
+
+def test_whole_prefix_credit_reachable_for_recurrent_archs():
+    nodes = [NodeSpec("a", NodeType.LLM, model="rec", est_prompt_tokens=100),
+             NodeSpec("b", NodeType.LLM, model="rec", est_prompt_tokens=100)]
+    g = GraphSpec("t", nodes, [("a", "b")])
+    rec = LLMProfile.from_params("rec", 1e9, 8, 4, 64,
+                                 supports_partial_prefix=False)
+    ctx = WorkerContext(model="rec", warm=("a",))
+    # snapshot covers the whole prompt -> full credit
+    cm = CostModel(g, HARDWARE["h200"], {"rec": rec},
+                   avg_context_tokens=128.0)
+    assert cm.effective_prefill_tokens(g.nodes["b"], ctx, ["a"]) == 0.0
+    # snapshot shorter than the prompt -> no partial credit possible
+    cm2 = CostModel(g, HARDWARE["h200"], {"rec": rec},
+                    avg_context_tokens=64.0)
+    assert cm2.effective_prefill_tokens(g.nodes["b"], ctx, ["a"]) == 100.0
+
+
+@pytest.mark.slow
+def test_persistent_host_stats_report_per_run_deltas():
+    """Two micro-batches on the same hosts: each report carries only its
+    own counts (seed bug: run 2 re-reported run 1's counters too)."""
+    from repro.runtime.executors import EngineHost
+    g, cons, dbname, _, plan = _setup("w+", 3)
+    proc = _proc(g, dbname)
+    hosts = [EngineHost(proc.model_configs, seed=proc.seed)
+             for _ in range(2)]
+    try:
+        r1 = proc.run(cons, plan, hosts=hosts)
+        r2 = proc.run(cons, plan, hosts=hosts)
+        engines = [e for h in hosts for e in h._engines.values()]
+        for key in ("admission_waves", "tokens_reused", "pages_shared"):
+            total = sum(getattr(e.stats, key) for e in engines)
+            assert r1.extra[key] + r2.extra[key] == total, key
+        assert r1.extra["admission_waves"] > 0
+    finally:
+        for h in hosts:
+            h.shutdown()
+
+
+@pytest.mark.slow
+def test_tool_records_attributed_to_real_nodes():
+    g, cons, dbname, _, plan = _setup("wt", 3)
+    rep = _proc(g, dbname).run(cons, plan)
+    tool_nodes = set(g.tool_nodes())
+    recs = [r for r in rep.records if r.kind == "tool"]
+    assert recs
+    assert all(r.node in tool_nodes for r in recs)
