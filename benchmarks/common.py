@@ -64,7 +64,8 @@ def run_opwise(g, cons, workers=3, hardware="h200", processor_batch=256):
 def run_langgraph(g, cons, workers=3, hardware="h200"):
     cm = make_cm(g, cons, logical_tools=True, hardware=hardware)
     plan = round_robin_plan(g.llm_dag(), cm, workers)
-    sim = SimulatedProcessor(g, cm, workers, coalescing=False)
+    sim = SimulatedProcessor(g, cm, workers, coalescing=False,
+                             kv_migration=False)
     rep = sim.run(cons, plan)
     rep.name = "langgraph"
     return rep
@@ -73,7 +74,8 @@ def run_langgraph(g, cons, workers=3, hardware="h200"):
 def run_agentscope(g, cons, workers=3, hardware="h200", seed=1):
     cm = make_cm(g, cons, logical_tools=True, hardware=hardware)
     plan = random_plan(g.llm_dag(), cm, workers, seed=seed)
-    sim = SimulatedProcessor(g, cm, workers, coalescing=False)
+    sim = SimulatedProcessor(g, cm, workers, coalescing=False,
+                             kv_migration=False)
     rep = sim.run(cons, plan)
     rep.name = "agentscope"
     return rep
@@ -82,7 +84,8 @@ def run_agentscope(g, cons, workers=3, hardware="h200", seed=1):
 def run_parrot(g, cons, workers=3, hardware="h200"):
     cm = make_cm(g, cons, logical_tools=True, hardware=hardware)
     plan = heft_plan(g.llm_dag(), cm, workers)
-    sim = SimulatedProcessor(g, cm, workers, coalescing=False)
+    sim = SimulatedProcessor(g, cm, workers, coalescing=False,
+                             kv_migration=False)
     rep = sim.run(cons, plan)
     rep.name = "parrot"
     return rep
@@ -94,8 +97,8 @@ def run_vllm_serial(g, cons_full, workers=3, hardware="h200"):
     g1, cons1, _ = setup_from(g, cons_full, 1)
     cm = make_cm(g1, cons1, logical_tools=True, hardware=hardware)
     plan = round_robin_plan(g1.llm_dag(), cm, workers)
-    rep1 = SimulatedProcessor(g1, cm, workers, coalescing=False).run(
-        cons1, plan)
+    rep1 = SimulatedProcessor(g1, cm, workers, coalescing=False,
+                              kv_migration=False).run(cons1, plan)
     n = cons_full.n_queries
     rep1.makespan *= n
     rep1.num_queries = n
@@ -148,6 +151,49 @@ def make_real_processor(workload="w+", n=6, workers=2, decode_cap=4,
     return proc, g, cons, bindings, plan
 
 
+def swapped_tail(plan, g, workers: int):
+    """Forced-replan tail moving EVERY LLM node to the next worker
+    (singleton topo-order epochs) — the migration A/B stimulus shared by
+    benchmarks and tests."""
+    from repro.core.plan import Epoch, ExecutionPlan
+    amap = plan.assignment_map()
+    llm = set(g.llm_dag().node_ids)
+    topo = [v for v in g.topo_order() if v in llm]
+    return ExecutionPlan(
+        [Epoch([[n]], [(amap[n] + 1) % workers]) for n in topo],
+        scheduler_name="forced-swap")
+
+
+def run_migration_ab(workload="w+", n=4, workers=2, decode_cap=3):
+    """Warm persistent hosts, then re-run under a forced splice that
+    moves every node across workers — once with cross-worker KV
+    migration, once without.  Returns (rep_on, rep_off, warm_rep);
+    the shared harness behind the migration benchmark rows AND the
+    acceptance test."""
+    from repro.runtime import OnlineOptimizer
+    from repro.runtime.executors import EngineHost
+    reps = {}
+    for migration in (True, False):
+        proc, g, cons, _, plan = make_real_processor(
+            workload, n, workers, decode_cap, kv_migration=migration)
+        hosts = [EngineHost(proc.model_configs, seed=proc.seed)
+                 for _ in range(workers)]
+        try:
+            warm = proc.run(cons, plan, hosts=hosts)
+            # drift threshold pinned high: ONLY the queued forced splice
+            # may fire, so the A/B stimulus is deterministic (CPU smoke
+            # latencies sit far off the roofline and would otherwise
+            # drift-replan on their own, timing-dependently)
+            opt = OnlineOptimizer(make_cm(g, cons), drift_threshold=1e9)
+            opt.queue_splice(swapped_tail(plan, g, workers))
+            reps[migration] = proc.run(cons, plan, hosts=hosts,
+                                       optimizer=opt)
+        finally:
+            for h in hosts:
+                h.shutdown()
+    return reps[True], reps[False], warm
+
+
 def engine_stat_cols(rep) -> Dict[str, float]:
     """The continuous-batching engine counters a RunReport carries."""
     x = rep.extra
@@ -160,4 +206,6 @@ def engine_stat_cols(rep) -> Dict[str, float]:
         "coalesced_requests": x.get("coalesced_requests", 0),
         "cpu_gpu_overlap_s": x.get("cpu_gpu_overlap_s", 0.0),
         "replans": x.get("replans", 0),
+        "pages_migrated": x.get("pages_migrated_in", 0),
+        "migrate_s": x.get("migrate_seconds", 0.0),
     }

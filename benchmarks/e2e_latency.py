@@ -48,7 +48,8 @@ def real_rows(n_queries: int = 6, workers: int = 2,
     return [{"workload": "w+", "system": "halo-real",
              "makespan_s": round(rep.makespan, 2),
              **engine_stat_cols(rep)}] + pipelining_rows(
-        n_queries, workers, max(decode_cap, 6))
+        n_queries, workers, max(decode_cap, 6)) + migration_rows(
+        min(n_queries, 4), workers)
 
 
 def pipelining_rows(n_queries: int = 6, workers: int = 2,
@@ -76,6 +77,23 @@ def pipelining_rows(n_queries: int = 6, workers: int = 2,
                      "makespan_s": round(rep.makespan, 3),
                      **engine_stat_cols(rep)})
     return rows
+
+
+def migration_rows(n_queries: int = 4, workers: int = 2,
+                   decode_cap: int = 3) -> List[Dict]:
+    """Cross-worker KV migration A/B on warm hosts: a forced replan
+    moves every w+ node to the other worker, with migration on vs off.
+    The on-row shows ``pages_migrated > 0`` and strictly more
+    ``prefill_tokens_saved`` (the moved nodes' warm lineage follows them
+    instead of stranding); outputs are identical either way."""
+    from benchmarks.common import run_migration_ab
+    rep_on, rep_off, _ = run_migration_ab(
+        "w+", n_queries, workers, decode_cap)
+    return [{"workload": "w+", "system": name,
+             "makespan_s": round(rep.makespan, 3),
+             **engine_stat_cols(rep)}
+            for name, rep in (("halo-real-migrate", rep_on),
+                              ("halo-real-no-migrate", rep_off))]
 
 
 if __name__ == "__main__":

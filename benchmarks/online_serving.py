@@ -18,7 +18,7 @@ WORKLOADS = ("w1", "w3", "w5", "w+")
 
 
 def _stream(g, cons, bindings, plan_fn, workers, micro_batch, rate,
-            coalescing=True, barrier=False):
+            coalescing=True, barrier=False, kv_migration=True):
     batches = []
     for lo in range(0, len(bindings), micro_batch):
         cb = consolidate(g, bindings[lo:lo + micro_batch])
@@ -26,7 +26,7 @@ def _stream(g, cons, bindings, plan_fn, workers, micro_batch, rate,
     sim = OnlineSimulator(
         g, make_cm(g, cons, logical_tools=not coalescing), workers,
         coalescing=coalescing, barrier_mode=barrier,
-        opportunistic=not barrier)
+        opportunistic=not barrier, kv_migration=kv_migration)
     return sim.run(batches, rate)
 
 
@@ -39,11 +39,13 @@ def run(n_queries: int = 128, workers: int = 3, micro_batch: int = 16,
         halo = _stream(g, cons, bindings, lambda cb: plan, workers,
                        micro_batch, rate_qps)
         opw = _stream(g, cons, bindings, lambda cb: plan, workers,
-                      micro_batch, rate_qps, barrier=True)
+                      micro_batch, rate_qps, barrier=True,
+                      kv_migration=False)
         cm_rr = make_cm(g, cons, logical_tools=True)
         rr = round_robin_plan(g.llm_dag(), cm_rr, workers)
         lang = _stream(g, cons, bindings, lambda cb: rr, workers,
-                       micro_batch, rate_qps, coalescing=False)
+                       micro_batch, rate_qps, coalescing=False,
+                       kv_migration=False)
         for name, rep in (("halo", halo), ("opwise", opw),
                           ("langgraph", lang)):
             rows.append({"workload": w, "system": name,

@@ -40,12 +40,14 @@ class HardwareProfile:
     mfu: float = 0.45            # achieved fraction of peak in prefill
     bw_eff: float = 0.75         # achieved fraction of peak HBM bw in decode
     dispatch_overhead: float = 0.030   # fixed per-epoch coordination cost (s)
+    link_bw: float = 450e9       # worker↔worker KV-migration link, bytes/s
 
 
-H200 = HardwareProfile("h200", 989e12, 4.8e12, 141e9, 55e9)
-H100 = HardwareProfile("h100", 989e12, 3.35e12, 80e9, 55e9)
-A100 = HardwareProfile("a100", 312e12, 2.0e12, 80e9, 25e9)
-TPU_V5E = HardwareProfile("tpu_v5e", 197e12, 819e9, 16e9, 32e9)
+H200 = HardwareProfile("h200", 989e12, 4.8e12, 141e9, 55e9, link_bw=900e9)
+H100 = HardwareProfile("h100", 989e12, 3.35e12, 80e9, 55e9, link_bw=900e9)
+A100 = HardwareProfile("a100", 312e12, 2.0e12, 80e9, 25e9, link_bw=600e9)
+TPU_V5E = HardwareProfile("tpu_v5e", 197e12, 819e9, 16e9, 32e9,
+                          link_bw=186e9)
 
 HARDWARE = {h.name: h for h in (H200, H100, A100, TPU_V5E)}
 
@@ -218,7 +220,8 @@ class CostModel:
                  avg_context_tokens: float = 256.0,
                  use_profiling: bool = True,
                  use_prep_guidance: bool = True,
-                 cpu_parallelism: int = 16):
+                 cpu_parallelism: int = 16,
+                 use_migration: bool = True):
         self.graph = graph
         self.hw = hardware
         self.models = models
@@ -232,6 +235,10 @@ class CostModel:
         self.use_profiling = use_profiling   # ablation: naive dep-count scoring
         self.use_prep_guidance = use_prep_guidance  # ablation: no T_prep term
         self.cpu_parallelism = cpu_parallelism
+        # credit cross-worker KV migration (peer warm lineage) when the
+        # executor actually migrates; False for non-migrating systems so
+        # plans aren't priced with savings execution can't realize
+        self.use_migration = use_migration
 
     # ------------------------------------------------------------- T_model
     def t_model(self, v: NodeSpec, ctx: WorkerContext) -> float:
@@ -246,20 +253,82 @@ class CostModel:
     def _batch(self, v: NodeSpec) -> int:
         return max(self.batch_sizes.get(v.id, 1), 1)
 
-    def effective_prefill_tokens(self, v: NodeSpec, ctx: WorkerContext,
-                                 parents: Sequence[str]) -> float:
+    def _warm_shared_tokens(self, v: NodeSpec, ctx: WorkerContext,
+                            parents: Sequence[str]) -> float:
+        """Prompt tokens a warm parent lineage in ``ctx`` would cover."""
         p = float(v.est_prompt_tokens)
-        warm_parent = next((u for u in parents if ctx.has_warm(u)), None)
-        if warm_parent is None:
-            return p
+        if ctx.warm_parent(parents) is None:
+            return 0.0
         prof = self.models[v.model]
         if not prof.supports_partial_prefix:
             # recurrent state: only whole-prefix snapshots reusable; credit
             # the snapshot only when the warm parent context covers the
             # whole prompt (prompt == parent context + nothing new)
-            return 0.0 if self.avg_context_tokens >= p else p
-        shared = min(self.avg_context_tokens, 0.75 * p)
-        return p - shared
+            return p if self.avg_context_tokens >= p else 0.0
+        return min(self.avg_context_tokens, 0.75 * p)
+
+    def t_migrate(self, v: NodeSpec, tokens: float) -> float:
+        """Modeled cost of shipping ``tokens`` worth of one sequence's KV
+        over the worker↔worker link (paper §5: Processor "KV-cache …
+        migration").  One transfer serves the whole macro-batch — the
+        imported donor is page-aliased by every request — so this does
+        NOT scale with batch size."""
+        prof = self.models[v.model]
+        return tokens * prof.kv_bytes_per_token / self.hw.link_bw
+
+    def prefill_plan(self, v: NodeSpec, ctx: WorkerContext,
+                     parents: Sequence[str],
+                     peer_ctxs: Sequence[WorkerContext] = ()
+                     ) -> Tuple[float, float]:
+        """(effective prefill tokens, t_migrate) for ``v`` on a worker
+        with context ``ctx`` while the OTHER workers hold ``peer_ctxs``.
+
+        Local warm lineage is free (page aliasing).  Otherwise, a peer
+        worker holding the warm parent lineage can migrate its prefix
+        pages over the link: the credit is granted only when the source
+        context is actually warm AND the modeled transfer beats
+        re-prefilling the same tokens — the migrate-vs-recompute
+        decision the runtime KVMigrator mirrors.  Recurrent-state archs
+        (supports_partial_prefix=False) never migrate: their state rows
+        are not paged KV.
+        """
+        p = float(v.est_prompt_tokens)
+        local = self._warm_shared_tokens(v, ctx, parents)
+        if local > 0.0:
+            return p - local, 0.0
+        prof = self.models[v.model]
+        if not self.use_migration or not prof.supports_partial_prefix:
+            return p, 0.0
+        remote = max((self._warm_shared_tokens(v, c, parents)
+                      for c in peer_ctxs), default=0.0)
+        if remote > 0.0:
+            t_mig = self.t_migrate(v, remote)
+            t_saved = self._roofline_times(v, remote, self._batch(v))[0]
+            if t_mig < t_saved:
+                return p - remote, t_mig
+        return p, 0.0
+
+    def effective_prefill_tokens(self, v: NodeSpec, ctx: WorkerContext,
+                                 parents: Sequence[str],
+                                 peer_ctxs: Sequence[WorkerContext] = ()
+                                 ) -> float:
+        return self.prefill_plan(v, ctx, parents, peer_ctxs)[0]
+
+    def migration_wins(self, v: NodeSpec, tokens: float,
+                       batch: Optional[int] = None) -> bool:
+        """True when migrating ``tokens`` of warm KV beats re-prefilling
+        them — the runtime migrator's go/no-go check.  ``batch`` defaults
+        to the node's planned batch size, the SAME n prefill_plan scales
+        its savings by, so the runtime decision agrees with the credit
+        the solver priced the placement with."""
+        if tokens <= 0:
+            return False
+        prof = self.models[v.model]
+        if not prof.supports_partial_prefix:
+            return False
+        n = batch if batch is not None else self._batch(v)
+        t_saved = self._roofline_times(v, tokens, max(n, 1))[0]
+        return self.t_migrate(v, tokens) < t_saved
 
     def _roofline_times(self, v: NodeSpec, eff_p: float, n: int
                         ) -> Tuple[float, float]:
@@ -286,14 +355,15 @@ class CostModel:
         return self._roofline_times(v, float(v.est_prompt_tokens), n)
 
     def t_infer(self, v: NodeSpec, ctx: WorkerContext,
-                parents: Sequence[str]) -> float:
+                parents: Sequence[str],
+                peer_ctxs: Sequence[WorkerContext] = ()) -> float:
         n = self._batch(v)
         if not self.use_profiling:
             # ablation "w/o profiling scoring": score by dependency count
             return 0.05 * (1 + len(parents)) * n
-        eff_p = self.effective_prefill_tokens(v, ctx, parents)
+        eff_p, t_mig = self.prefill_plan(v, ctx, parents, peer_ctxs)
         t_prefill, t_decode = self._roofline_times(v, eff_p, n)
-        return t_prefill + t_decode
+        return t_prefill + t_decode + t_mig
 
     # -------------------------------------------------------------- T_prep
     def t_prep(self, v: NodeSpec, done: frozenset) -> float:
@@ -316,14 +386,19 @@ class CostModel:
         return t_total
 
     # ------------------------------------------------------------- T total
-    def t_node(self, v_id: str, ctx: WorkerContext, done: frozenset
+    def t_node(self, v_id: str, ctx: WorkerContext, done: frozenset,
+               peer_ctxs: Sequence[WorkerContext] = ()
                ) -> Tuple[float, WorkerContext]:
-        """Latency of one (macro-)node on a worker + the context after."""
+        """Latency of one (macro-)node on a worker + the context after.
+
+        ``peer_ctxs`` — the OTHER workers' contexts — lets the prefill
+        term price a cross-worker KV migration when the parent lineage
+        is warm elsewhere (see :meth:`prefill_plan`)."""
         v = self.graph.nodes[v_id]
         parents = self.graph.parents(v_id)
         t = (self.t_prep(v, done)
              + self.t_model(v, ctx)
-             + self.t_infer(v, ctx, parents))
+             + self.t_infer(v, ctx, parents, peer_ctxs))
         return t, ctx.after(v_id, v.model)
 
     # ---------------------------------------------------------- epoch cost
@@ -349,9 +424,13 @@ class CostModel:
         done = set(state.done)
         for comp, w in zip(components, workers):
             ctx = ctxs[w]
+            # peers at EPOCH START: components run concurrently, so a
+            # migration source is priced from the state the epoch opened
+            # with, not from a sibling component's mid-epoch progress
+            peers = tuple(c for x, c in enumerate(state.contexts) if x != w)
             busy = 0.0
             for v_id in comp:
-                t, ctx = self.t_node(v_id, ctx, frozenset(done))
+                t, ctx = self.t_node(v_id, ctx, frozenset(done), peers)
                 busy += t
                 done.add(v_id)
             ctxs[w] = ctx

@@ -8,7 +8,7 @@ hashable so (D, H) keys the memo table.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import FrozenSet, Tuple
+from typing import FrozenSet, Optional, Sequence, Tuple
 
 # Compact representation: keep only the most recent K lineage ids.  K=2
 # keeps the DP state space tractable (prefix discounts look one hop back:
@@ -31,6 +31,17 @@ class WorkerContext:
 
     def has_warm(self, node_id: str) -> bool:
         return node_id in self.warm
+
+    def warm_parent(self, parents: Sequence[str]) -> Optional[str]:
+        """First of ``parents`` whose lineage is warm in this context —
+        the donor the prefix discount keys off.  With cross-worker KV
+        migration, a PEER context's warm parent is also a valid donor
+        (its pages can ship over the link), so the cost model probes
+        this on every worker, not just the assignee."""
+        for u in parents:
+            if u in self.warm:
+                return u
+        return None
 
 
 @dataclass(frozen=True)

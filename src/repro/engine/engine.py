@@ -66,6 +66,9 @@ class EngineStats:
     peak_batch: int = 0                  # max concurrent decode slots
     pages_shared: int = 0                # mirrored from PagedKVCache
     tokens_reused: int = 0               # mirrored from PagedKVCache
+    pages_migrated_in: int = 0           # pages imported from a peer engine
+    pages_migrated_out: int = 0          # pages exported to a peer engine
+    migrate_seconds: float = 0.0         # modeled link-transfer time (import side)
 
     def as_dict(self) -> Dict[str, float]:
         return dict(self.__dict__)
@@ -311,6 +314,147 @@ class InferenceEngine:
         with self._cv:
             self._wait_idle_locked(time.monotonic() + timeout)
 
+    def reset_peak_batch(self) -> None:
+        """Reset the peak-concurrency watermark to the current batch size.
+
+        ``peak_batch`` is a high-watermark gauge; per-run reporting over
+        persistent hosts resets it at run start so a later run does not
+        re-report an earlier run's peak.
+        """
+        with self._cv:
+            self.stats.peak_batch = len(self._active)
+
+    # ------------------------------------------------------- kv migration
+    def _wait_step_gap_locked(self, deadline: float) -> None:
+        """Wait (holding _cv) until the loop thread is between steps.
+        While the caller keeps holding _cv, the loop cannot enter the
+        next step, so pages / warm set / radix tree are safe to touch
+        even with work in flight."""
+        while self._stepping:
+            if not self._cv.wait(timeout=min(1.0,
+                                             deadline - time.monotonic())):
+                if time.monotonic() >= deadline:
+                    raise TimeoutError("engine never paused between steps")
+
+    def _find_warm_donor(self, tokens: Sequence[int],
+                         cap: Optional[int] = None):
+        """Deepest valid warm donor covering a prefix of ``tokens``:
+        ``(seq_id, depth)``, or ``(None, 0)``.  ``cap`` bounds the usable
+        depth (admission caps at S-1 so one fresh token remains to
+        decode from).  Caller must either BE the loop thread or hold
+        ``_cv`` in a step gap — donors can be evicted mid-step."""
+        kv = self.kv
+        if kv is None or not self.enable_prefix_sharing:
+            return None, 0
+        _, cands = self.warm_prefixes.match_all(tokens)
+        for depth, payload in cands:                     # deepest first
+            d = depth if cap is None else min(depth, cap)
+            if (d >= self.MIN_SHARED_PREFIX and isinstance(payload, int)
+                    and payload in kv.sequences
+                    and kv.sequences[payload].length >= d):
+                return payload, d
+        return None, 0
+
+    def probe_prefix(self, prompt: Sequence[int], timeout: float = 60.0
+                     ) -> int:
+        """Longest warm-donor prefix of ``prompt`` resident here (tokens);
+        0 when nothing useful is cached.  Thread-safe (runs in a step
+        gap, like export) — lets a migrator decide migrate-vs-recompute
+        before paying the export."""
+        prompt = tuple(int(t) for t in prompt)
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            self._wait_step_gap_locked(deadline)
+            return self._find_warm_donor(prompt)[1]
+
+    def export_prefix(self, prompt: Sequence[int], timeout: float = 60.0):
+        """Export the warm KV prefix matching ``prompt``.
+
+        Returns ``(tokens, k, v)`` — the matched prompt prefix plus
+        contiguous per-layer KV copies — or None when no warm donor
+        covers at least MIN_SHARED_PREFIX tokens.  Thread-safe: runs in
+        a gap between engine steps so an eviction or copy-on-write
+        cannot mutate the donor's pages mid-copy.
+        """
+        prompt = tuple(int(t) for t in prompt)
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            self._wait_step_gap_locked(deadline)
+            donor, depth = self._find_warm_donor(prompt)
+            if donor is None:
+                return None
+            kv = self.kv
+            # pages_migrated_out is NOT counted here: the caller credits
+            # it only once the destination confirms the import, so the
+            # out/in counters track real transfers, not attempts
+            k, v = kv.export_sequence(donor, depth)
+            return prompt[:depth], k, v
+
+    def import_prefix(self, tokens: Sequence[int], k, v,
+                      migrate_seconds: float = 0.0,
+                      timeout: float = 60.0) -> int:
+        """Adopt a migrated KV prefix as a warm donor: write the pages,
+        register the sequence in the warm set and stamp the radix tree so
+        the next admission of a matching prompt aliases it.
+
+        Best-effort: returns the number of pages imported, or 0 when the
+        prefix is already resident or the pool has no headroom beyond the
+        active batch's decode reservation (migration must never destabil-
+        ize in-flight work).  ``migrate_seconds`` is the modeled link-
+        transfer time the caller priced the copy at.
+        """
+        tokens = tuple(int(t) for t in tokens)
+        if not self._paged_layout or not self.enable_prefix_sharing \
+                or len(tokens) < self.MIN_SHARED_PREFIX:
+            return 0                                 # donor would be unusable
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            self._wait_step_gap_locked(deadline)
+            kv = self._ensure_kv()
+            if self._find_warm_donor(tokens)[1] >= len(tokens):
+                return 0                             # already resident
+            need = -(-len(tokens) // self.page_size)
+            # feasibility BEFORE evicting anything: a page is reclaimable
+            # only if every reference to it comes from warm sequences —
+            # an infeasible import must not wipe the destination's warm
+            # locality just to fail anyway
+            warm_refs: Dict[int, int] = {}
+            for seq_id in self._warm:
+                for p in kv.sequences[seq_id].page_ids:
+                    warm_refs[p] = warm_refs.get(p, 0) + 1
+            reclaimable = sum(1 for p, n in warm_refs.items()
+                              if n == kv.refcount[p])
+            headroom = len(kv.free_pages) - self._reserved_pages()
+            if headroom + reclaimable < need:
+                return 0
+            while headroom < need and self._warm:    # evict LRU warm only
+                # prefer victims whose eviction actually frees pages;
+                # a warm sequence fully aliased by in-flight work frees
+                # nothing and would be destroyed for zero gain (fall
+                # back to any victim to unlock warm-warm aliased pages)
+                victim = next(
+                    (s for s in self._warm
+                     if any(kv.refcount[p] == 1
+                            for p in kv.sequences[s].page_ids)),
+                    None) or next(iter(self._warm))
+                self._warm.pop(victim)
+                kv.free_sequence(victim)
+                headroom = len(kv.free_pages) - self._reserved_pages()
+            if headroom < need:
+                return 0
+            seq = kv.import_sequence(k, v)
+            self._warm[seq] = tokens
+            self._warm.move_to_end(seq)
+            while len(self._warm) > self.max_warm_sequences:
+                victim, _ = self._warm.popitem(last=False)
+                kv.free_sequence(victim)
+            self.warm_prefixes.insert(tokens, payload=seq, stamp_path=True)
+            self._maybe_prune_tree()
+            pages = len(kv.sequences[seq].page_ids)
+            self.stats.pages_migrated_in += pages
+            self.stats.migrate_seconds += migrate_seconds
+            return pages
+
     def release_warm(self, timeout: float = 600.0) -> None:
         """Free every warm (retained-for-prefix-reuse) sequence's pages.
 
@@ -403,6 +547,11 @@ class InferenceEngine:
                 self._pop_pending()
                 req.handle._fail(e)
                 continue
+            # attach still-queued exact duplicates NOW: a leader that
+            # retires within this admission pass (small max_new) would
+            # otherwise leave _active before its duplicates reach
+            # _coalesce, and both would prefill
+            slot.followers.extend(self._claim_pending_duplicates(req))
             if slot.remaining > 0:
                 self._active.append(slot)
                 admitted += 1
@@ -415,6 +564,12 @@ class InferenceEngine:
                                         len(self._active))
             self._dirty = True
 
+    @staticmethod
+    def _duplicates(a: _Request, b: _Request) -> bool:
+        return (not a.extra and not b.extra and a.prompt == b.prompt
+                and a.max_new == b.max_new
+                and a.temperature == b.temperature)
+
     def _coalesce(self, req: _Request) -> bool:
         """Attach an exact duplicate of an in-flight request as follower.
 
@@ -426,14 +581,29 @@ class InferenceEngine:
         if req.extra:
             return False
         for s in self._active:
-            r = s.req
-            if (not r.extra and r.prompt == req.prompt
-                    and r.max_new == req.max_new
-                    and r.temperature == req.temperature):
+            if self._duplicates(s.req, req):
                 s.followers.append(req.handle)
                 self.stats.coalesced_requests += 1
                 return True
         return False
+
+    def _claim_pending_duplicates(self, req: _Request) -> List[RequestHandle]:
+        """Pop every exact duplicate of ``req`` still waiting in _pending
+        and return their handles — the admission-time counterpart of
+        _coalesce, covering duplicates submitted in the same wave."""
+        if req.extra:
+            return []
+        out: List[RequestHandle] = []
+        with self._cv:
+            kept: "deque[_Request]" = deque()
+            for r in self._pending:
+                if r is not req and self._duplicates(r, req):
+                    out.append(r.handle)
+                else:
+                    kept.append(r)
+            self._pending = kept
+        self.stats.coalesced_requests += len(out)
+        return out
 
     def _request_rng(self, req: _Request) -> jax.Array:
         """Per-request stream, stable under plan/arrival reordering."""
@@ -465,6 +635,17 @@ class InferenceEngine:
         pages are free beyond the active batch's decode reservation;
         defer admission if in-flight work will free more."""
         kv = self.kv
+        if needed > kv.num_pages:
+            # can NEVER fit — not even with every warm sequence evicted
+            # and the active batch fully drained.  Deferring would
+            # livelock behind in-flight work until the caller's 600s
+            # result() timeout; fail the request now with a diagnosis.
+            raise MemoryError(
+                f"request needs {needed} KV pages but the pool holds only "
+                f"{kv.num_pages} ({kv.page_size} tokens/page) — it cannot "
+                f"be admitted even after evicting all warm sequences; "
+                f"raise num_pages/max_seq_len or shrink the prompt / "
+                f"max_new_tokens")
         needed += self._reserved_pages()
         while len(kv.free_pages) < needed:
             victim = next((s for s in self._warm if s != protect), None)
@@ -498,15 +679,9 @@ class InferenceEngine:
             donor = None
             shared = 0
             if shareable:
-                _, cands = self.warm_prefixes.match_all(req.prompt)
-                for depth, payload in cands:     # deepest-first fallback
-                    cand = min(depth, S - 1)
-                    if (cand >= self.MIN_SHARED_PREFIX
-                            and isinstance(payload, int)
-                            and payload in kv.sequences
-                            and kv.sequences[payload].length >= cand):
-                        donor, shared = payload, cand
-                        break
+                # deepest-first fallback; cap at S-1 so one fresh token
+                # remains to decode from
+                donor, shared = self._find_warm_donor(req.prompt, cap=S - 1)
             fresh_tokens = S - shared + req.max_new
             if req.extra.get("patch_embeds") is not None:
                 fresh_tokens += req.extra["patch_embeds"].shape[-2]

@@ -159,6 +159,41 @@ class PagedKVCache:
     def page_table(self, seq_id: int) -> List[int]:
         return list(self.sequences[seq_id].page_ids)
 
+    # --------------------------------------------------------- migration
+    def export_sequence(self, seq_id: int,
+                        length: Optional[int] = None
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Contiguous (L, T, Hkv, Dh) COPIES of a sequence's first
+        ``length`` tokens (default: all of them) — the wire format for
+        cross-worker KV migration.  Copies (not views) so the exported
+        block stays valid after the source evicts or COWs the pages."""
+        e = self.sequences[seq_id]
+        n = e.length if length is None else min(length, e.length)
+        ps = self.page_size
+        shape = (self.num_layers, n, self.kv_heads, self.head_dim)
+        out_k = np.empty(shape, self.k.dtype)
+        out_v = np.empty(shape, self.v.dtype)
+        for j, p in enumerate(e.page_ids[:-(-n // ps)] if n else []):
+            lo = j * ps
+            m = min(ps, n - lo)
+            out_k[:, lo:lo + m] = self.k[:, p, :m]
+            out_v[:, lo:lo + m] = self.v[:, p, :m]
+        return out_k, out_v
+
+    def import_sequence(self, k: np.ndarray, v: np.ndarray) -> int:
+        """Adopt a migrated contiguous KV block: allocate pages, write
+        the tokens in, refcount them, and register a new sequence.  The
+        inverse of :meth:`export_sequence`; raises MemoryError if the
+        pool cannot hold it (callers pre-check free pages)."""
+        if k.shape != v.shape or k.shape[0] != self.num_layers \
+                or k.shape[2:] != (self.kv_heads, self.head_dim):
+            raise ValueError(
+                f"imported KV shape {k.shape} does not match cache layout "
+                f"(L={self.num_layers}, Hkv={self.kv_heads}, "
+                f"Dh={self.head_dim})")
+        return self.add_sequence(k=np.asarray(k, self.k.dtype),
+                                 v=np.asarray(v, self.v.dtype))
+
     def free_sequence(self, seq_id: int) -> None:
         e = self.sequences.pop(seq_id)
         for p in e.page_ids:

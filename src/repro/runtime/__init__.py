@@ -7,7 +7,8 @@ from repro.runtime.opwise import OpWiseSimulator
 from repro.runtime.simulator import SimulatedProcessor, OnlineSimulator
 from repro.runtime.processor import RealProcessor
 from repro.runtime.replan import OnlineOptimizer
+from repro.runtime.migrate import KVMigrator
 
 __all__ = ["RunReport", "TaskRecord", "SimulatedProcessor",
            "OnlineSimulator", "RealProcessor", "OpWiseSimulator",
-           "OnlineOptimizer"]
+           "OnlineOptimizer", "KVMigrator"]

@@ -163,6 +163,14 @@ class PlanBoard:
         with self.lock:
             return len(self.dag.node_ids) - len(self.claimed)
 
+    def planned_assignments(self) -> Dict[str, int]:
+        """Worker each still-unclaimed node is currently planned on —
+        the 'before' side of a splice's assignment diff (overflow nodes
+        have no planned worker and are omitted)."""
+        with self.lock:
+            return {n: w for w, seq in enumerate(self.seqs) for n in seq
+                    if n not in self.claimed_set}
+
     # ------------------------------------------------------------------
     def contexts_locked(self) -> Tuple[WorkerContext, ...]:
         """Live per-worker contexts implied by each claim chain.

@@ -36,22 +36,38 @@ from repro.workloads.tools import ToolRuntime
 class EngineHost:
     """One worker's model slot: at most one resident engine."""
 
+    PROMPT_LOG_CAP = 16          # recent prompts kept per node (migration)
+
     def __init__(self, model_configs: Dict[str, ModelConfig], seed: int = 0,
                  engine_kwargs: Optional[Dict[str, Any]] = None):
         self.model_configs = model_configs
         self.seed = seed
         self.engine_kwargs = dict(engine_kwargs or {})
         self._engines: Dict[str, InferenceEngine] = {}
+        # guards engine creation: the worker thread (engine_for) and the
+        # migrator (engine_for_import, monitor thread) may first-touch
+        # the same model concurrently during a mid-run splice
+        self._engines_lock = threading.Lock()
         self.resident: Optional[str] = None
         self.switches = 0
         self.switch_seconds = 0.0
+        # node -> recent prompt token tuples served here; the KVMigrator
+        # reads this to know WHICH warm prefixes a replan strands when it
+        # moves the node to another worker.  Persists with the host
+        # across micro-batch runs (like the engines' warm pages).
+        self._prompt_log: Dict[str, List[tuple]] = {}
+        self._log_lock = threading.Lock()
+
+    def _get_engine(self, model: str) -> InferenceEngine:
+        with self._engines_lock:
+            if model not in self._engines:
+                self._engines[model] = InferenceEngine(
+                    self.model_configs[model], seed=self.seed,
+                    **self.engine_kwargs)
+            return self._engines[model]
 
     def engine_for(self, model: str) -> InferenceEngine:
-        if model not in self._engines:
-            self._engines[model] = InferenceEngine(
-                self.model_configs[model], seed=self.seed,
-                **self.engine_kwargs)
-        eng = self._engines[model]
+        eng = self._get_engine(model)
         if self.resident != model:
             if self.resident is not None:
                 self._engines[self.resident].unload()
@@ -59,6 +75,33 @@ class EngineHost:
             self.switch_seconds += eng.load()
             self.resident = model
         return eng
+
+    def peek_engine(self, model: str) -> Optional[InferenceEngine]:
+        """The engine for ``model`` if one ever ran here, else None."""
+        with self._engines_lock:
+            return self._engines.get(model)
+
+    def engine_for_import(self, model: str) -> InferenceEngine:
+        """Get (or create) ``model``'s engine WITHOUT making it resident:
+        importing migrated KV pages must not trigger a model switch —
+        pages and the radix tree live outside the loaded params."""
+        return self._get_engine(model)
+
+    # ------------------------------------------------------- prompt log
+    def log_prompts(self, nid: str, prompts) -> None:
+        """Record the token prompts ``nid`` just submitted here."""
+        with self._log_lock:
+            log = self._prompt_log.setdefault(nid, [])
+            for p in prompts:
+                t = tuple(int(x) for x in p)
+                if t in log:
+                    log.remove(t)                # refresh recency
+                log.append(t)
+            del log[:-self.PROMPT_LOG_CAP]
+
+    def prompts_for(self, nid: str) -> List[tuple]:
+        with self._log_lock:
+            return list(self._prompt_log.get(nid, ()))
 
     def submit(self, model: str, prompts: Sequence[Sequence[int]], *,
                max_new_tokens: int = 16, temperature: float = 0.0,
@@ -87,7 +130,7 @@ class GPUWorkerThread(threading.Thread):
                  host: EngineHost, records: List[TaskRecord],
                  records_lock: threading.Lock, t0: float,
                  die_after: Optional[int] = None, pipelining: bool = True,
-                 optimizer=None):
+                 optimizer=None, migrator=None):
         super().__init__(daemon=True, name=f"gpu{wid}")
         self.wid = wid
         self.board = board
@@ -101,6 +144,7 @@ class GPUWorkerThread(threading.Thread):
         self.die_after = die_after
         self.pipelining = pipelining
         self.optimizer = optimizer
+        self.migrator = migrator
         self.executed = 0
         self.error: Optional[BaseException] = None
         self._outstanding: List[RequestHandle] = []
@@ -131,6 +175,7 @@ class GPUWorkerThread(threading.Thread):
         for q, b in enumerate(self.bindings):
             text = render(spec.prompt, b, self.state.upstream(q))
             prompts.append(tokenize(text, eng.cfg.vocab_size))
+        self.host.log_prompts(nid, prompts)
         ts = time.perf_counter() - self.t0
         handles = self.host.submit(
             spec.model, prompts, max_new_tokens=spec.max_new_tokens,
@@ -183,10 +228,13 @@ class GPUWorkerThread(threading.Thread):
             # (inflating overlap and poisoning calibration samples)
             wave_track = {"done": 0, "expected": len(wave),
                           "start": time.perf_counter() - self.t0}
+            wave_prompts = []
             for q in wave:
                 text = render(spec.prompt, self.bindings[q],
                               state.upstream(q))
-                h = eng.submit(tokenize(text, eng.cfg.vocab_size),
+                toks = tokenize(text, eng.cfg.vocab_size)
+                wave_prompts.append(toks)
+                h = eng.submit(toks,
                                max_new_tokens=spec.max_new_tokens,
                                temperature=spec.temperature)
                 h.add_done_callback(
@@ -194,6 +242,7 @@ class GPUWorkerThread(threading.Thread):
                                           tlock))
                 self._outstanding.append(h)
                 pending.discard(q)
+            self.host.log_prompts(nid, wave_prompts)
 
     def _settle_ready_wave(self, nid: str, pending: set) -> List[int]:
         """Queries of ``nid`` ready right now, after a short settle loop.
@@ -279,6 +328,11 @@ class GPUWorkerThread(threading.Thread):
                     with self.board.lock:
                         self.board.lock.wait(timeout=0.05)
                     continue
+                if self.migrator is not None:
+                    # claim-time KV pull: warm lineage on a peer worker
+                    # (parent ran there, or a prior micro-batch did)
+                    # lands here before this node's first wave submits
+                    self.migrator.migrate_node_from_peers(nid, self.wid)
                 if self.pipelining:
                     self._run_node_pipelined(nid)
                 else:

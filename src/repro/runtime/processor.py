@@ -31,12 +31,15 @@ from repro.runtime.coordinator import BatchState, PlanBoard
 from repro.runtime.events import RunReport, TaskRecord
 from repro.runtime.executors import (EngineHost, GPUWorkerThread,
                                      ToolDispatcher)
+from repro.runtime.migrate import KVMigrator
 from repro.workloads.tools import ToolRuntime
 
 # engine counters that accumulate monotonically (reported as per-run
 # deltas so persistent hosts don't leak prior runs into each report)
 _ENGINE_COUNTERS = ("prefill_tokens_saved", "admission_waves",
-                    "pages_shared", "tokens_reused", "coalesced_requests")
+                    "pages_shared", "tokens_reused", "coalesced_requests",
+                    "pages_migrated_in", "pages_migrated_out",
+                    "migrate_seconds")
 
 
 class RealProcessor:
@@ -44,7 +47,8 @@ class RealProcessor:
                  tools: ToolRuntime, num_workers: int = 2,
                  cpu_slots: int = 8, coalescing: bool = True, seed: int = 0,
                  decode_cap: Optional[int] = None, pipelining: bool = True,
-                 engine_kwargs: Optional[Dict[str, Any]] = None):
+                 engine_kwargs: Optional[Dict[str, Any]] = None,
+                 kv_migration: bool = True):
         self.graph = graph
         self.model_configs = model_configs
         self.tools = tools
@@ -54,6 +58,8 @@ class RealProcessor:
         self.seed = seed
         self.pipelining = pipelining
         self.engine_kwargs = engine_kwargs
+        # migrate moved nodes' warm KV on plan splices (off = A/B control)
+        self.kv_migration = kv_migration
         # cap generation length in tests (CPU real mode); None = node spec
         if decode_cap is not None:
             nodes = [n.with_(max_new_tokens=min(n.max_new_tokens, decode_cap))
@@ -98,6 +104,9 @@ class RealProcessor:
         if optimizer is not None:
             optimizer.bind_graph(self.graph)   # decode_cap-rewritten copy
             optimizer.solver_config.num_workers = self.W
+            # replans must price placement moves the way THIS processor
+            # executes them: no migration credit when migration is off
+            optimizer.cm.use_migration = self.kv_migration
             optimizer.attach_plan(plan)
             base_replans = optimizer.replans
 
@@ -114,14 +123,32 @@ class RealProcessor:
                      for _ in range(self.W)]
         assert len(hosts) == self.W
         base = self._engine_totals(hosts)       # persistent-host baseline
+        for h in hosts:                         # per-run peak watermark
+            for e in h._engines.values():
+                e.reset_peak_batch()
+
+        migrator = None
+        if self.kv_migration:
+            # no optimizer -> no replanning, but workers still pull warm
+            # lineage from peers at claim time (cost-model decision falls
+            # back to migrate-on-hit without a cm)
+            migrator = KVMigrator(
+                self.graph, hosts,
+                cost_model=optimizer.cm if optimizer is not None else None)
 
         workers = [
             GPUWorkerThread(w, board, self.graph, state, cons.bindings,
                             hosts[w], records, rlock, t0,
                             die_after=(die_after or {}).get(w),
-                            pipelining=self.pipelining, optimizer=optimizer)
+                            pipelining=self.pipelining, optimizer=optimizer,
+                            migrator=migrator)
             for w in range(self.W)]
         try:
+            if optimizer is not None:
+                # admission-time pass: a queued (forced) splice — or a
+                # plan already known-drifted from a prior micro-batch —
+                # re-places work and migrates warm KV before any claim
+                optimizer.maybe_replan(board, migrator=migrator)
             for wk in workers:
                 wk.start()
             deadline = time.monotonic() + 600.0
@@ -131,7 +158,7 @@ class RealProcessor:
                 for wk in workers:
                     wk.join(timeout=0.05)
                 if optimizer is not None:
-                    optimizer.maybe_replan(board)
+                    optimizer.maybe_replan(board, migrator=migrator)
                 if time.monotonic() > deadline:
                     break
             err = next((wk.error for wk in workers if wk.error), None) \
@@ -159,6 +186,8 @@ class RealProcessor:
                 raise RuntimeError(
                     f"run incomplete; missing {sorted(missing)}")
         finally:
+            dispatcher.stop()           # idempotent; covers raise paths
+            dispatcher.join(timeout=60)
             if own_hosts:               # persistent hosts outlive the run
                 for h in hosts:
                     h.shutdown()
@@ -184,7 +213,9 @@ class RealProcessor:
         for key, cur in totals.items():
             report.extra[key] = max(cur - base.get(key, 0), 0)
         engines = [e for h in hosts for e in h._engines.values()]
-        report.extra["peak_batch"] = max(      # gauge, not a counter
+        # per-run gauge: watermarks were reset at run start, so the max
+        # is THIS run's peak concurrency, not an earlier run's
+        report.extra["peak_batch"] = max(
             (e.stats.peak_batch for e in engines), default=0)
         report.extra["cpu_gpu_overlap_s"] = round(
             report.cpu_gpu_overlap(), 6)
@@ -193,4 +224,7 @@ class RealProcessor:
             report.extra["replans"] = optimizer.replans - base_replans
             report.extra["calibration"] = (   # type: ignore[assignment]
                 optimizer.calibration_summary())
+        if migrator is not None:
+            report.extra["migration"] = (     # type: ignore[assignment]
+                migrator.summary())
         return report

@@ -26,7 +26,7 @@ import threading
 from typing import Dict, List, Optional
 
 from repro.core.cost_model import CostModel, HardwareCalibration
-from repro.core.plan import ExecutionPlan
+from repro.core.plan import Epoch, ExecutionPlan
 from repro.core.solver import EpochDPSolver, SolverConfig
 from repro.core.state import SystemState
 from repro.runtime.coordinator import PlanBoard
@@ -59,6 +59,7 @@ class OnlineOptimizer:
         self.epoch_drifts: List[Dict[str, float]] = []
         self.predicted_errors: List[float] = []  # |pred-obs|/obs per LLM node
         self.spliced_plan: Optional[ExecutionPlan] = None
+        self._queued_tail: Optional[ExecutionPlan] = None
 
     # ------------------------------------------------------------------
     def bind_graph(self, graph) -> None:
@@ -167,9 +168,30 @@ class OnlineOptimizer:
             busy[w] = busy.get(w, 0.0) + s
         return self.cm.epoch_blend(list(busy.values()))
 
-    def maybe_replan(self, board: PlanBoard) -> bool:
+    def queue_splice(self, tail: ExecutionPlan) -> None:
+        """Queue an explicit tail plan to splice on the next
+        ``maybe_replan`` call, bypassing the drift trigger.
+
+        This is the FORCED-replan hook (A/B benchmarks, migration
+        tests, admission-time re-placement from a prior micro-batch's
+        calibration): the tail's placement replaces every worker's
+        unclaimed sequence, and any node it moves across workers gets
+        its warm KV lineage migrated first when a migrator is active.
+        """
+        with self.lock:
+            self._queued_tail = tail
+
+    def maybe_replan(self, board: PlanBoard, migrator=None) -> bool:
         """Evaluate drift on freshly completed epochs; replan past the
-        threshold.  Called from the Processor's monitor loop."""
+        threshold.  Called from the Processor's monitor loop (and once
+        before workers start, which is when a queued splice fires).
+
+        ``migrator`` (a KVMigrator) migrates moved nodes' warm KV
+        lineage before the splice publishes the new assignments."""
+        with self.lock:
+            queued, self._queued_tail = self._queued_tail, None
+        if queued is not None:
+            return self._apply_tail(board, queued, migrator)
         with self.lock:
             if self.plan is None or self.replans >= self.max_replans:
                 return False
@@ -190,24 +212,52 @@ class OnlineOptimizer:
                     trigger = True
         if not trigger:
             return False
-        return self._replan(board)
+        return self._replan(board, migrator)
 
-    def _replan(self, board: PlanBoard) -> bool:
+    def _replan(self, board: PlanBoard, migrator=None) -> bool:
         """Re-solve the unclaimed DAG from the live state and splice."""
         with board.lock:                          # one consistent snapshot
             done = frozenset(board.claimed_set)
             contexts = board.contexts_locked()
-            prefix = board.claimed_prefix_epochs_locked()
         if len(done) == len(self.dag.node_ids):
             return False                          # nothing left to replan
         solver = EpochDPSolver(self.dag, self.cm, self.solver_config)
         tail = solver.solve(initial=SystemState(done, contexts))
+        return self._apply_tail(board, tail, migrator)
+
+    def _apply_tail(self, board: PlanBoard, tail: ExecutionPlan,
+                    migrator=None) -> bool:
+        """Validate ``tail`` against the live claimed prefix, migrate
+        moved nodes' warm KV, and splice the tail into the board."""
+        with board.lock:
+            claimed = set(board.claimed_set)
+            prefix = board.claimed_prefix_epochs_locked()
+        if len(claimed) == len(self.dag.node_ids):
+            return False                          # nothing left to move
+        # drop nodes claimed since the tail was solved/queued (the board
+        # would filter them anyway; validation must see each node once)
+        epochs = []
+        for e in tail.epochs:
+            comps = [[n for n in comp if n not in claimed]
+                     for comp in e.components]
+            keep = [(c, w) for c, w in zip(comps, e.workers) if c]
+            if keep:
+                epochs.append(Epoch([c for c, _ in keep],
+                                    [w for _, w in keep],
+                                    e.predicted_cost))
+        tail = ExecutionPlan(epochs, tail.predicted_cost,
+                             scheduler_name=tail.scheduler_name)
+        base = (self.plan.scheduler_name if self.plan is not None else "") \
+            or "halo-dp"
         spliced = ExecutionPlan(
             epochs=prefix + tail.epochs,
             predicted_cost=tail.predicted_cost,
-            scheduler_name=(self.plan.scheduler_name or "halo-dp")
-            + "+replan")
+            scheduler_name=base + "+replan")
         spliced.validate(self.dag)                # splice validity
+        if migrator is not None:
+            # migrate BEFORE publishing the new assignments: the moved
+            # node's first wave on its new worker must find warm pages
+            migrator.migrate_for_splice(board, tail)
         board.splice(tail)
         with self.lock:
             self.replans += 1

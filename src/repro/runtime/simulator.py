@@ -53,7 +53,8 @@ class ClusterSimulator:
                  lookahead: int = 24, seed: int = 0,
                  llm_jitter: float = 0.05,
                  barrier_mode: bool = False,
-                 processor_batch: int = 256):
+                 processor_batch: int = 256,
+                 kv_migration: bool = True):
         self.graph = graph
         self.cm = cost_model
         self.W = num_workers
@@ -64,6 +65,11 @@ class ClusterSimulator:
         self.lookahead = lookahead
         self.seed = seed
         self.llm_jitter = llm_jitter
+        # Halo's Processor migrates warm KV across workers (§5), so the
+        # peer-context prefill credit the solver priced is REALIZED at
+        # execution; baseline systems (langgraph/agentscope/parrot/
+        # vllm-serial) do not migrate and run with this off.
+        self.kv_migration = kv_migration
         # Strict stage barriers — a worker may not start an epoch-e node
         # until EVERY node of epochs < e (same instance) completed.  Used
         # for the OpWise baseline AND for the "w/o opportunistic" ablation
@@ -136,7 +142,9 @@ class ClusterSimulator:
         return dur
 
     def _llm_duration(self, inst: _Instance, nid: str, n_phys: int,
-                      ctx: WorkerContext) -> Tuple[float, WorkerContext]:
+                      ctx: WorkerContext,
+                      peers: Tuple[WorkerContext, ...] = ()
+                      ) -> Tuple[float, WorkerContext]:
         spec = self.graph.nodes[nid]
         llm_parents = [p for p in self.graph.parents(nid)
                        if self.graph.nodes[p].is_llm()]
@@ -144,10 +152,16 @@ class ClusterSimulator:
         # engine processes the macro batch in waves of processor_batch
         t = self.cm.t_model(spec, ctx)
         remaining = max(n_phys, 1)
+        first = True
         while remaining > 0:
             wave = min(remaining, self.processor_batch)
             self.cm.batch_sizes[nid] = wave
-            t += self.cm.t_infer(spec, ctx, llm_parents)
+            t += self.cm.t_infer(spec, ctx, llm_parents, peer_ctxs=peers)
+            if not first and peers and self.cm.use_profiling:
+                # ONE transfer serves every wave (the imported pages are
+                # local after the first) — refund the repeated t_mig term
+                t -= self.cm.prefill_plan(spec, ctx, llm_parents, peers)[1]
+            first = False
             remaining -= wave
         if old is None:
             self.cm.batch_sizes.pop(nid, None)
@@ -240,7 +254,7 @@ class ClusterSimulator:
                 dur = self._tool_duration(inst, v, n_phys, grab)
                 push(t + dur, "tool_done", (i, v, grab, n_log, n_phys, t))
 
-        def try_start_worker(w: int, t: float) -> None:
+        def try_start_worker(w: int, t: float, force: bool = False) -> None:
             if busy[w] or dead[w]:
                 return
             q = queue[w]
@@ -253,15 +267,17 @@ class ClusterSimulator:
             i0, v0 = q[ptr[w]]
             if deps_done(i0, v0):
                 cand = (i0, v0)
-            elif self.opportunistic:
-                for j in range(ptr[w] + 1,
-                               min(len(q), ptr[w] + 1 + self.lookahead)):
+            elif self.opportunistic or force:
+                end = len(q) if force \
+                    else min(len(q), ptr[w] + 1 + self.lookahead)
+                for j in range(ptr[w] + 1, end):
                     i1, v1 = q[j]
                     if q[j] in executed or not deps_done(i1, v1):
                         continue
                     model = self.graph.nodes[v1].model
-                    # do not disturb imminent GPU state
-                    if ctxs[w].model and model != ctxs[w].model:
+                    # do not disturb imminent GPU state (unless forced:
+                    # the cluster would otherwise stall entirely)
+                    if not force and ctxs[w].model and model != ctxs[w].model:
                         continue
                     cand = q[j]
                     break
@@ -270,7 +286,10 @@ class ClusterSimulator:
             i, v = cand
             inst = self.instances[i]
             n_log, n_phys = self._n_phys(inst, v, set())
-            dur, nctx = self._llm_duration(inst, v, n_phys, ctxs[w])
+            peers = tuple(ctxs[x] for x in range(self.W)
+                          if x != w and not dead[x]) \
+                if self.kv_migration else ()
+            dur, nctx = self._llm_duration(inst, v, n_phys, ctxs[w], peers)
             ctxs[w] = nctx
             busy[w] = True
             executed.add(cand)
@@ -355,6 +374,16 @@ class ClusterSimulator:
             start_tools(t)
             for w in range(self.W):
                 try_start_worker(w, t)
+            if not heap:
+                # stall-breaker: nothing in flight and nothing started —
+                # a failure redistribution can park a ready node behind a
+                # dep-blocked head on a worker whose residency guard then
+                # refuses every cross-model pull (every OTHER worker being
+                # blocked on that node's output).  Rather than silently
+                # dropping the tail of the batch, let stalled workers take
+                # ANY dep-ready queued node, residency notwithstanding.
+                for w in range(self.W):
+                    try_start_worker(w, t, force=True)
 
         report.makespan = t
         report.num_queries = sum(i.cons.n_queries for i in self.instances)

@@ -1,0 +1,303 @@
+"""Cross-worker KV-cache migration (paper §5: Processor "KV-cache
+sharing and migration") + regression pins for the admission/coalescing/
+reporting bugfixes that rode along.
+
+Fast suite: every test here runs in the per-push CI matrix (no ``slow``
+marker), so keep instances tiny — n<=3 queries, decode_cap<=3.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import CostModel, HARDWARE, PAPER_MODELS, consolidate
+from repro.core.graphspec import GraphSpec, NodeSpec, NodeType
+from repro.core.plan import Epoch, ExecutionPlan
+from repro.core.state import WorkerContext
+from repro.engine.engine import InferenceEngine
+from repro.engine.kvcache import PagedKVCache
+
+
+# ---------------------------------------------------------------------------
+# cache level: export/import round trip + page accounting
+# ---------------------------------------------------------------------------
+
+def test_kvcache_export_import_round_trip_and_conservation():
+    """export_sequence/import_sequence move bit-identical KV and leave
+    refcounts / the free list conserved after both sides release."""
+    src = PagedKVCache(num_layers=2, num_pages=16, page_size=4,
+                       kv_heads=2, head_dim=8)
+    rng = np.random.default_rng(0)
+    k = rng.standard_normal((2, 10, 2, 8)).astype(np.float32)
+    v = rng.standard_normal((2, 10, 2, 8)).astype(np.float32)
+    seq = src.add_sequence(k, v)
+
+    ke, ve = src.export_sequence(seq, 7)
+    assert ke.shape == (2, 7, 2, 8)
+    np.testing.assert_array_equal(ke, k[:, :7])
+    # exported block is a COPY: mutating the source pages can't corrupt it
+    src.k[:, src.page_table(seq)[0]] += 1.0
+    np.testing.assert_array_equal(ke, k[:, :7])
+
+    dst = PagedKVCache(num_layers=2, num_pages=16, page_size=4,
+                       kv_heads=2, head_dim=8)
+    free_before = len(dst.free_pages)
+    seq2 = dst.import_sequence(ke, ve)
+    assert dst.sequences[seq2].length == 7
+    assert len(dst.free_pages) == free_before - 2        # ceil(7/4) pages
+    kg, vg = dst.gather(seq2)
+    np.testing.assert_array_equal(kg, k[:, :7])
+    np.testing.assert_array_equal(vg, v[:, :7])
+
+    dst.free_sequence(seq2)
+    src.free_sequence(seq)
+    assert len(dst.free_pages) == dst.num_pages
+    assert (dst.refcount == 0).all() and (src.refcount == 0).all()
+    assert src.pages_in_use == 0 and len(src.free_pages) == src.num_pages
+
+
+def test_kvcache_import_rejects_mismatched_layout():
+    dst = PagedKVCache(num_layers=2, num_pages=8, page_size=4,
+                       kv_heads=2, head_dim=8)
+    bad = np.zeros((1, 4, 2, 8), np.float32)
+    with pytest.raises(ValueError):
+        dst.import_sequence(bad, bad)
+
+
+# ---------------------------------------------------------------------------
+# engine level: migrated prefixes are real warm donors, bitwise-safe
+# ---------------------------------------------------------------------------
+
+def test_engine_migration_round_trip_bitwise_identity():
+    """A prefix exported from one engine and imported into a second is
+    aliased by the second's admission path, and temperature-0 outputs
+    are bitwise-identical to a never-migrated engine."""
+    cfg = get_smoke("qwen3-1.7b")
+    prompt = list(range(10, 24))
+    src = InferenceEngine(cfg, seed=0, page_size=8)
+    try:
+        out_src = src.generate([prompt], max_new_tokens=6)[0]
+        depth = src.probe_prefix(prompt)
+        assert depth == len(prompt)
+        tokens, k, v = src.export_prefix(prompt)
+        assert list(tokens) == prompt[:depth]
+        # out-pages are credited by the migrator on CONFIRMED import
+        # only, never at export time
+        assert src.stats.pages_migrated_out == 0
+    finally:
+        src.shutdown()
+
+    dst = InferenceEngine(cfg, seed=0, page_size=8)
+    try:
+        pages = dst.import_prefix(tokens, k, v, migrate_seconds=0.5)
+        assert pages == 2
+        assert dst.stats.pages_migrated_in == 2
+        assert dst.stats.migrate_seconds == 0.5
+        # re-import of a resident prefix is a no-op
+        assert dst.import_prefix(tokens, k, v) == 0
+        out_dst = dst.generate([prompt], max_new_tokens=6)[0]
+        assert out_dst == out_src
+        assert dst.stats.prefix_hits == 1                # aliased the import
+        assert dst.stats.prefill_tokens_saved == len(prompt) - 1
+        # page conservation after releasing the warm set
+        dst.release_warm()
+        assert dst.kv.pages_in_use == 0 and not dst.kv.sequences
+    finally:
+        dst.shutdown()
+
+    ref = InferenceEngine(cfg, seed=0, page_size=8)
+    try:
+        assert ref.generate([prompt], max_new_tokens=6)[0] == out_src
+    finally:
+        ref.shutdown()
+
+
+def test_engine_import_skips_when_pool_has_no_headroom():
+    """import_prefix is best-effort: an import that cannot fit returns 0
+    WITHOUT evicting the destination's own warm sequences first (an
+    infeasible import must not wipe warm locality just to fail)."""
+    cfg = get_smoke("qwen3-1.7b")
+    eng = InferenceEngine(cfg, seed=0, page_size=8, num_pages=4)
+    try:
+        eng.generate([list(range(10, 18))], max_new_tokens=2)  # warm donor
+        warm_before = dict(eng._warm)
+        assert warm_before
+        layers, heads, dh = eng.model.paged_kv_layout()
+        k = np.zeros((layers, 40, heads, dh), np.float32)   # 5 pages > pool
+        assert eng.import_prefix(list(range(100, 140)), k, k) == 0
+        assert eng.stats.pages_migrated_in == 0
+        assert dict(eng._warm) == warm_before               # nothing evicted
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# planner level: t_migrate prices remote warm lineage honestly
+# ---------------------------------------------------------------------------
+
+def _two_node_graph():
+    nodes = [NodeSpec("a", NodeType.LLM, model="qwen3-14b",
+                      est_prompt_tokens=256),
+             NodeSpec("b", NodeType.LLM, model="qwen3-14b",
+                      est_prompt_tokens=256)]
+    return GraphSpec("mig", nodes, [("a", "b")])
+
+
+def test_cost_model_migration_credit_and_decision():
+    g = _two_node_graph()
+    cm = CostModel(g, HARDWARE["h200"], PAPER_MODELS,
+                   avg_context_tokens=128.0)
+    v = g.nodes["b"]
+    cold = WorkerContext(model="qwen3-14b")
+    warm_peer = WorkerContext(model="qwen3-14b", warm=("a",))
+
+    # no peers: full prefill, no migration term
+    eff0, mig0 = cm.prefill_plan(v, cold, ["a"])
+    assert eff0 == 256.0 and mig0 == 0.0
+    # warm peer: tokens credited, transfer term charged
+    eff1, mig1 = cm.prefill_plan(v, cold, ["a"], peer_ctxs=(warm_peer,))
+    assert eff1 == 256.0 - 128.0
+    assert mig1 == cm.t_migrate(v, 128.0) > 0.0
+    # local warm beats remote warm: same credit, no transfer cost
+    eff2, mig2 = cm.prefill_plan(v, warm_peer, ["a"],
+                                 peer_ctxs=(warm_peer,))
+    assert eff2 == eff1 and mig2 == 0.0
+    # t_node with a warm peer is cheaper than fully cold but dearer
+    # than locally warm — the placement-move price is honest
+    t_cold = cm.t_node("b", cold, frozenset({"a"}))[0]
+    t_peer = cm.t_node("b", cold, frozenset({"a"}), peer_ctxs=(warm_peer,))[0]
+    t_local = cm.t_node("b", warm_peer, frozenset({"a"}))[0]
+    assert t_local < t_peer < t_cold
+    assert cm.migration_wins(v, 128.0)
+
+
+def test_cost_model_migration_loses_on_slow_link():
+    """When the modeled link is slower than re-prefilling, the credit is
+    withheld (migrate-vs-recompute)."""
+    from dataclasses import replace
+    g = _two_node_graph()
+    hw = replace(HARDWARE["h200"], link_bw=1e3)          # ~dial-up NVLink
+    cm = CostModel(g, hw, PAPER_MODELS, avg_context_tokens=128.0)
+    v = g.nodes["b"]
+    warm_peer = WorkerContext(model="qwen3-14b", warm=("a",))
+    eff, mig = cm.prefill_plan(v, WorkerContext(model="qwen3-14b"),
+                               ["a"], peer_ctxs=(warm_peer,))
+    assert eff == 256.0 and mig == 0.0
+    assert not cm.migration_wins(v, 128.0)
+
+
+def test_cost_model_no_migration_credit_for_recurrent_state():
+    from repro.core import LLMProfile
+    nodes = [NodeSpec("a", NodeType.LLM, model="rec", est_prompt_tokens=100),
+             NodeSpec("b", NodeType.LLM, model="rec", est_prompt_tokens=100)]
+    g = GraphSpec("rec", nodes, [("a", "b")])
+    rec = LLMProfile.from_params("rec", 1e9, 8, 4, 64,
+                                 supports_partial_prefix=False)
+    cm = CostModel(g, HARDWARE["h200"], {"rec": rec},
+                   avg_context_tokens=128.0)
+    warm_peer = WorkerContext(model="rec", warm=("a",))
+    eff, mig = cm.prefill_plan(g.nodes["b"], WorkerContext(model="rec"),
+                               ["a"], peer_ctxs=(warm_peer,))
+    assert eff == 100.0 and mig == 0.0                   # state rows don't ship
+
+
+# ---------------------------------------------------------------------------
+# runtime level: forced replan across workers, warm hosts — the e2e A/B
+# ---------------------------------------------------------------------------
+
+def test_forced_replan_migrates_and_saves_prefill_bitwise_identical():
+    """Acceptance e2e: a forced replan moving nodes across warm hosts
+    reports pages_migrated > 0 and strictly more prefill_tokens_saved
+    than the migration-off control, with identical temp-0 outputs."""
+    from benchmarks.common import run_migration_ab
+    rep_on, rep_off, warm = run_migration_ab(n=2)
+    assert rep_on.extra["plan_splices"] == 1
+    assert rep_on.extra["replans"] == 1
+    assert rep_on.extra["pages_migrated_in"] > 0
+    # in/out counters track confirmed transfers symmetrically
+    assert (rep_on.extra["pages_migrated_out"]
+            == rep_on.extra["pages_migrated_in"])
+    assert rep_on.extra["migration"]["pages_migrated"] > 0
+    assert rep_on.extra["migration"]["nodes_moved"] > 0
+    assert rep_on.extra["migration"]["migrate_seconds"] > 0
+    assert (rep_on.extra["prefill_tokens_saved"]
+            > rep_off.extra["prefill_tokens_saved"])
+    assert rep_off.extra.get("pages_migrated_in", 0) == 0
+    # semantics preserved: migration on / off / never-replanned agree
+    assert (rep_on.extra["results"] == rep_off.extra["results"]
+            == warm.extra["results"])
+
+
+def test_migrator_assignment_diff_only_reports_real_moves():
+    from repro.runtime.coordinator import PlanBoard
+    from repro.runtime.migrate import KVMigrator
+    from repro.workloads import build_workload
+    g, bindings, _ = build_workload("w+", 2, seed=0)
+    dag = g.llm_dag()
+    plan = ExecutionPlan([Epoch([["draft", "refine", "final"]], [0])])
+    board = PlanBoard(plan, dag, 2)
+    assert board.try_claim(0) == "draft"                 # claimed: stays put
+    tail = ExecutionPlan([Epoch([["draft"]], [1]),       # claimed -> ignored
+                          Epoch([["refine"]], [1]),      # real move 0 -> 1
+                          Epoch([["final"]], [0])])      # stays on 0
+    mig = KVMigrator(g, hosts=[None, None])
+    assert mig.assignment_diff(board, tail) == [("refine", 0, 1)]
+
+
+# ---------------------------------------------------------------------------
+# bugfix pins
+# ---------------------------------------------------------------------------
+
+def test_same_wave_duplicates_coalesce_at_admission():
+    """Seed bug: _coalesce only scanned _active, so a leader that
+    retired within the admission pass (small max_new) let its same-wave
+    duplicate prefill again.  Duplicates still in _pending now attach as
+    followers at admission."""
+    cfg = get_smoke("qwen3-1.7b")
+    p = list(range(30, 40))
+    eng = InferenceEngine(cfg, seed=0)
+    try:
+        o1, o2 = eng.generate([p, p], max_new_tokens=1)
+        assert o1 == o2
+        assert eng.stats.coalesced_requests == 1
+        assert eng.stats.prefill_tokens == len(p)        # exactly one prefill
+        assert eng.stats.prefix_hits == 0                # not via page alias
+    finally:
+        eng.shutdown()
+
+
+def test_impossible_page_demand_fails_fast_with_diagnostic():
+    """Seed bug: a request that can NEVER fit (demand > whole pool)
+    deferred forever behind in-flight work and surfaced as a bare 600s
+    TimeoutError.  It must fail immediately with a diagnosis, without
+    disturbing the running batch."""
+    cfg = get_smoke("qwen3-1.7b")
+    eng = InferenceEngine(cfg, seed=0, page_size=8, num_pages=16,
+                          max_seq_len=4096)
+    try:
+        ok = eng.submit(list(range(10, 18)), max_new_tokens=24)
+        huge = eng.submit(list(range(600)), max_new_tokens=8)  # >16 pages
+        with pytest.raises(MemoryError, match="never|cannot"):
+            huge.result(timeout=60)
+        assert ok.result(timeout=120)                    # batch survived
+    finally:
+        eng.shutdown()
+
+
+def test_peak_batch_reported_per_run():
+    """Seed bug: report.extra['peak_batch'] read the engines' all-time
+    gauge, so a small micro-batch on persistent hosts re-reported an
+    earlier run's peak.  The watermark now resets at run start."""
+    from benchmarks.common import make_real_processor
+    from repro.runtime.executors import EngineHost
+    proc, g, cons, bindings, plan = make_real_processor("w+", 3, 2, 2)
+    hosts = [EngineHost(proc.model_configs, seed=proc.seed)
+             for _ in range(2)]
+    try:
+        r1 = proc.run(cons, plan, hosts=hosts)
+        cons1 = consolidate(g, bindings[:1])
+        r2 = proc.run(cons1, plan, hosts=hosts)
+        assert r1.extra["peak_batch"] >= 2
+        assert r2.extra["peak_batch"] == 1               # not run 1's gauge
+    finally:
+        for h in hosts:
+            h.shutdown()
