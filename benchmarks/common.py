@@ -194,6 +194,33 @@ def run_migration_ab(workload="w+", n=4, workers=2, decode_cap=3):
     return reps[True], reps[False], warm
 
 
+def run_paged_ab(workload="wt", n=4, workers=2, decode_cap=4):
+    """Warm persistent hosts, then measure the SAME run with the
+    device-resident paged decode path vs the dense-view reference path.
+    Returns (rep_paged, rep_dense); the paged row shows
+    ``view_rebuilds == 0`` and an order-of-magnitude drop in
+    ``h2d_bytes + d2h_bytes`` (per-step KV traffic is O(batch) ints,
+    not O(batch x seq_len) KV), with bitwise-identical temp-0 outputs.
+    KV migration is off in both arms so the counters isolate the decode
+    path (migration staging is legitimate h2d/d2h on both)."""
+    from repro.runtime.executors import EngineHost
+    reps = {}
+    for paged in (True, False):
+        proc, g, cons, _, plan = make_real_processor(
+            workload, n, workers, decode_cap, kv_migration=False,
+            engine_kwargs={"paged_decode": paged})
+        hosts = [EngineHost(proc.model_configs, seed=proc.seed,
+                            engine_kwargs=proc.engine_kwargs)
+                 for _ in range(workers)]
+        try:
+            proc.run(cons, plan, hosts=hosts)     # warm pages + JIT caches
+            reps[paged] = proc.run(cons, plan, hosts=hosts)
+        finally:
+            for h in hosts:
+                h.shutdown()
+    return reps[True], reps[False]
+
+
 def engine_stat_cols(rep) -> Dict[str, float]:
     """The continuous-batching engine counters a RunReport carries."""
     x = rep.extra
@@ -208,4 +235,7 @@ def engine_stat_cols(rep) -> Dict[str, float]:
         "replans": x.get("replans", 0),
         "pages_migrated": x.get("pages_migrated_in", 0),
         "migrate_s": x.get("migrate_seconds", 0.0),
+        "h2d_bytes": x.get("h2d_bytes", 0),
+        "d2h_bytes": x.get("d2h_bytes", 0),
+        "view_rebuilds": x.get("view_rebuilds", 0),
     }

@@ -49,6 +49,7 @@ def real_rows(n_queries: int = 6, workers: int = 2,
              "makespan_s": round(rep.makespan, 2),
              **engine_stat_cols(rep)}] + pipelining_rows(
         n_queries, workers, max(decode_cap, 6)) + migration_rows(
+        min(n_queries, 4), workers) + paged_rows(
         min(n_queries, 4), workers)
 
 
@@ -94,6 +95,21 @@ def migration_rows(n_queries: int = 4, workers: int = 2,
              **engine_stat_cols(rep)}
             for name, rep in (("halo-real-migrate", rep_on),
                               ("halo-real-no-migrate", rep_off))]
+
+
+def paged_rows(n_queries: int = 4, workers: int = 2,
+               decode_cap: int = 4) -> List[Dict]:
+    """Device-resident paged decode vs the dense-view reference path on
+    warm WT hosts.  The paged row shows ``view_rebuilds == 0`` and a
+    >=10x drop in ``h2d_bytes + d2h_bytes`` (the host gather and the
+    per-step KV tap sync are gone); outputs are identical either way."""
+    from benchmarks.common import run_paged_ab
+    rep_p, rep_d = run_paged_ab("wt", n_queries, workers, decode_cap)
+    return [{"workload": "wt", "system": name,
+             "makespan_s": round(rep.makespan, 3),
+             **engine_stat_cols(rep)}
+            for name, rep in (("halo-real-paged", rep_p),
+                              ("halo-real-dense-view", rep_d))]
 
 
 if __name__ == "__main__":

@@ -13,12 +13,20 @@ batching, KV-cache sharing and migration"):
   attention masking — there is no group-by-prompt-length step and no
   dense cache tiling;
 * for full-attention transformers the ONLY KV store is the refcounted
-  ``PagedKVCache``: prefill writes pages, every decode step appends one
-  token's KV per row, and the dense batch the model decodes over is a
-  materialized view gathered from pages whenever the batch composition
-  changes.  Prompt prefixes found in the ``RadixPrefixTree`` are served
-  by aliasing the donor's pages (copy-on-write guards partial pages) and
-  chunk-prefilling only the unseen suffix;
+  DEVICE-RESIDENT ``PagedKVCache``: prefill scatters KV rows into pages
+  on device, and each decode step runs ``paged_decode_step`` straight
+  over the pool — the new token's KV is scattered at (page, offset)
+  computed from the per-slot page table inside the jitted step, and
+  attention reads the non-contiguous pages in place (paged Pallas
+  kernel, or an on-device gather under the XLA impl).  Per-step
+  host<->device traffic is O(batch) ints (tokens, page tables, sampled
+  ids), not O(batch x seq_len) KV bytes; batch-composition changes are
+  free.  The dense-view reference path (gather-to-view + decode_step +
+  KV tap sync) remains behind ``paged_decode=False`` for A/B and for
+  models without the paged hook.  Prompt prefixes found in the
+  ``RadixPrefixTree`` are served by aliasing the donor's pages
+  (copy-on-write guards partial pages) and chunk-prefilling only the
+  unseen suffix;
 * recurrent / ring-buffer families (ssm, hybrid, audio, SWA) have no
   token-paged KV; the same scheduler batches their per-sequence state as
   dense rows (split/stacked via ``cache_batch_axes``);
@@ -34,6 +42,7 @@ lowers under pjit for the dry-run meshes.
 """
 from __future__ import annotations
 
+import functools
 import threading
 import time
 import zlib
@@ -50,6 +59,31 @@ from repro.engine.kvcache import PagedKVCache
 from repro.engine.models import build_model
 from repro.engine.prefix_tree import RadixPrefixTree
 from repro.engine.sampling import sample
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size",))
+def _batched_sample(logits, keys, temps, *, vocab_size: int):
+    """Sample every active row in ONE device call.
+
+    logits: (B, Vpad); keys: (B, 2) per-slot PRNG keys (ignored for
+    greedy rows); temps: (B,) float32.  Row-for-row bitwise identical to
+    the per-slot ``sample()`` loop it replaces: argmax is per-row, and a
+    vmapped split/categorical over a row's key draws the same bits as
+    the single-row call (threefry bits depend on flat size only) — so
+    per-slot RNG streams are preserved exactly.  Returns (tokens (B,)
+    int32, advanced keys (B, 2))."""
+    lg = logits.astype(jnp.float32)
+    if vocab_size and vocab_size < lg.shape[-1]:
+        mask = jnp.arange(lg.shape[-1]) < vocab_size
+        lg = jnp.where(mask, lg, -1e30)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    stoch = temps > 0.0
+    pairs = jax.vmap(jax.random.split)(keys)             # (B, 2, 2)
+    new_keys, subs = pairs[:, 0], pairs[:, 1]
+    safe_t = jnp.where(stoch, temps, 1.0)[:, None]
+    drawn = jax.vmap(jax.random.categorical)(subs, lg / safe_t)
+    tokens = jnp.where(stoch, drawn.astype(jnp.int32), greedy)
+    return tokens, jnp.where(stoch[:, None], new_keys, keys)
 
 
 @dataclass
@@ -69,6 +103,9 @@ class EngineStats:
     pages_migrated_in: int = 0           # pages imported from a peer engine
     pages_migrated_out: int = 0          # pages exported to a peer engine
     migrate_seconds: float = 0.0         # modeled link-transfer time (import side)
+    h2d_bytes: int = 0                   # host->device traffic (KV + step inputs)
+    d2h_bytes: int = 0                   # device->host traffic (KV + sampled ids)
+    view_rebuilds: int = 0               # dense decode-view materializations
 
     def as_dict(self) -> Dict[str, float]:
         return dict(self.__dict__)
@@ -183,7 +220,8 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, seed: int = 0, max_batch: int = 8,
                  enable_prefix_sharing: bool = True, page_size: int = 8,
                  num_pages: Optional[int] = None, max_seq_len: int = 512,
-                 max_warm_sequences: int = 32):
+                 max_warm_sequences: int = 32, paged_decode: bool = True,
+                 admission_window: float = 0.0):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.seed = seed
@@ -192,13 +230,25 @@ class InferenceEngine:
         self.page_size = page_size
         self.max_seq_len = max_seq_len
         self.max_warm_sequences = max_warm_sequences
+        # decode straight from the device-resident pages (paged_decode_step)
+        # vs. the dense-view reference path (gather + decode_step); the
+        # dense path stays for A/B and for models without the paged hook
+        self.paged_decode = paged_decode
+        # grace window (seconds): a fresh batch waits this long after the
+        # LAST submission before admitting, so near-simultaneous
+        # (pipelined, staggered) arrivals form ONE decode batch shape
+        # instead of fragmenting into per-arrival recompiles.  Applied
+        # only while the engine is idle — a running batch is never stalled.
+        self.admission_window = admission_window
         self.params = None               # lazy: loading == model-switch cost
         self.stats = EngineStats()
         self.warm_prefixes = RadixPrefixTree()
         self._paged_layout = self.model.paged_kv_layout()
+        self._use_paged = bool(self._paged_layout) and paged_decode \
+            and hasattr(self.model, "paged_decode_step")
         self.num_pages = num_pages or max(
             64, 2 * max_batch * -(-max_seq_len // page_size))
-        self.kv: Optional[PagedKVCache] = None        # lazy host allocation
+        self.kv: Optional[PagedKVCache] = None   # lazy device allocation
         # jitted steps (cached per input/cache shape signature)
         self._decode_jit = jax.jit(
             lambda p, tok, cache: self.model.decode_step(p, tok, cache))
@@ -208,6 +258,14 @@ class InferenceEngine:
             self._chunk_prefill_jit = jax.jit(
                 lambda p, toks, cache: self.model.prefill_with_cache(
                     p, toks, cache))
+        if self._use_paged:
+            # the pool arrays flow through the step; donating them lets
+            # XLA scatter in place on device backends (CPU ignores it)
+            donate = (2, 3) if jax.default_backend() != "cpu" else ()
+            self._paged_step_jit = jax.jit(
+                lambda p, tok, kp, vp, pt, ln: self.model.paged_decode_step(
+                    p, tok, kp, vp, pt, ln),
+                donate_argnums=donate)
         # scheduler state — owned by the loop thread
         self._pending: "deque[_Request]" = deque()
         self._active: List[_Slot] = []
@@ -221,6 +279,7 @@ class InferenceEngine:
         self._shutdown = False
         self._rid = 0
         self._zero_key = jax.random.PRNGKey(0)
+        self._last_submit = 0.0
 
     # ---------------------------------------------------------------- weights
     def load(self) -> float:
@@ -276,6 +335,7 @@ class InferenceEngine:
                            dict(extra or {}), max_new_tokens, temperature,
                            RequestHandle(self._rid))
             self._pending.append(req)
+            self._last_submit = time.monotonic()
             self._ensure_loop()
             self._cv.notify_all()
         return req.handle
@@ -388,6 +448,9 @@ class InferenceEngine:
             # it only once the destination confirms the import, so the
             # out/in counters track real transfers, not attempts
             k, v = kv.export_sequence(donor, depth)
+            # the migration boundary is the ONE place the device pool
+            # stages through the host (priced by the caller as before)
+            self.stats.d2h_bytes += k.nbytes + v.nbytes
             return prompt[:depth], k, v
 
     def import_prefix(self, tokens: Sequence[int], k, v,
@@ -443,6 +506,7 @@ class InferenceEngine:
             if headroom < need:
                 return 0
             seq = kv.import_sequence(k, v)
+            self.stats.h2d_bytes += k.nbytes + v.nbytes   # staging upload
             self._warm[seq] = tokens
             self._warm.move_to_end(seq)
             while len(self._warm) > self.max_warm_sequences:
@@ -522,9 +586,28 @@ class InferenceEngine:
 
     def _step(self) -> None:
         """One scheduler iteration: admit, then one decode step."""
+        self._grace_window()
         self._admit()
         if self._active:
             self._decode_once()
+
+    def _grace_window(self) -> None:
+        """Hold a FRESH batch's admission until ``admission_window``
+        seconds have passed since the last submission (capped at 10
+        windows), so a burst of staggered arrivals lands as one
+        admission wave / one batch shape.  Running batches are never
+        delayed — mid-decode arrivals batch naturally between steps."""
+        w = self.admission_window
+        if w <= 0 or self._active:
+            return
+        cap = time.monotonic() + 10 * w
+        with self._cv:
+            while not self._shutdown and self._pending:
+                now = time.monotonic()
+                wait = self._last_submit + w - now
+                if wait <= 0 or now >= cap:
+                    break
+                self._cv.wait(timeout=min(wait, cap - now))
 
     # ------------------------------------------------------------- admission
     def _admit(self) -> None:
@@ -666,6 +749,17 @@ class InferenceEngine:
                                       prefix_embeds=extra["patch_embeds"])
         return self._prefill_jit(self.params, tokens)
 
+    def _kv_rows(self, cache, row: int, length: int):
+        """One prefill row's KV in the page-store write format — device
+        arrays when the model exposes the device hook (no staging), host
+        float32 otherwise (the pool uploads them on write)."""
+        if hasattr(self.model, "cache_kv_rows_dev"):
+            return self.model.cache_kv_rows_dev(cache, row, length)
+        k, v = self.model.cache_kv_rows(cache, row)
+        self.stats.d2h_bytes += k.nbytes + v.nbytes
+        self.stats.h2d_bytes += k.nbytes + v.nbytes
+        return k, v
+
     def _admit_one(self, req: _Request) -> _Slot:
         if self.params is None:
             self.load()
@@ -695,9 +789,12 @@ class InferenceEngine:
             else:
                 tokens = jnp.asarray([req.prompt], jnp.int32)
                 logits, cache = self._prefill(tokens, req.extra)
-                k_row, v_row = self.model.cache_kv_rows(cache, 0)
+                S_kv = S
+                if req.extra.get("patch_embeds") is not None:
+                    S_kv += req.extra["patch_embeds"].shape[-2]
+                k_row, v_row = self._kv_rows(cache, 0, S_kv)
                 slot.seq_id = kv.add_sequence(k_row, v_row)
-                self.stats.prefill_tokens += k_row.shape[1]
+                self.stats.prefill_tokens += S_kv
             slot.length = kv.sequences[slot.seq_id].length
             if shareable:
                 self.warm_prefixes.insert(req.prompt, payload=slot.seq_id,
@@ -719,25 +816,26 @@ class InferenceEngine:
 
     def _prefill_shared(self, slot: _Slot, donor: int, shared: int):
         """Admit via page aliasing: reuse the donor's first ``shared``
-        tokens, chunk-prefill only the unseen suffix, append its KV."""
+        tokens, chunk-prefill only the unseen suffix, append its KV.
+        The reused prefix is gathered from the device pool and the
+        suffix KV written back through it entirely on device."""
         kv = self.kv
         req = slot.req
         seq = kv.add_sequence(shared_from=donor, shared_len=shared)
         slot.seq_id = seq
-        kp, vp = kv.gather(seq)                       # (L, shared, H, D)
+        kp, vp = kv.gather(seq)              # device (L, shared, H, D)
         S = len(req.prompt)
         T1 = self._round_t(S + req.max_new)
         L, _, H, D = kp.shape
-        k_rows = np.zeros((1, L, T1, H, D), np.float32)
-        v_rows = np.zeros((1, L, T1, H, D), np.float32)
-        k_rows[0, :, :shared] = kp
-        v_rows[0, :, :shared] = vp
+        k_rows = jnp.zeros((1, L, T1, H, D), jnp.float32).at[
+            0, :, :shared].set(kp)
+        v_rows = jnp.zeros((1, L, T1, H, D), jnp.float32).at[
+            0, :, :shared].set(vp)
         cache = self.model.paged_cache_view(k_rows, v_rows, [shared])
         suffix = jnp.asarray([req.prompt[shared:]], jnp.int32)
         logits, cache = self._chunk_prefill_jit(self.params, suffix, cache)
-        k_row, v_row = self.model.cache_kv_rows(cache, 0)   # (L, S, H, D)
-        for t in range(shared, S):
-            kv.append_token(seq, k_row[:, t], v_row[:, t])
+        k_row, v_row = self._kv_rows(cache, 0, S)           # (L, S, H, D)
+        kv.extend_sequence(seq, k_row[:, shared:], v_row[:, shared:])
         return logits
 
     # ---------------------------------------------------------------- decode
@@ -763,6 +861,7 @@ class InferenceEngine:
         """
         slots = self._active
         b_pad = self._round_b(len(slots))
+        self.stats.view_rebuilds += 1
         if self._paged_layout:
             kv = self.kv
             t_view = self._round_t(max(s.length + s.remaining for s in slots))
@@ -772,9 +871,13 @@ class InferenceEngine:
             lengths = [0] * b_pad
             for i, s in enumerate(slots):
                 kr, vr = kv.gather(s.seq_id)
+                # device pool -> host rows -> padded device view: the
+                # O(batch x seq_len) round-trip the paged path deletes
+                self.stats.d2h_bytes += kr.nbytes + vr.nbytes
                 k_rows[i, :, :s.length] = kr
                 v_rows[i, :, :s.length] = vr
                 lengths[i] = s.length
+            self.stats.h2d_bytes += k_rows.nbytes + v_rows.nbytes
             self._view = self.model.paged_cache_view(k_rows, v_rows, lengths)
         else:
             rows = self._dense_rows() + [None] * (b_pad - len(slots))
@@ -804,6 +907,9 @@ class InferenceEngine:
                 for k, v in view.items()}
 
     def _decode_once(self) -> None:
+        if self._use_paged:
+            self._decode_paged()
+            return
         if self._dirty:
             self._rebuild_view()
             for i, s in enumerate(self._active):
@@ -813,15 +919,54 @@ class InferenceEngine:
         tokens = np.zeros((self._view_pad,), np.int32)
         tokens[:b_real] = [s.last_token for s in slots]
         prev_lengths = [s.length for s in slots]
+        self.stats.h2d_bytes += tokens.nbytes
         logits, self._view = self._decode_jit(
             self.params, jnp.asarray(tokens), self._view)
         if self._paged_layout:
             taps_ix = np.zeros((self._view_pad,), np.int32)
             taps_ix[:b_real] = prev_lengths      # identity slots (no wrap)
             k_taps, v_taps = self.model.decode_kv_taps(self._view, taps_ix)
-            for i, s in enumerate(slots):
-                self.kv.append_token(s.seq_id, k_taps[:, i], v_taps[:, i])
+            # fresh KV taps sync to host, then re-upload into the pool —
+            # the per-step D2H round-trip the paged path deletes
+            self.stats.d2h_bytes += k_taps.nbytes + v_taps.nbytes
+            k_taps, v_taps = k_taps[:, :b_real], v_taps[:, :b_real]
+            self.stats.h2d_bytes += k_taps.nbytes + v_taps.nbytes
+            self.kv.append_tokens([s.seq_id for s in slots], k_taps, v_taps)
         for s in slots:
+            s.length += 1
+        self.stats.decode_tokens += b_real
+        self._advance(logits)
+
+    def _decode_paged(self) -> None:
+        """One decode step straight over the device-resident page pool:
+        upload O(batch) metadata (tokens, page tables, lengths), run the
+        paged step (in-pool KV scatter + paged attention), download
+        O(batch) sampled ids.  No dense view exists, so composition
+        changes are free — no ``_rebuild_view``, no KV tap sync."""
+        kv = self.kv
+        slots = self._active
+        b_real = len(slots)
+        for s in slots:                  # page alloc + COW (host metadata)
+            kv.prepare_append(s.seq_id)
+        b_pad = self._round_b(b_real)
+        # pad like the dense view's quanta so recompiles stay bounded
+        t_cap = self._round_t(max(s.length + s.remaining for s in slots))
+        n_pages = -(-t_cap // self.page_size)
+        pt = np.zeros((b_pad, n_pages), np.int32)
+        lens = np.full((b_pad,), -1, np.int32)
+        tokens = np.zeros((b_pad,), np.int32)
+        for i, s in enumerate(slots):
+            ids = kv.sequences[s.seq_id].page_ids
+            pt[i, :len(ids)] = ids
+            lens[i] = s.length
+            tokens[i] = s.last_token
+        self.stats.h2d_bytes += pt.nbytes + lens.nbytes + tokens.nbytes
+        logits, new_k, new_v = self._paged_step_jit(
+            self.params, jnp.asarray(tokens), kv.k, kv.v,
+            jnp.asarray(pt), jnp.asarray(lens))
+        kv.adopt_pages(new_k, new_v)
+        for s in slots:
+            kv.commit_append(s.seq_id)
             s.length += 1
         self.stats.decode_tokens += b_real
         self._advance(logits)
@@ -841,9 +986,36 @@ class InferenceEngine:
         slot.remaining -= 1
 
     def _advance(self, logits) -> None:
+        """Advance every active slot from one decode step's logits.
+
+        The whole (B, Vpad) batch is sampled in a single device call and
+        synced once (one O(batch)-ints D2H per step) — no per-slot
+        logits slicing or per-sequence ``int()`` syncs."""
+        slots = list(self._active)
+        b = len(slots)
+        b_pad = logits.shape[0]          # sample the PADDED batch so the
+        temps = [s.req.temperature for s in slots]   # jit stays keyed on
+        temps_pad = np.zeros((b_pad,), np.float32)   # the step's quanta,
+        temps_pad[:b] = temps            # not on every live-slot count
+        if any(t != 0.0 for t in temps):
+            zero = jnp.zeros_like(slots[0].rng)
+            keys = jnp.stack([s.rng for s in slots]
+                             + [zero] * (b_pad - b))
+        else:                            # greedy rows never read their key
+            keys = jnp.zeros((b_pad, 2), jnp.uint32)
+        toks_dev, new_keys = _batched_sample(
+            logits, keys, jnp.asarray(temps_pad),
+            vocab_size=self.cfg.vocab_size)
+        toks = np.asarray(toks_dev)      # one O(batch)-ints sync per step
+        self.stats.d2h_bytes += toks.nbytes
         finished = []
-        for i, s in enumerate(list(self._active)):
-            self._emit_token(s, logits[i:i + 1])
+        for i, s in enumerate(slots):
+            if temps[i] != 0.0:
+                s.rng = new_keys[i]
+            tok = int(toks[i])
+            s.generated.append(tok)
+            s.last_token = tok
+            s.remaining -= 1
             if s.remaining == 0:
                 finished.append(s)
         for s in finished:

@@ -1,17 +1,21 @@
 """Paged KV cache — the TPU adaptation of PagedAttention (DESIGN.md §2).
 
 GPU PagedAttention chases per-page pointers inside the kernel; TPUs want
-dense DMA.  Layout here: one array per layer of shape
-``(num_pages, page_size, kv_heads, head_dim)`` plus an integer page table
-per sequence.  ``gather()`` materializes a sequence's KV as a contiguous
-``(T, kv_heads, head_dim)`` block (a dense gather XLA turns into efficient
-dynamic-slices), which the decode kernel then streams through VMEM.
+dense DMA.  Layout here: one DEVICE array per layer-stack of shape
+``(num_layers, num_pages, page_size, kv_heads, head_dim)`` plus an
+integer page table per sequence.  The page storage is device-resident
+(jnp): prefill scatters KV rows into freshly allocated pages, decode
+scatters one token per sequence per step at ``(page, offset)`` computed
+from the page table, and the paged decode-attention kernel (or the XLA
+device gather it falls back to) reads the pages in place — the KV bytes
+never round-trip through the host.  Only METADATA lives on the host:
+refcounts, the free list, per-sequence page tables and lengths.
 
 This is the authoritative KV store behind the continuous-batching
-``InferenceEngine``: every full-attention transformer sequence lives here
-from admission to retirement, and the engine's dense decode batch is a
-materialized *view* over these pages (rebuilt whenever the batch
-composition changes, appended in lock-step with the pages otherwise).
+``InferenceEngine``: every full-attention transformer sequence lives
+here from admission to retirement.  Host staging happens exactly at the
+migration boundary (``export_sequence``/``import_sequence`` — the
+cross-worker wire format), never on the decode path.
 
 Prefix sharing: pages are REFCOUNTED.  When a new sequence's prompt hits
 a cached prefix (the engine's radix tree), its page table aliases the
@@ -19,14 +23,15 @@ donor's pages — the shared prefix is stored (and was computed) exactly
 once.  Full pages are immutable, so aliasing them needs no copy; a
 *partial* trailing page may be aliased too (the prefix need not be
 page-aligned), in which case the first append by EITHER sequence into a
-page with refcount > 1 triggers copy-on-write, so neither sequence can
-corrupt the other's tokens.
+page with refcount > 1 triggers copy-on-write (a device-side page copy),
+so neither sequence can corrupt the other's tokens.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -38,19 +43,20 @@ class SequenceEntry:
 
 
 class PagedKVCache:
-    """Host-managed paged KV store for ONE layer-stacked model."""
+    """Device-resident paged KV store for ONE layer-stacked model."""
 
     def __init__(self, num_layers: int, num_pages: int, page_size: int,
-                 kv_heads: int, head_dim: int, dtype=np.float32):
+                 kv_heads: int, head_dim: int, dtype=jnp.float32):
         self.num_layers = num_layers
         self.num_pages = num_pages
         self.page_size = page_size
         self.kv_heads = kv_heads
         self.head_dim = head_dim
-        # (L, P, page, Hkv, Dh) — numpy on host; device transfer on gather
+        self.dtype = jnp.dtype(dtype)
+        # (L, P, page, Hkv, Dh) — jnp on DEVICE; host never holds the KV
         shape = (num_layers, num_pages, page_size, kv_heads, head_dim)
-        self.k = np.zeros(shape, dtype)
-        self.v = np.zeros(shape, dtype)
+        self.k = jnp.zeros(shape, self.dtype)
+        self.v = jnp.zeros(shape, self.dtype)
         self.refcount = np.zeros((num_pages,), np.int64)
         self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
         self.sequences: Dict[int, SequenceEntry] = {}
@@ -79,21 +85,61 @@ class PagedKVCache:
     def pages_in_use(self) -> int:
         return int((self.refcount > 0).sum())
 
+    # ----------------------------------------------------- device plumbing
+    def _page_blocks(self, a) -> jnp.ndarray:
+        """(L, S, Hkv, Dh) -> (L, n_pages, page, Hkv, Dh), zero-padded to
+        whole pages, in pool dtype on device."""
+        a = jnp.asarray(a, self.dtype)
+        S = a.shape[1]
+        ps = self.page_size
+        n = -(-S // ps)
+        pad = n * ps - S
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return a.reshape(self.num_layers, n, ps, self.kv_heads, self.head_dim)
+
+    def _write_pages(self, pages: List[int], k, v) -> None:
+        """Scatter whole-page blocks into freshly allocated pages."""
+        idx = jnp.asarray(pages, jnp.int32)
+        self.k = self.k.at[:, idx].set(self._page_blocks(k))
+        self.v = self.v.at[:, idx].set(self._page_blocks(v))
+
+    def _cow_last_page(self, e: SequenceEntry) -> int:
+        """Make the trailing page of ``e`` private (device page copy when
+        it is aliased); returns the (possibly new) page id."""
+        p = e.page_ids[-1]
+        if self.refcount[p] > 1:                 # copy-on-write partial page
+            newp = self._alloc_page()
+            self.k = self.k.at[:, newp].set(self.k[:, p])
+            self.v = self.v.at[:, newp].set(self.v[:, p])
+            self._unref_page(p)
+            e.page_ids[-1] = newp
+            p = newp
+        return p
+
+    def adopt_pages(self, k, v) -> None:
+        """Install updated pool arrays returned by a jitted step that
+        scattered this step's KV in place (the paged decode path: the
+        pool is an input/output of the decode jit, donated on device)."""
+        self.k = k
+        self.v = v
+
     # --------------------------------------------------------------- write
-    def add_sequence(self, k: Optional[np.ndarray] = None,
-                     v: Optional[np.ndarray] = None,
+    def add_sequence(self, k=None, v=None,
                      shared_from: Optional[int] = None,
                      shared_len: int = 0) -> int:
-        """Store a prefilled sequence's KV. k/v: (L, S, Hkv, Dh) or None.
+        """Store a prefilled sequence's KV. k/v: (L, S, Hkv, Dh) arrays
+        (jnp device rows from prefill, or numpy at the import staging
+        boundary) or None.
 
         If ``shared_from`` names an existing sequence, its first
         ``shared_len`` tokens are aliased.  A non-page-aligned
         ``shared_len`` additionally aliases the donor's *partial* page;
         that page stays copy-on-write protected, so the caller must then
         pass no bulk suffix (k is None / empty) and extend the sequence
-        via :meth:`append_token`, which performs the COW copy before the
-        first private write.  Page-aligned sharing may carry a bulk
-        suffix in k/v as before.
+        via :meth:`extend_sequence` / :meth:`append_token`, which perform
+        the COW copy before the first private write.  Page-aligned
+        sharing may carry a bulk suffix in k/v as before.
         """
         ps = self.page_size
         seq_id = self._next_seq
@@ -117,43 +163,93 @@ class PagedKVCache:
         if S:
             assert length % ps == 0, \
                 "bulk suffix requires a page-aligned shared prefix; " \
-                "append_token() handles the copy-on-write case"
-            for s0 in range(0, S, ps):
-                p = self._alloc_page()
-                n = min(ps, S - s0)
-                self.k[:, p, :n] = k[:, s0:s0 + n]
-                self.v[:, p, :n] = v[:, s0:s0 + n]
-                page_ids.append(p)
+                "extend_sequence() handles the copy-on-write case"
+            pages = [self._alloc_page() for _ in range(-(-S // ps))]
+            self._write_pages(pages, k, v)
+            page_ids.extend(pages)
             length += S
         self.sequences[seq_id] = SequenceEntry(seq_id, page_ids, length)
         return seq_id
 
-    def append_token(self, seq_id: int, k_t: np.ndarray, v_t: np.ndarray) -> None:
-        """k_t/v_t: (L, Hkv, Dh) — one decode step's KV."""
+    def extend_sequence(self, seq_id: int, k, v) -> None:
+        """Append a bulk KV block (L, S, Hkv, Dh) at the sequence tail.
+
+        Fills the trailing partial page first (copy-on-write if it is
+        aliased), then scatters whole pages — O(1) device calls however
+        long the block, which is how chunked prefill writes its suffix
+        through the pool without a per-token loop."""
+        e = self.sequences[seq_id]
+        k = jnp.asarray(k, self.dtype)
+        v = jnp.asarray(v, self.dtype)
+        S = k.shape[1]
+        ps = self.page_size
+        off = e.length % ps
+        if off and S:
+            p = self._cow_last_page(e)
+            n = min(ps - off, S)
+            self.k = self.k.at[:, p, off:off + n].set(k[:, :n])
+            self.v = self.v.at[:, p, off:off + n].set(v[:, :n])
+            e.length += n
+            k, v = k[:, n:], v[:, n:]
+            S -= n
+        if S:
+            pages = [self._alloc_page() for _ in range(-(-S // ps))]
+            self._write_pages(pages, k, v)
+            e.page_ids.extend(pages)
+            e.length += S
+
+    def append_token(self, seq_id: int, k_t, v_t) -> None:
+        """k_t/v_t: (L, Hkv, Dh) — one decode step's KV (device scatter)."""
+        e = self.sequences[seq_id]
+        p, slot = self.prepare_append(seq_id)
+        self.k = self.k.at[:, p, slot].set(jnp.asarray(k_t, self.dtype))
+        self.v = self.v.at[:, p, slot].set(jnp.asarray(v_t, self.dtype))
+        e.length += 1
+
+    def append_tokens(self, seq_ids: List[int], k_t, v_t) -> None:
+        """One decode step's KV for a whole batch: k_t/v_t (L, B, Hkv, Dh).
+
+        Allocates / copy-on-writes each sequence's trailing page, then
+        lands every row in ONE device scatter (the dense-view reference
+        path's append; the paged path scatters inside the decode jit)."""
+        pages, slots = [], []
+        for sid in seq_ids:
+            p, s = self.prepare_append(sid)
+            pages.append(p)
+            slots.append(s)
+        pi = jnp.asarray(pages, jnp.int32)
+        si = jnp.asarray(slots, jnp.int32)
+        self.k = self.k.at[:, pi, si].set(jnp.asarray(k_t, self.dtype))
+        self.v = self.v.at[:, pi, si].set(jnp.asarray(v_t, self.dtype))
+        for sid in seq_ids:
+            self.sequences[sid].length += 1
+
+    def prepare_append(self, seq_id: int) -> Tuple[int, int]:
+        """Host-metadata half of a one-token append: allocate the next
+        page at a boundary, copy-on-write an aliased trailing page, and
+        return the ``(page, offset)`` the token's KV must land at.  The
+        caller writes the KV (device scatter — possibly inside a jitted
+        decode step) and then bumps the length via
+        :meth:`commit_append`."""
         e = self.sequences[seq_id]
         slot = e.length % self.page_size
         if slot == 0:
             e.page_ids.append(self._alloc_page())
-        p = e.page_ids[-1]
-        if self.refcount[p] > 1:                 # copy-on-write partial page
-            newp = self._alloc_page()
-            self.k[:, newp] = self.k[:, p]
-            self.v[:, newp] = self.v[:, p]
-            self._unref_page(p)
-            e.page_ids[-1] = newp
-            p = newp
-        self.k[:, p, slot] = k_t
-        self.v[:, p, slot] = v_t
-        e.length += 1
+            return e.page_ids[-1], 0
+        return self._cow_last_page(e), slot
+
+    def commit_append(self, seq_id: int, n: int = 1) -> None:
+        self.sequences[seq_id].length += n
 
     # --------------------------------------------------------------- read
-    def gather(self, seq_id: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Contiguous (L, T, Hkv, Dh) views for a sequence."""
+    def gather(self, seq_id: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Contiguous (L, T, Hkv, Dh) DEVICE views for a sequence (an
+        on-device page gather; nothing crosses the host boundary)."""
         e = self.sequences[seq_id]
-        k = self.k[:, e.page_ids].reshape(
-            self.num_layers, -1, self.kv_heads, self.head_dim)
-        v = self.v[:, e.page_ids].reshape(
-            self.num_layers, -1, self.kv_heads, self.head_dim)
+        idx = jnp.asarray(e.page_ids, jnp.int32)
+        L, H, D = self.num_layers, self.kv_heads, self.head_dim
+        k = self.k[:, idx].reshape(L, -1, H, D)
+        v = self.v[:, idx].reshape(L, -1, H, D)
         return k[:, :e.length], v[:, :e.length]
 
     def page_table(self, seq_id: int) -> List[int]:
@@ -163,36 +259,37 @@ class PagedKVCache:
     def export_sequence(self, seq_id: int,
                         length: Optional[int] = None
                         ) -> Tuple[np.ndarray, np.ndarray]:
-        """Contiguous (L, T, Hkv, Dh) COPIES of a sequence's first
+        """Contiguous (L, T, Hkv, Dh) HOST COPIES of a sequence's first
         ``length`` tokens (default: all of them) — the wire format for
-        cross-worker KV migration.  Copies (not views) so the exported
-        block stays valid after the source evicts or COWs the pages."""
+        cross-worker KV migration, and the ONLY device->host staging
+        point in the pool.  Copies (not views) so the exported block
+        stays valid after the source evicts or COWs the pages."""
         e = self.sequences[seq_id]
         n = e.length if length is None else min(length, e.length)
-        ps = self.page_size
-        shape = (self.num_layers, n, self.kv_heads, self.head_dim)
-        out_k = np.empty(shape, self.k.dtype)
-        out_v = np.empty(shape, self.v.dtype)
-        for j, p in enumerate(e.page_ids[:-(-n // ps)] if n else []):
-            lo = j * ps
-            m = min(ps, n - lo)
-            out_k[:, lo:lo + m] = self.k[:, p, :m]
-            out_v[:, lo:lo + m] = self.v[:, p, :m]
+        L, H, D = self.num_layers, self.kv_heads, self.head_dim
+        if n == 0:
+            z = np.zeros((L, 0, H, D), np.float32)
+            return z, z.copy()
+        idx = jnp.asarray(e.page_ids[:-(-n // self.page_size)], jnp.int32)
+        out_k = np.asarray(self.k[:, idx].reshape(L, -1, H, D)[:, :n],
+                           np.float32)
+        out_v = np.asarray(self.v[:, idx].reshape(L, -1, H, D)[:, :n],
+                           np.float32)
         return out_k, out_v
 
     def import_sequence(self, k: np.ndarray, v: np.ndarray) -> int:
-        """Adopt a migrated contiguous KV block: allocate pages, write
-        the tokens in, refcount them, and register a new sequence.  The
-        inverse of :meth:`export_sequence`; raises MemoryError if the
-        pool cannot hold it (callers pre-check free pages)."""
+        """Adopt a migrated contiguous KV block: allocate pages, scatter
+        the tokens in (the host->device staging point), refcount them,
+        and register a new sequence.  The inverse of
+        :meth:`export_sequence`; raises MemoryError if the pool cannot
+        hold it (callers pre-check free pages)."""
         if k.shape != v.shape or k.shape[0] != self.num_layers \
                 or k.shape[2:] != (self.kv_heads, self.head_dim):
             raise ValueError(
                 f"imported KV shape {k.shape} does not match cache layout "
                 f"(L={self.num_layers}, Hkv={self.kv_heads}, "
                 f"Dh={self.head_dim})")
-        return self.add_sequence(k=np.asarray(k, self.k.dtype),
-                                 v=np.asarray(v, self.v.dtype))
+        return self.add_sequence(k=k, v=v)
 
     def free_sequence(self, seq_id: int) -> None:
         e = self.sequences.pop(seq_id)

@@ -13,11 +13,17 @@ All models implement the same protocol:
 
 Models whose ``paged_kv_layout()`` is non-None additionally implement the
 paged-KV hooks the continuous-batching engine drives (KV lives in a
-refcounted ``PagedKVCache``; the dense cache is a materialized view):
-  cache_kv_rows(cache, row) -> (k, v) float32 numpy  # page-store writes
+refcounted DEVICE-RESIDENT ``PagedKVCache``):
+  cache_kv_rows_dev(cache, row, len) -> (k, v) jnp   # page-store writes
+  cache_kv_rows(cache, row) -> (k, v) float32 numpy  # migration staging
+  prefill_with_cache(params, tokens, cache) -> (last_logits, cache)
+  paged_decode_step(params, token, k_pages, v_pages, page_table, lengths)
+      -> (logits, k_pages, v_pages)                  # decode from pages:
+      in-pool KV scatter + paged-attention (Pallas kernel or XLA gather)
+and the dense-view reference hooks (A/B path, models without the paged
+step):
   paged_cache_view(k_rows, v_rows, lengths) -> cache # pages -> dense view
   decode_kv_taps(cache, slots) -> (k, v) numpy       # per-step page append
-  prefill_with_cache(params, tokens, cache) -> (last_logits, cache)
 """
 from __future__ import annotations
 

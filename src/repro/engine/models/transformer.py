@@ -155,18 +155,27 @@ class TransformerLM:
             return None
         return (self.cfg.num_layers, self.cfg.num_kv_heads, self.head_dim)
 
-    def cache_kv_rows(self, cache, row: int):
-        """One sequence's KV from a dense cache as float32 numpy
+    def cache_kv_rows_dev(self, cache, row: int, length: int):
+        """One sequence's KV from a dense cache as DEVICE arrays
         ``(L_total, length, Hkv, Dh)`` — lead layers first, then scanned.
-        This is the page-store write format (host-side, exact for bf16)."""
-        ln = int(cache["length"][row])
-        ks = [cache["k"][:, row, :ln]]
-        vs = [cache["v"][:, row, :ln]]
+        This is the page-store write format: the device-resident pool
+        scatters these rows into pages without a host round-trip
+        (``length`` is passed by the caller so no device sync is needed
+        to read ``cache['length']``)."""
+        ks = [cache["k"][:, row, :length]]
+        vs = [cache["v"][:, row, :length]]
         if "lead_k" in cache:
-            ks.insert(0, cache["lead_k"][:, row, :ln])
-            vs.insert(0, cache["lead_v"][:, row, :ln])
+            ks.insert(0, cache["lead_k"][:, row, :length])
+            vs.insert(0, cache["lead_v"][:, row, :length])
         k = jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0]
         v = jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+        return k, v
+
+    def cache_kv_rows(self, cache, row: int):
+        """Host (float32 numpy) variant of :meth:`cache_kv_rows_dev` —
+        the migration wire format (exact for bf16)."""
+        ln = int(cache["length"][row])
+        k, v = self.cache_kv_rows_dev(cache, row, ln)
         return (np.asarray(k, dtype=np.float32),
                 np.asarray(v, dtype=np.float32))
 
@@ -448,3 +457,96 @@ class TransformerLM:
         x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
         return (x[:, -1] @ head), new_cache
+
+    # ----------------------------------------------------- paged decode step
+    def paged_decode_step(self, params: Params, token: jax.Array,
+                          k_pages: jax.Array, v_pages: jax.Array,
+                          page_table: jax.Array, lengths: jax.Array,
+                          impl: Optional[str] = None
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """One autoregressive step straight over the device-resident page
+        pool — no dense KV view exists anywhere.
+
+        token: (B,) int32; k_pages/v_pages: the pool, (L_total, P, page,
+        Hkv, Dh); page_table: (B, n_pages) int32 (each row's pages in
+        sequence order, zero-padded); lengths: (B,) int32 with -1 for
+        padded rows.  Each layer scatters the new token's KV into its
+        page at ``(page_table[b, len//page], len % page)`` and attends
+        over the row's pages — via the paged Pallas kernel, or (XLA
+        fallback) an on-device gather.  Padded rows scatter out of
+        bounds (dropped) and are fully masked.  Returns
+        ``(logits (B, Vpad), new_k_pages, new_v_pages)``; the caller
+        adopts the returned pool arrays (donated under jit).
+        """
+        cfg = self.cfg
+        impl = impl or cfg.attention_impl
+        B = token.shape[0]
+        P, ps = k_pages.shape[1], k_pages.shape[2]
+        T = page_table.shape[1] * ps
+        pos = lengths                                        # (B,)
+        valid = pos >= 0
+        posc = jnp.maximum(pos, 0)
+        x = params["embed"][token][:, None, :]               # (B,1,D)
+        write_page = jnp.take_along_axis(
+            page_table, (posc // ps)[:, None], axis=1)[:, 0]
+        write_page = jnp.where(valid, write_page, P)         # OOB -> dropped
+        write_off = posc % ps
+        t_idx = jnp.arange(T, dtype=jnp.int32)
+        kv_pos = jnp.where(t_idx[None, :] <= pos[:, None], t_idx[None, :], -1)
+
+        def step_block(p, x, kp_l, vp_l):
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=self.head_dim,
+                                 positions=posc[:, None],
+                                 rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                                 norm_eps=cfg.norm_eps)
+            kp_l = kp_l.at[write_page, write_off].set(
+                k[:, 0].astype(kp_l.dtype), mode="drop")
+            vp_l = vp_l.at[write_page, write_off].set(
+                v[:, 0].astype(vp_l.dtype), mode="drop")
+            if impl in ("pallas", "pallas_interpret"):
+                from repro.kernels.paged_decode_attention.ops import \
+                    paged_decode_attention
+                o = paged_decode_attention(
+                    q, kp_l.astype(self.dtype), vp_l.astype(self.dtype),
+                    page_table, pos,
+                    interpret=impl == "pallas_interpret")
+            else:
+                kd = kp_l[page_table].reshape(
+                    B, T, cfg.num_kv_heads, self.head_dim).astype(self.dtype)
+                vd = vp_l[page_table].reshape(
+                    B, T, cfg.num_kv_heads, self.head_dim).astype(self.dtype)
+                o = L.attention(q, kd, vd, q_positions=posc[:, None],
+                                kv_positions=kv_pos, causal=True,
+                                window=cfg.swa_window, impl="xla")
+            x = x + L.attn_out(p["attn"], o)
+            h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            if "moe" in p:
+                y, _ = M.moe_ffn(h, p["moe"], cfg.moe)
+            else:
+                y = L.ffn_apply(p["ffn"], h)
+            return x + y, kp_l, vp_l
+
+        lead_k, lead_v = [], []
+        for i, p in enumerate(params.get("lead_blocks", [])):
+            x, kp_l, vp_l = step_block(p, x, k_pages[i], v_pages[i])
+            lead_k.append(kp_l)
+            lead_v.append(vp_l)
+
+        def body(x, xs):
+            p, kp_l, vp_l = xs
+            x, kp_l, vp_l = step_block(p, x, kp_l, vp_l)
+            return x, (kp_l, vp_l)
+
+        x, (ks, vs) = lax.scan(
+            body, x, (params["blocks"],
+                      k_pages[self.n_lead:], v_pages[self.n_lead:]))
+        if lead_k:
+            ks = jnp.concatenate([jnp.stack(lead_k), ks], axis=0)
+            vs = jnp.concatenate([jnp.stack(lead_v), vs], axis=0)
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return (x[:, -1] @ head), ks, vs

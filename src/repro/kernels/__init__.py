@@ -11,6 +11,10 @@ the dry-run compiles; the kernel/XLA switch is ``cfg.attention_impl``.
 * flash_attention      — causal/SWA prefill attention, online softmax
 * decode_attention     — GQA flash-decode over a (ring-buffer) KV cache,
                          KV-chunk grid + log-sum-exp combine
+* paged_decode_attention — flash-decode directly over the device-resident
+                         page pool: a scalar-prefetched page table picks
+                         each grid step's page, so non-contiguous
+                         sequences decode in place (no dense gather)
 * shared_prefix_attention — Hydragen-style: one pass over the SHARED prefix
                          KV for the whole batch (B·G-row matmuls feed the
                          MXU) + per-request suffix pass, LSE-combined.

@@ -1,0 +1,135 @@
+"""Paged GQA flash-decode — Pallas TPU kernel over non-contiguous pages.
+
+The decode-attention kernel streams a *contiguous* per-sequence KV block;
+this one attends directly over the engine's device-resident page pool,
+so the dense gather that used to materialize each sequence (the host
+``_rebuild_view`` round-trip) never happens.  Per grid step one physical
+page is DMA'd into VMEM — its index comes from the scalar-prefetched
+page table (``pltpu.PrefetchScalarGridSpec``), which is how TPUs chase
+PagedAttention's pointers with dense DMA.
+
+Grid: ``(B, Hkv, n_pages)``, page dim innermost; the online-softmax
+inner loop is the flash-decode recurrence from
+``kernels/decode_attention`` with the KV-chunk replaced by a page.
+Positions are implicit: page ``i`` of a row's table holds tokens
+``[i*page_size, (i+1)*page_size)`` of that sequence, valid while
+``<= lengths[b]`` (the newest token's KV is scattered into its page
+*before* the kernel runs, so ``lengths[b]`` is the query position).
+Rows with ``lengths[b] < 0`` are padding: fully masked, output zeros.
+
+The optional (m, l) outputs expose the log-sum-exp state for combining
+with other passes (e.g. a shared-prefix split), mirroring
+``decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_out_ref, l_out_ref,
+                         acc_ref, m_ref, l_ref, *,
+                         scale: float, page_size: int, n_pages: int):
+    b = pl.program_id(0)
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)            # (G, Dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (page, Dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    length = len_ref[b]                                  # query position
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (G, page)
+
+    # token t of page slot j is position it*page_size + j in the
+    # sequence; stale / unwritten slots sit past `length` and padding
+    # rows carry length < 0 (everything masked)
+    kv_pos = it * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)[0]
+    mask = kv_pos <= length
+    logits = jnp.where(mask[None, :], logits, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(mask[None, :], p, 0.0)
+    l_ref[:, 0] = alpha * l_ref[:, 0] + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(it == n_pages - 1)
+    def _done():
+        l = l_ref[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        m_out_ref[0, 0, :, 0] = m_ref[:, 0]
+        l_out_ref[0, 0, :, 0] = l
+
+
+def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, lengths,
+                                  *, interpret: bool = False):
+    """q: (B,H,Dh); k_pages/v_pages: (P, page, Hkv, Dh) — the pool;
+    page_table: (B, n_pages) int32; lengths: (B,) int32 (-1 = padding).
+
+    Returns (out (B,H,Dh), m (B,H), l (B,H)).
+    """
+    B, H, Dh = q.shape
+    P, page_size, Hkv, _ = k_pages.shape
+    n_pages = page_table.shape[1]
+    G = H // Hkv
+    grid = (B, Hkv, n_pages)
+    qg = q.reshape(B, Hkv, G, Dh)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=1.0 / math.sqrt(Dh),
+        page_size=page_size, n_pages=n_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # page_table, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, i, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh),
+                         lambda b, h, i, pt, ln: (pt[b, i], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, Dh),
+                         lambda b, h, i, pt, ln: (pt[b, i], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, i, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, i, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, i, pt, ln: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table, lengths, qg, k_pages, v_pages)
+    return (out.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))

@@ -1,0 +1,40 @@
+"""Public jit'd wrapper for paged GQA flash-decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import env_interpret
+from repro.kernels.paged_decode_attention.kernel import \
+    paged_decode_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("return_lse", "interpret"))
+def _paged_decode_attention_jit(q, k_pages, v_pages, page_table, lengths, *,
+                                return_lse=False, interpret=False):
+    squeeze = q.ndim == 4
+    if squeeze:
+        assert q.shape[1] == 1
+        q = q[:, 0]
+    out, m, l = paged_decode_attention_kernel(
+        q, k_pages, v_pages, page_table, lengths, interpret=interpret)
+    if squeeze:
+        out = out[:, None]
+    if return_lse:
+        return out, m, l
+    return out
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           return_lse=False, interpret=False):
+    """q: (B,1,H,Dh) or (B,H,Dh); k_pages/v_pages: (P, page, Hkv, Dh);
+    page_table (B, n_pages) int32; lengths (B,) int32 (-1 = padded row).
+    Returns attention output at q's rank (plus lse when asked).
+
+    ``interpret`` is resolved against REPRO_PALLAS_INTERPRET before the
+    jit boundary so the env override is part of the jit cache key.
+    """
+    return _paged_decode_attention_jit(
+        q, k_pages, v_pages, page_table, lengths, return_lse=return_lse,
+        interpret=env_interpret(interpret))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for paged GQA flash-decode: gather the pages dense,
+then run the contiguous decode-attention reference over them."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths,
+                               return_lse: bool = False):
+    """q: (B,H,Dh); k_pages/v_pages: (P, page, Hkv, Dh);
+    page_table: (B, n_pages) int32; lengths: (B,) int32 (-1 = padding).
+
+    Token position of page slot (i, j) in a row is ``i*page + j``; valid
+    while ``<= lengths[b]`` (the newest token's KV is already in its
+    page).  Returns out (B,H,Dh); with return_lse also (m, l).
+    """
+    B, n_pages = page_table.shape
+    _, page_size, Hkv, Dh = k_pages.shape
+    T = n_pages * page_size
+    k = k_pages[page_table].reshape(B, T, Hkv, Dh)
+    v = v_pages[page_table].reshape(B, T, Hkv, Dh)
+    kv_positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    return decode_attention_ref(
+        q, k, v, q_positions=lengths, kv_positions=kv_positions,
+        return_lse=return_lse)

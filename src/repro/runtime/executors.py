@@ -130,7 +130,8 @@ class GPUWorkerThread(threading.Thread):
                  host: EngineHost, records: List[TaskRecord],
                  records_lock: threading.Lock, t0: float,
                  die_after: Optional[int] = None, pipelining: bool = True,
-                 optimizer=None, migrator=None):
+                 optimizer=None, migrator=None,
+                 claim_ahead: Optional[int] = None):
         super().__init__(daemon=True, name=f"gpu{wid}")
         self.wid = wid
         self.board = board
@@ -145,9 +146,16 @@ class GPUWorkerThread(threading.Thread):
         self.pipelining = pipelining
         self.optimizer = optimizer
         self.migrator = migrator
+        # claim throttling: claim at most this many not-yet-completed
+        # nodes ahead (None = unlimited).  Pipelined submission races
+        # claims far ahead of completions, collapsing the replanning
+        # window to nothing; a small K keeps late-batch drift replans
+        # able to re-place real work.
+        self.claim_ahead = claim_ahead
         self.executed = 0
         self.error: Optional[BaseException] = None
         self._outstanding: List[RequestHandle] = []
+        self._my_claims: List[str] = []
 
     # ------------------------------------------------------------------
     def _fail(self, err: BaseException) -> None:
@@ -251,11 +259,15 @@ class GPUWorkerThread(threading.Thread):
         without settling they would trickle into the engine one by one
         and fragment the partial batch (and, on the JIT path, recompile
         per batch shape).  Bounded at ~20 ms — still far finer-grained
-        than the macro barrier it replaces.
+        than the macro barrier it replaces.  When the engines run their
+        own grace-window admission (``admission_window`` engine kwarg),
+        the window subsumes this loop and the wave submits immediately.
         """
         ready = {q for q in pending if self.state.query_ready(q, nid)}
         if not ready:
             return []
+        if self.host.engine_kwargs.get("admission_window", 0) > 0:
+            return sorted(ready)         # engine-side window batches these
         for _ in range(10):
             time.sleep(0.002)
             grown = {q for q in pending if self.state.query_ready(q, nid)}
@@ -312,6 +324,12 @@ class GPUWorkerThread(threading.Thread):
                     self.error = e
         self._outstanding.clear()
 
+    def _claims_in_flight(self) -> int:
+        """My claimed nodes whose macro result has not landed yet."""
+        with self.state.lock:
+            return sum(1 for n in self._my_claims
+                       if n not in self.state.macro_done)
+
     def run(self) -> None:
         """Claim nodes off the board until nothing is left for us; pick
         up failed peers' overflow work the moment it is claimable."""
@@ -321,6 +339,14 @@ class GPUWorkerThread(threading.Thread):
                         and self.executed >= self.die_after):
                     self.board.abandon(self.wid)     # simulated failure
                     break
+                if (self.claim_ahead is not None and self.error is None
+                        and self._claims_in_flight() >= self.claim_ahead):
+                    # throttle: wait for one of our claimed nodes to
+                    # complete before taking the next (already-claimed
+                    # work keeps decoding — only NEW claims wait)
+                    with self.state.lock:
+                        self.state.lock.wait(timeout=0.05)
+                    continue
                 nid = self.board.try_claim(self.wid)
                 if nid is None:
                     if self.board.exhausted(self.wid):
@@ -328,6 +354,7 @@ class GPUWorkerThread(threading.Thread):
                     with self.board.lock:
                         self.board.lock.wait(timeout=0.05)
                     continue
+                self._my_claims.append(nid)
                 if self.migrator is not None:
                     # claim-time KV pull: warm lineage on a peer worker
                     # (parent ran there, or a prior micro-batch did)

@@ -39,7 +39,8 @@ from repro.workloads.tools import ToolRuntime
 _ENGINE_COUNTERS = ("prefill_tokens_saved", "admission_waves",
                     "pages_shared", "tokens_reused", "coalesced_requests",
                     "pages_migrated_in", "pages_migrated_out",
-                    "migrate_seconds")
+                    "migrate_seconds", "h2d_bytes", "d2h_bytes",
+                    "view_rebuilds")
 
 
 class RealProcessor:
@@ -48,7 +49,8 @@ class RealProcessor:
                  cpu_slots: int = 8, coalescing: bool = True, seed: int = 0,
                  decode_cap: Optional[int] = None, pipelining: bool = True,
                  engine_kwargs: Optional[Dict[str, Any]] = None,
-                 kv_migration: bool = True):
+                 kv_migration: bool = True,
+                 claim_ahead: Optional[int] = None):
         self.graph = graph
         self.model_configs = model_configs
         self.tools = tools
@@ -60,6 +62,10 @@ class RealProcessor:
         self.engine_kwargs = engine_kwargs
         # migrate moved nodes' warm KV on plan splices (off = A/B control)
         self.kv_migration = kv_migration
+        # workers claim at most this many incomplete nodes ahead (None =
+        # unlimited) so pipelined claims can't outrun completions and
+        # starve the mid-run replanning window
+        self.claim_ahead = claim_ahead
         # cap generation length in tests (CPU real mode); None = node spec
         if decode_cap is not None:
             nodes = [n.with_(max_new_tokens=min(n.max_new_tokens, decode_cap))
@@ -141,7 +147,7 @@ class RealProcessor:
                             hosts[w], records, rlock, t0,
                             die_after=(die_after or {}).get(w),
                             pipelining=self.pipelining, optimizer=optimizer,
-                            migrator=migrator)
+                            migrator=migrator, claim_ahead=self.claim_ahead)
             for w in range(self.W)]
         try:
             if optimizer is not None:

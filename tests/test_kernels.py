@@ -5,6 +5,8 @@ import pytest
 
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref, lse_combine
+from repro.kernels.paged_decode_attention.ops import paged_decode_attention
+from repro.kernels.paged_decode_attention.ref import paged_decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.rglru_scan.ops import linear_scan
@@ -78,6 +80,58 @@ def test_decode_attention_lse_split_invariance():
     merged = lse_combine(parts)
     np.testing.assert_allclose(np.asarray(merged), np.asarray(full),
                                atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,NP,ps,H,Hkv,Dh", [
+    (2, 4, 8, 4, 2, 16),           # GQA
+    (1, 3, 16, 8, 8, 8),           # MHA
+    (3, 5, 8, 6, 1, 32),           # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sweep(B, NP, ps, H, Hkv, Dh, dtype):
+    """Paged kernel vs gather-dense oracle over a shuffled page pool,
+    with NON-ALIGNED lengths (every row ends mid-page) and one padded
+    (length = -1) row when the batch allows."""
+    P = 2 * B * NP                                 # pool larger than used
+    q = _mk((B, H, Dh), dtype)
+    k_pages, v_pages = _mk((P, ps, Hkv, Dh), dtype), _mk((P, ps, Hkv, Dh), dtype)
+    pt = jnp.asarray(RNG.permutation(P)[:B * NP].reshape(B, NP), jnp.int32)
+    # partial-page boundaries: length % ps != 0 for every live row
+    lens = np.asarray(RNG.integers((NP - 1) * ps, NP * ps - 1, size=(B,)),
+                      np.int32)
+    lens = np.where(lens % ps == 0, lens + 1, lens)
+    if B > 1:
+        lens[-1] = -1                              # padded batch row
+    lens = jnp.asarray(lens)
+    out = paged_decode_attention(q, k_pages, v_pages, pt, lens,
+                                 interpret=True)
+    ref = paged_decode_attention_ref(q, k_pages, v_pages, pt, lens)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_paged_decode_attention_aliased_pages_and_lse():
+    """Two rows may alias the SAME physical pages (prefix sharing); the
+    kernel reads them independently, and its (m, l) outputs combine like
+    the contiguous decode kernel's."""
+    B, NP, ps, H, Hkv, Dh = 2, 3, 8, 4, 2, 16
+    P = 8
+    q = _mk((B, H, Dh))
+    k_pages, v_pages = _mk((P, ps, Hkv, Dh)), _mk((P, ps, Hkv, Dh))
+    pt = jnp.asarray([[0, 1, 2], [0, 1, 4]], jnp.int32)  # shared prefix pages
+    lens = jnp.asarray([ps * 2 + 3, ps * 2 + 5], jnp.int32)
+    out, m, l = paged_decode_attention(q, k_pages, v_pages, pt, lens,
+                                       return_lse=True, interpret=True)
+    ref, mr, lr = paged_decode_attention_ref(q, k_pages, v_pages, pt, lens,
+                                             return_lse=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=2e-5,
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(lr), atol=2e-5,
+                               rtol=2e-5)
 
 
 @pytest.mark.parametrize("P,Ts", [(32, 16), (64, 32)])

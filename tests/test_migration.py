@@ -35,7 +35,7 @@ def test_kvcache_export_import_round_trip_and_conservation():
     assert ke.shape == (2, 7, 2, 8)
     np.testing.assert_array_equal(ke, k[:, :7])
     # exported block is a COPY: mutating the source pages can't corrupt it
-    src.k[:, src.page_table(seq)[0]] += 1.0
+    src.k = src.k.at[:, src.page_table(seq)[0]].add(1.0)
     np.testing.assert_array_equal(ke, k[:, :7])
 
     dst = PagedKVCache(num_layers=2, num_pages=16, page_size=4,

@@ -1,0 +1,273 @@
+"""Device-resident paged decode: bitwise identity with the dense-view
+reference path (fresh / warm / mid-batch admission / COW-shared partial
+pages), page-scatter append round trips, host<->device traffic
+acceptance, grace-window admission and claim throttling.
+
+Fast suite: tiny configs, n<=3 queries, decode_cap<=3 for e2e runs.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.engine.engine import InferenceEngine
+from repro.engine.kvcache import PagedKVCache
+
+
+def _wait(cond, timeout=120.0):
+    deadline = time.monotonic() + timeout
+    while not cond():
+        if time.monotonic() > deadline:
+            raise TimeoutError("condition not reached")
+        time.sleep(0.005)
+
+
+# ---------------------------------------------------------------------------
+# paged kernel path vs dense-view path: bitwise-identical outputs
+# ---------------------------------------------------------------------------
+
+def test_paged_vs_dense_view_identity_fresh_and_warm():
+    """Fresh prompts, then a warm re-run aliasing the first run's pages
+    (including a COW-shared NON-ALIGNED partial page): token outputs are
+    identical on both decode paths, and the paged path never
+    materializes a dense view."""
+    cfg = get_smoke("qwen3-1.7b")
+    prefix = list(range(10, 20))                 # 10 tokens: full + partial
+    prompts = [prefix + [100], prefix + [101], list(range(40, 47))]
+    outs = {}
+    for paged in (True, False):
+        eng = InferenceEngine(cfg, seed=0, page_size=8, paged_decode=paged)
+        try:
+            first = eng.generate(prompts, max_new_tokens=4)
+            again = eng.generate(prompts, max_new_tokens=4)   # warm aliases
+            assert eng.stats.prefix_hits >= 1
+            assert eng.stats.tokens_reused >= len(prefix)
+            outs[paged] = (first, again)
+            if paged:
+                assert eng.stats.view_rebuilds == 0
+            else:
+                assert eng.stats.view_rebuilds > 0
+        finally:
+            eng.shutdown()
+    assert outs[True] == outs[False]
+    assert outs[True][0] == outs[True][1]        # warm run bitwise stable
+
+
+def test_paged_vs_dense_view_identity_mid_batch_admission():
+    cfg = get_smoke("llama3.2-3b")
+    p1, p2 = list(range(10, 18)), list(range(60, 66))
+    outs = {}
+    for paged in (True, False):
+        eng = InferenceEngine(cfg, seed=0, paged_decode=paged)
+        try:
+            h1 = eng.submit(p1, max_new_tokens=24)
+            _wait(lambda: eng.stats.decode_tokens >= 1)
+            h2 = eng.submit(p2, max_new_tokens=4)
+            outs[paged] = (h1.result(), h2.result())
+            assert eng.stats.peak_batch == 2
+        finally:
+            eng.shutdown()
+    assert outs[True] == outs[False]
+
+
+def test_paged_engine_frees_pages_and_preserves_donor_after_cow():
+    """COW safety through the paged decode path: the donor's stored KV
+    is untouched after a sharer wrote through the aliased partial page,
+    and releasing the warm set returns every page."""
+    cfg = get_smoke("qwen3-1.7b")
+    prefix = list(range(10, 20))
+    eng = InferenceEngine(cfg, seed=0, page_size=8)
+    try:
+        eng.generate([prefix + [100]], max_new_tokens=4)
+        donor_seq = next(iter(eng._warm))
+        k_before, v_before = eng.kv.gather(donor_seq)
+        k_before, v_before = np.asarray(k_before), np.asarray(v_before)
+        eng.generate([prefix + [101]], max_new_tokens=4)    # aliases + COWs
+        assert eng.stats.tokens_reused == len(prefix)
+        k_after, v_after = eng.kv.gather(donor_seq)
+        np.testing.assert_array_equal(k_before, np.asarray(k_after))
+        np.testing.assert_array_equal(v_before, np.asarray(v_after))
+        eng.release_warm()
+        assert eng.kv.pages_in_use == 0 and not eng.kv.sequences
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# model level: paged step's Pallas kernel == its XLA gather fallback
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_step_kernel_matches_xla_gather():
+    """paged_decode_step under the paged Pallas kernel (interpret mode)
+    matches the on-device-gather XLA fallback: logits and the scattered
+    pool agree to fp tolerance (layers past the first see the previous
+    layer's attention output, so bitwise equality is not expected)."""
+    from repro.engine.models import build_model
+    cfg = get_smoke("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jnp.arange(10, 21, dtype=jnp.int32)[None, :]    # 11 tokens
+    S = prompt.shape[1]
+    _, cache = model.prefill(params, prompt)
+    layers, heads, dh = model.paged_kv_layout()
+    kv = PagedKVCache(layers, num_pages=8, page_size=8, kv_heads=heads,
+                      head_dim=dh)
+    seq = kv.add_sequence(*model.cache_kv_rows_dev(cache, 0, S))
+    kv.prepare_append(seq)
+    pt = jnp.asarray([kv.page_table(seq)], jnp.int32)
+    lens = jnp.asarray([S], jnp.int32)
+    token = jnp.asarray([42], jnp.int32)
+    lg_x, kx, vx = model.paged_decode_step(params, token, kv.k, kv.v,
+                                           pt, lens, impl="xla")
+    lg_p, kp, vp = model.paged_decode_step(params, token, kv.k, kv.v,
+                                           pt, lens,
+                                           impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(lg_p, np.float32),
+                               np.asarray(lg_x, np.float32),
+                               atol=2e-2, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(kx), np.asarray(kp),
+                               atol=5e-2, rtol=5e-2)
+    np.testing.assert_allclose(np.asarray(vx), np.asarray(vp),
+                               atol=5e-2, rtol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# cache level: in-jit page scatter == append_token, device pool round trip
+# ---------------------------------------------------------------------------
+
+def test_page_scatter_append_round_trip_matches_append_token():
+    """The batched (page, offset) scatter the decode step uses writes
+    the same pool state as the per-token append_token loop — including
+    across page boundaries and a COW'd shared partial page."""
+    rng = np.random.default_rng(0)
+    k0 = rng.standard_normal((2, 6, 2, 8)).astype(np.float32)
+    v0 = rng.standard_normal((2, 6, 2, 8)).astype(np.float32)
+
+    def fresh():
+        pc = PagedKVCache(num_layers=2, num_pages=16, page_size=4,
+                          kv_heads=2, head_dim=8)
+        a = pc.add_sequence(k0, v0)                      # 6 tokens: partial
+        b = pc.add_sequence(shared_from=a, shared_len=6)  # aliases partial
+        return pc, a, b
+
+    steps = [(rng.standard_normal((2, 2, 2, 8)).astype(np.float32),
+              rng.standard_normal((2, 2, 2, 8)).astype(np.float32))
+             for _ in range(5)]                          # crosses a boundary
+
+    ref, a1, b1 = fresh()
+    for k_t, v_t in steps:
+        ref.append_token(a1, k_t[:, 0], v_t[:, 0])
+        ref.append_token(b1, k_t[:, 1], v_t[:, 1])
+
+    dev, a2, b2 = fresh()
+    for k_t, v_t in steps:
+        # the decode-step shape: metadata prep, one scatter, commit
+        pages, slots = zip(*(dev.prepare_append(s) for s in (a2, b2)))
+        pi, si = jnp.asarray(pages), jnp.asarray(slots)
+        dev.k = dev.k.at[:, pi, si].set(jnp.asarray(k_t))
+        dev.v = dev.v.at[:, pi, si].set(jnp.asarray(v_t))
+        dev.commit_append(a2)
+        dev.commit_append(b2)
+
+    for s_ref, s_dev in ((a1, a2), (b1, b2)):
+        kr, vr = ref.gather(s_ref)
+        kd, vd = dev.gather(s_dev)
+        np.testing.assert_array_equal(np.asarray(kr), np.asarray(kd))
+        np.testing.assert_array_equal(np.asarray(vr), np.asarray(vd))
+    assert ref.pages_in_use == dev.pages_in_use
+
+
+# ---------------------------------------------------------------------------
+# e2e acceptance: O(batch) per-step traffic, not O(batch x seq_len)
+# ---------------------------------------------------------------------------
+
+def test_paged_ab_kills_host_gather_traffic():
+    """Warm WT A/B: paged decode moves >=10x fewer host<->device bytes
+    than the dense-view path, rebuilds no views, and produces identical
+    temperature-0 outputs."""
+    from benchmarks.common import run_paged_ab
+    rep_p, rep_d = run_paged_ab("wt", n=3, workers=2, decode_cap=3)
+    assert rep_p.extra["results"] == rep_d.extra["results"]
+    assert rep_p.extra["view_rebuilds"] == 0
+    assert rep_d.extra["view_rebuilds"] > 0
+    paged_traffic = rep_p.extra["h2d_bytes"] + rep_p.extra["d2h_bytes"]
+    dense_traffic = rep_d.extra["h2d_bytes"] + rep_d.extra["d2h_bytes"]
+    assert paged_traffic > 0                     # honest accounting
+    assert dense_traffic >= 10 * paged_traffic
+
+
+# ---------------------------------------------------------------------------
+# grace-window admission
+# ---------------------------------------------------------------------------
+
+def test_admission_window_batches_staggered_arrivals():
+    """With a grace window, a burst of staggered submissions forms ONE
+    admission wave (one batch shape); outputs are unchanged."""
+    cfg = get_smoke("qwen3-1.7b")
+    prompts = [list(range(10, 18)), list(range(30, 41)), [3, 4, 5, 6]]
+    eng = InferenceEngine(cfg, seed=0, admission_window=0.05)
+    try:
+        handles = []
+        for p in prompts:                        # staggered inside window
+            handles.append(eng.submit(p, max_new_tokens=4))
+            time.sleep(0.01)
+        outs = [h.result() for h in handles]
+        assert eng.stats.admission_waves == 1
+        assert eng.stats.peak_batch == 3
+    finally:
+        eng.shutdown()
+    ref = InferenceEngine(cfg, seed=0)
+    try:
+        assert ref.generate(prompts, max_new_tokens=4) == outs
+    finally:
+        ref.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# claim throttling keeps the replanning window open
+# ---------------------------------------------------------------------------
+
+def test_claim_throttling_lets_drift_replan_fire_late():
+    """With claim_ahead=1 a worker cannot race ahead and claim the whole
+    chain at admission, so a splice queued AFTER the first node's
+    results land still finds unclaimed work to re-place — and outputs
+    match an unthrottled control run."""
+    from benchmarks.common import (make_cm, make_real_processor,
+                                   swapped_tail)
+    from repro.runtime import OnlineOptimizer
+
+    proc, g, cons, _, plan = make_real_processor(
+        "w+", 2, 2, 2, kv_migration=False, claim_ahead=1)
+    opt = OnlineOptimizer(make_cm(g, cons), drift_threshold=1e9)
+    done = threading.Event()
+    report = {}
+
+    def _run():
+        try:
+            report["rep"] = proc.run(cons, plan, optimizer=opt)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=_run, daemon=True)
+    t.start()
+    # queue the forced splice once the run is underway but long before
+    # the chain's first node completes (its first-run JIT compile alone
+    # takes far longer than this) — with claim_ahead=1 the two
+    # downstream nodes are provably still unclaimed at that point,
+    # whereas unthrottled workers claim the whole chain at admission
+    time.sleep(0.5)
+    assert not done.is_set()
+    opt.queue_splice(swapped_tail(plan, g, 2))
+    assert done.wait(timeout=300.0)
+    rep = report["rep"]
+    assert rep.extra["plan_splices"] >= 1         # window survived
+    assert rep.extra["replans"] >= 1
+
+    ctrl, _, cons2, _, plan2 = make_real_processor(
+        "w+", 2, 2, 2, kv_migration=False)
+    rep2 = ctrl.run(cons2, plan2)
+    assert rep.extra["results"] == rep2.extra["results"]
