@@ -17,12 +17,12 @@ from __future__ import annotations
 from typing import Dict, Tuple
 
 from repro.core import (CostModel, EpochDPSolver, HARDWARE, PAPER_MODELS,
-                        SolverConfig, consolidate, heft_plan, random_plan,
-                        round_robin_plan)
-from repro.core.consolidate import ConsolidatedGraph
+                        SolverConfig, consolidate, consolidate_multi,
+                        heft_plan, random_plan, round_robin_plan)
+from repro.core.consolidate import ConsolidatedGraph, MultiConsolidatedGraph
 from repro.core.graphspec import GraphSpec
 from repro.runtime import OpWiseSimulator, SimulatedProcessor
-from repro.workloads import build_workload
+from repro.workloads import MIXED_PARTS, build_mixed_workload, build_workload
 
 
 def setup(workload: str, n: int, seed: int = 0
@@ -31,15 +31,27 @@ def setup(workload: str, n: int, seed: int = 0
     return g, consolidate(g, bindings), bindings
 
 
+def setup_multi(n: int, seed: int = 0, parts=MIXED_PARTS
+                ) -> Tuple[GraphSpec, MultiConsolidatedGraph, list, str]:
+    """(merged graph, multi-cons, per-template batches, database) for a
+    mixed multi-template batch."""
+    batches, db = build_mixed_workload(n, seed=seed, parts=parts)
+    mc = consolidate_multi(batches)
+    return mc.template, mc, batches, db
+
+
 def make_cm(g: GraphSpec, cons: ConsolidatedGraph, *, logical_tools=False,
             hardware="h200", **kw) -> CostModel:
     batch = {}
     for nid in g.nodes:
         m = cons.macro(nid)
+        # tools price their PHYSICAL count — multi-template mega-DAGs
+        # drop signatures another template's node already owns
         batch[nid] = (m.n_logical if (g.nodes[nid].is_llm() or logical_tools)
-                      else m.n_unique)
+                      else len(cons.physical_signatures(nid)))
     return CostModel(g, HARDWARE[hardware], PAPER_MODELS,
-                     batch_sizes=batch, **kw)
+                     batch_sizes=batch, warm_aliases=cons.warm_aliases(),
+                     **kw)
 
 
 def halo_plan(g, cons, workers=3, **cm_kw):
@@ -219,6 +231,103 @@ def run_paged_ab(workload="wt", n=4, workers=2, decode_cap=4):
             for h in hosts:
                 h.shutdown()
     return reps[True], reps[False]
+
+
+def interleaved_epochs(plan, mc: MultiConsolidatedGraph) -> int:
+    """Epochs whose macro-nodes come from >= 2 templates — the shared
+    decode batches only a mega-DAG plan can form."""
+    n = 0
+    for e in plan.epochs:
+        tmpls = {mc.template_of[v] for comp in e.components for v in comp}
+        if len(tmpls) >= 2:
+            n += 1
+    return n
+
+
+def run_multi_sim_ab(n: int = 384, workers: int = 3, seed: int = 0,
+                     parts=MIXED_PARTS):
+    """Simulated consolidated-multi vs per-template-serial A/B.
+
+    The multi arm plans ONE mega-DAG over the mixed batch (epoch packing
+    may interleave templates; cross-template signatures dedup); the
+    serial arm consolidates and runs each template's slice on its own,
+    one after another.  Returns (rep_multi, serial_makespan, plan, mc).
+    """
+    g, mc, batches, _ = setup_multi(n, seed=seed, parts=parts)
+    plan = halo_plan(g, mc, workers)
+    rep = SimulatedProcessor(g, make_cm(g, mc), workers).run(mc, plan)
+    serial = 0.0
+    for tg, tb in batches:
+        cons = consolidate(tg, tb)
+        p = halo_plan(tg, cons, workers)
+        serial += SimulatedProcessor(
+            tg, make_cm(tg, cons), workers).run(cons, p).makespan
+    return rep, serial, plan, mc
+
+
+def make_real_multi_processor(n=6, workers=2, decode_cap=3, seed=0,
+                              parts=MIXED_PARTS, **proc_kw):
+    """(processor, merged graph, multi-cons, batches, plan, db) for a
+    real-engine mixed-batch run."""
+    from repro.runtime import RealProcessor
+    from repro.workloads.datagen import build_database
+    from repro.workloads.tools import ToolRuntime
+    g, mc, batches, db = setup_multi(n, seed=seed, parts=parts)
+    plan = halo_plan(g, mc, workers)
+    proc = RealProcessor(
+        g, smoke_models_for(g),
+        ToolRuntime(build_database(db), latency_scale=0.0),
+        num_workers=workers, decode_cap=decode_cap, seed=seed, **proc_kw)
+    return proc, g, mc, batches, plan, db
+
+
+def run_real_multi_ab(n: int = 6, workers: int = 2, decode_cap: int = 3,
+                      seed: int = 0, parts=MIXED_PARTS):
+    """REAL-engine consolidated-multi vs per-template-serial A/B.
+
+    Returns (rep_multi, serial_reports, serial_seconds, mc, plan).  The
+    serial arm runs each template's slice as its own batch, one after
+    another.  BOTH arms run on warm persistent hosts (one throwaway run
+    first, like the other A/B harnesses) so the measurement is
+    steady-state serving, not JIT compilation, and both arms are timed
+    the SAME way (their reports' makespans; serial sums them) so fixed
+    setup cost can't bias the comparison; outputs are
+    bitwise-comparable to the multi arm's at temperature 0.
+    """
+    from repro.runtime import RealProcessor
+    from repro.runtime.executors import EngineHost
+    from repro.workloads.datagen import build_database
+    from repro.workloads.tools import ToolRuntime
+    proc, g, mc, batches, plan, db = make_real_multi_processor(
+        n, workers, decode_cap, seed, parts)
+    hosts = [EngineHost(proc.model_configs, seed=proc.seed)
+             for _ in range(workers)]
+    try:
+        proc.run(mc, plan, hosts=hosts)              # warm (JIT + pages)
+        rep_multi = proc.run(mc, plan, hosts=hosts)
+    finally:
+        for h in hosts:
+            h.shutdown()
+    serial_reports = []
+    serial_seconds = 0.0
+    for tg, tb in batches:
+        cons = consolidate(tg, tb)
+        p = halo_plan(tg, cons, workers)
+        pr = RealProcessor(
+            tg, smoke_models_for(tg),
+            ToolRuntime(build_database(db), latency_scale=0.0),
+            num_workers=workers, decode_cap=decode_cap, seed=seed)
+        shosts = [EngineHost(pr.model_configs, seed=pr.seed)
+                  for _ in range(workers)]
+        try:
+            pr.run(cons, p, hosts=shosts)            # warm
+            rep = pr.run(cons, p, hosts=shosts)
+            serial_reports.append(rep)
+            serial_seconds += rep.makespan
+        finally:
+            for h in shosts:
+                h.shutdown()
+    return rep_multi, serial_reports, serial_seconds, mc, plan
 
 
 def engine_stat_cols(rep) -> Dict[str, float]:

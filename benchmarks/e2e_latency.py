@@ -10,7 +10,9 @@ from __future__ import annotations
 from typing import Dict, List
 
 from benchmarks.common import (BASELINES, engine_stat_cols,
-                               make_real_processor, run_vllm_serial, setup)
+                               interleaved_epochs, make_real_processor,
+                               run_multi_sim_ab, run_real_multi_ab,
+                               run_vllm_serial, setup)
 
 WORKLOADS = ("w1", "w2", "w3", "w4", "w5", "w6")
 
@@ -34,9 +36,35 @@ def run(n_queries: int = 1024, workers: int = 3,
                      "makespan_s": round(serial.makespan, 2),
                      "speedup_vs_halo": round(serial.makespan /
                                               max(halo_t, 1e-9), 2)})
+    rows.extend(multi_rows(n_queries, workers))
     if include_real:
         rows.extend(real_rows())
     return rows
+
+
+def multi_rows(n_queries: int = 384, workers: int = 3) -> List[Dict]:
+    """Mixed wd+wt+w4 batch: ONE consolidated mega-DAG vs planning and
+    running each template's slice separately (simulated backend).  The
+    multi row reports the cross-template static dedup and how many plan
+    epochs interleave macro-nodes from different templates — the wins
+    per-template planning cannot see (docs/BENCHMARKS.md)."""
+    rep, serial_s, plan, mc = run_multi_sim_ab(n_queries, workers)
+    xt = mc.cross_template_summary()
+    return [
+        {"workload": "mixed", "system": "consolidated-multi",
+         "makespan_s": round(rep.makespan, 2),
+         "epochs": len(plan.epochs),
+         "interleaved_epochs": interleaved_epochs(plan, mc),
+         "cross_template_deduped": xt["cross_template_deduped"],
+         # physical/unique across the mega-DAG's tool macros — NOT the
+         # per-node unique/logical ratio ConsolidatedGraph
+         # .static_dedup_ratio measures, hence the distinct name
+         "xt_physical_ratio": round(
+             xt["tool_physical"] / max(xt["tool_unique"], 1), 3)},
+        {"workload": "mixed", "system": "per-template-serial",
+         "makespan_s": round(serial_s, 2),
+         "speedup_vs_multi": round(serial_s / max(rep.makespan, 1e-9), 2)},
+    ]
 
 
 def real_rows(n_queries: int = 6, workers: int = 2,
@@ -50,7 +78,37 @@ def real_rows(n_queries: int = 6, workers: int = 2,
              **engine_stat_cols(rep)}] + pipelining_rows(
         n_queries, workers, max(decode_cap, 6)) + migration_rows(
         min(n_queries, 4), workers) + paged_rows(
-        min(n_queries, 4), workers)
+        min(n_queries, 4), workers) + real_multi_rows(
+        n_queries, workers)
+
+
+def real_multi_rows(n_queries: int = 6, workers: int = 2,
+                    decode_cap: int = 3) -> List[Dict]:
+    """Mixed wd+wt+w4 batch through REAL engines: one mega-DAG run vs
+    each template's slice run serially.  BOTH arms are measured warm
+    (per-arm throwaway run first) and by their reports' makespans, so
+    the comparison is steady-state serving throughput, not JIT/setup
+    cost.  The multi row's makespan is <= the serial row's sum, it
+    reports runtime cross-template tool merges (``xt_merged_requests``)
+    next to the engine's page-sharing counters, and temp-0 outputs are
+    bitwise-identical across the arms (pinned in
+    tests/test_multi_template.py)."""
+    rep, serial_reports, serial_s, mc, plan = run_real_multi_ab(
+        n_queries, workers, decode_cap)
+    xt = mc.cross_template_summary()
+    return [
+        {"workload": "mixed", "system": "consolidated-multi-real",
+         "makespan_s": round(rep.makespan, 3),
+         "epochs": len(plan.epochs),
+         "interleaved_epochs": interleaved_epochs(plan, mc),
+         "xt_deduped_static": xt["cross_template_deduped"],
+         "xt_merged_requests": rep.coalesce_stats.get(
+             "cross_template_merged_requests", 0),
+         **engine_stat_cols(rep)},
+        {"workload": "mixed", "system": "per-template-serial-real",
+         "makespan_s": round(serial_s, 3),
+         "speedup_vs_multi": round(serial_s / max(rep.makespan, 1e-9), 2)},
+    ]
 
 
 def pipelining_rows(n_queries: int = 6, workers: int = 2,

@@ -11,8 +11,9 @@ import time
 from typing import Dict, List
 
 from benchmarks.common import (engine_stat_cols, halo_plan, make_cm, setup)
-from repro.core import consolidate, round_robin_plan
+from repro.core import consolidate, consolidate_multi, round_robin_plan
 from repro.runtime import OnlineSimulator
+from repro.workloads import build_mixed_workload
 
 WORKLOADS = ("w1", "w3", "w5", "w+")
 
@@ -51,7 +52,54 @@ def run(n_queries: int = 128, workers: int = 3, micro_batch: int = 16,
             rows.append({"workload": w, "system": name,
                          "qps": round(rep.throughput_qps(), 3),
                          "makespan_s": round(rep.makespan, 1)})
+    rows.extend(mixed_stream_rows(max(n_queries, 24), workers))
     return rows
+
+
+def mixed_stream_rows(n_queries: int = 96, workers: int = 3,
+                      micro_batch: int = 12,
+                      rate_qps: float = 30.0) -> List[Dict]:
+    """Mixed online arrivals (wd+wt+w4 interleaved): each micro-batch is
+    consolidated into ONE mega-DAG instance (``consolidated-multi``) vs
+    streaming every template through its own per-template pipeline
+    (``per-template-serial``, makespans summed).  The realistic serving
+    case the multi-template consolidator exists for: queries of
+    different templates arrive interleaved and should share epochs,
+    tool executions and warm KV (docs/BENCHMARKS.md)."""
+    batches_full, _ = build_mixed_workload(n_queries, seed=0)
+    mc_full = consolidate_multi(batches_full)
+    g = mc_full.template
+    per = max(micro_batch // max(len(batches_full), 1), 1)
+    rounds = max((len(tb) + per - 1) // per
+                 for _, tb in batches_full)
+    stream = []
+    for r in range(rounds):
+        slices = [(tg, tb[r * per:(r + 1) * per])
+                  for tg, tb in batches_full]
+        mcr = consolidate_multi(slices)
+        stream.append((mcr, halo_plan(mcr.template, mcr, workers)))
+    sim = OnlineSimulator(g, make_cm(g, mc_full), workers)
+    multi = sim.run(stream, rate_qps)
+
+    serial_makespan = 0.0
+    for tg, tb in batches_full:
+        cons_t = consolidate(tg, tb)
+        plan_t = halo_plan(tg, cons_t, workers)
+        tstream = []
+        for lo in range(0, len(tb), per):
+            cb = consolidate(tg, tb[lo:lo + per])
+            tstream.append((cb, plan_t))
+        rep_t = OnlineSimulator(
+            tg, make_cm(tg, cons_t), workers).run(tstream, rate_qps)
+        serial_makespan += rep_t.makespan
+    return [
+        {"workload": "mixed", "system": "consolidated-multi",
+         "qps": round(multi.throughput_qps(), 3),
+         "makespan_s": round(multi.makespan, 1)},
+        {"workload": "mixed", "system": "per-template-serial",
+         "qps": round(n_queries / max(serial_makespan, 1e-9), 3),
+         "makespan_s": round(serial_makespan, 1)},
+    ]
 
 
 def real_stream_rows(n_queries: int = 8, workers: int = 2,

@@ -1,0 +1,54 @@
+"""Mixed multi-template batch → one mega-DAG → real engines.
+
+Submits an interleaved wd+wt+w4 batch through ``consolidate_multi``
+(DESIGN.md §8.1) and the real Processor, printing the coalescing
+summary: which requests merged across templates, how many plan epochs
+interleave macro-nodes of different templates, and the engine's
+page-sharing counters.
+
+    PYTHONPATH=src python examples/mixed_batch.py
+"""
+from repro.core import (EpochDPSolver, HARDWARE, PAPER_MODELS,
+                        SolverConfig, CostModel, consolidate_multi)
+from repro.runtime import RealProcessor
+from repro.workloads import build_mixed_workload
+from repro.workloads.datagen import build_database
+from repro.workloads.tools import ToolRuntime
+
+# --- consolidate three templates' queries into ONE mega-DAG --------------
+batches, db = build_mixed_workload(6, seed=0)      # wd + wt + w4, 2 each
+mc = consolidate_multi(batches)
+graph = mc.template
+print("templates:", mc.template_names)
+print("mega-DAG:", len(graph.nodes), "nodes /",
+      len(graph.llm_nodes()), "LLM")
+
+xt = mc.cross_template_summary()
+print("cross-template:", xt)
+for nid, row in sorted(mc.coalescing_summary().items()):
+    if row["unique"] != row["physical"]:           # merged away
+        print(f"  {nid}: {row}")
+
+# --- plan it as one batch (epochs may interleave templates) --------------
+cm = CostModel(graph, HARDWARE["h200"], PAPER_MODELS,
+               batch_sizes={n: len(mc.macro(n).bindings)
+                            for n in graph.nodes},
+               warm_aliases=mc.warm_aliases())
+plan = EpochDPSolver(graph.llm_dag(), cm,
+                     SolverConfig(num_workers=2)).solve()
+for i, e in enumerate(plan.epochs):
+    tmpls = sorted({mc.template_of[v] for c in e.components for v in c})
+    print(f"epoch {i}: {e.components} on workers {e.workers} "
+          f"(templates {tmpls})")
+
+# --- run it on real continuous-batching engines --------------------------
+from benchmarks.common import smoke_models_for  # noqa: E402 (optional dep)
+
+proc = RealProcessor(graph, smoke_models_for(graph),
+                     ToolRuntime(build_database(db), latency_scale=0.0),
+                     num_workers=2, decode_cap=3)
+report = proc.run(mc, plan)
+print("makespan:", round(report.makespan, 2), "s")
+print("coalesce:", report.coalesce_stats)
+print("pages_shared:", report.extra["pages_shared"],
+      "tokens_reused:", report.extra["tokens_reused"])

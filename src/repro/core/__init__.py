@@ -9,13 +9,17 @@ Public API:
 
     graph = parse_workflow(workflow_dict)          # §3 Parser
     batch = consolidate(graph, bindings)           # cross-query consolidation
+    mega  = consolidate_multi([(graph_a, binds_a),  # cross-TEMPLATE mega-DAG
+                               (graph_b, binds_b)])  # (DESIGN.md §8.1)
     cm    = CostModel(graph, HARDWARE["h200"], models, ...)
     plan  = EpochDPSolver(graph.llm_dag(), cm,
                           SolverConfig(num_workers=3)).solve()   # §4
     # runtime execution: repro.runtime.Processor                  # §5
 """
 from repro.core.coalesce import CoalesceTable, canonical_signature
-from repro.core.consolidate import ConsolidatedGraph, consolidate
+from repro.core.consolidate import (
+    ConsolidatedGraph, MultiConsolidatedGraph, consolidate, consolidate_multi,
+)
 from repro.core.cost_model import (
     A100, H100, H200, HARDWARE, PAPER_MODELS, TPU_V5E, CostModel,
     EpochWeights, HardwareCalibration, HardwareProfile, LLMProfile,
@@ -34,7 +38,8 @@ from repro.core.state import SystemState, WorkerContext
 
 __all__ = [
     "CoalesceTable", "canonical_signature", "ConsolidatedGraph",
-    "consolidate", "CostModel", "EpochWeights", "HardwareCalibration",
+    "MultiConsolidatedGraph", "consolidate", "consolidate_multi",
+    "CostModel", "EpochWeights", "HardwareCalibration",
     "HardwareProfile",
     "LLMProfile", "OperatorProfiler", "profile_from_config", "HARDWARE",
     "PAPER_MODELS", "H200", "H100", "A100", "TPU_V5E", "GraphSpec",

@@ -44,6 +44,7 @@ def _normalize_http(args: str) -> str:
 
 def canonical_signature(op: str, args: str, model: str = "",
                         extra: str = "") -> str:
+    """Normalized identity of one operator invocation (the merge key)."""
     if op == "sql":
         body = _normalize_sql(args)
     elif op == "http":
@@ -56,6 +57,8 @@ def canonical_signature(op: str, args: str, model: str = "",
 
 @dataclass
 class PhysicalTask:
+    """One physical tool execution and the logical requests riding it."""
+
     signature: str
     op: str
     args: str
@@ -89,8 +92,13 @@ class CoalesceTable:
             self.physical_executions += 1
             return sig, True, None
         if sig in self.completed:                  # reuse of finished result
+            task = self.completed[sig]
+            # keep attributing logical requesters after completion: the
+            # cross-template merge stats read them (a late template
+            # hitting an earlier template's cached result IS a merge)
+            task.requesters.append(requester)
             self.result_cache_hits += 1
-            return sig, False, self.completed[sig].result
+            return sig, False, task.result
         if sig in self.pending:                    # merge into in-flight task
             self.pending[sig].requesters.append(requester)
             return sig, False, None
@@ -108,4 +116,5 @@ class CoalesceTable:
 
     @property
     def dedup_ratio(self) -> float:
+        """physical / logical — 1.0 means nothing merged."""
         return self.physical_executions / max(self.logical_requests, 1)

@@ -1,4 +1,5 @@
-"""State-aware cost model  T(w,v,S) = T_prep + T_model + T_infer  (§4.1).
+"""State-aware cost model  T(w,v,S) = T_prep + T_model + T_infer
+(paper §4.1; DESIGN.md §8.2).
 
 All GPU terms are ROOFLINE-DERIVED from hardware profiles rather than
 magic constants:
@@ -32,6 +33,8 @@ from repro.core.state import SystemState, WorkerContext
 
 @dataclass(frozen=True)
 class HardwareProfile:
+    """Roofline description of one GPU/TPU worker class."""
+
     name: str
     flops: float                 # peak bf16 FLOP/s per worker
     hbm_bw: float                # bytes/s
@@ -59,6 +62,8 @@ HARDWARE = {h.name: h for h in (H200, H100, A100, TPU_V5E)}
 
 @dataclass(frozen=True)
 class LLMProfile:
+    """Served-model size/bandwidth profile the roofline terms price."""
+
     name: str
     param_bytes: float           # resident weight bytes (bf16)
     active_param_count: float    # params touched per token (MoE-aware)
@@ -70,6 +75,7 @@ class LLMProfile:
                     kv_heads: int, head_dim: int,
                     active_params: Optional[float] = None,
                     supports_partial_prefix: bool = True) -> "LLMProfile":
+        """Build a profile from parameter count + KV geometry (bf16)."""
         return LLMProfile(
             name=name,
             param_bytes=2.0 * n_params,
@@ -118,6 +124,7 @@ class OperatorProfiler:
         self._count: Dict[str, int] = {}
 
     def estimate(self, node: NodeSpec, rendered_args: str = "") -> float:
+        """Expected seconds for one physical execution of ``node``."""
         key = f"{node.op}|{node.id}"
         if key in self._ewma:
             return self._ewma[key]
@@ -131,6 +138,7 @@ class OperatorProfiler:
         return {"sql": 0.20, "http": 0.50, "pyfn": 0.05}.get(node.op, 0.10)
 
     def update(self, node_id: str, op: str, observed: float) -> None:
+        """Fold one measured latency into the node's EWMA."""
         key = f"{op}|{node_id}"
         prev = self._ewma.get(key)
         self._ewma[key] = observed if prev is None else (
@@ -139,9 +147,11 @@ class OperatorProfiler:
 
     @property
     def observations(self) -> int:
+        """Total measured samples folded in so far."""
         return sum(self._count.values())
 
     def calibrated_keys(self) -> int:
+        """How many distinct (op, node) keys have an online estimate."""
         return len(self._ewma)
 
 
@@ -190,6 +200,7 @@ class HardwareCalibration:
         return min(max(x, self.lo), self.hi)
 
     def profile(self) -> HardwareProfile:
+        """The base profile with the calibrated knobs substituted."""
         return replace(self.base, mfu=self.mfu, bw_eff=self.bw_eff)
 
     def deltas(self) -> Dict[str, float]:
@@ -207,11 +218,15 @@ class HardwareCalibration:
 
 @dataclass
 class EpochWeights:
+    """The epoch-blend weights (makespan-vs-load mix, overhead weight)."""
+
     mu: float = 0.7              # makespan vs aggregate-load blend
     lam: float = 1.0             # per-epoch overhead regularizer weight
 
 
 class CostModel:
+    """State-aware latency model T(w, v, S) shared by planner+runtime."""
+
     def __init__(self, graph: GraphSpec, hardware: HardwareProfile,
                  models: Dict[str, LLMProfile],
                  profiler: Optional[OperatorProfiler] = None,
@@ -221,7 +236,8 @@ class CostModel:
                  use_profiling: bool = True,
                  use_prep_guidance: bool = True,
                  cpu_parallelism: int = 16,
-                 use_migration: bool = True):
+                 use_migration: bool = True,
+                 warm_aliases: Optional[Dict[str, Tuple[str, ...]]] = None):
         self.graph = graph
         self.hw = hardware
         self.models = models
@@ -239,9 +255,15 @@ class CostModel:
         # executor actually migrates; False for non-migrating systems so
         # plans aren't priced with savings execution can't realize
         self.use_migration = use_migration
+        # cross-template warm-KV equivalences (multi-template mega-DAGs,
+        # DESIGN.md §8.1): node v's warm lineage also satisfies any alias
+        # of v — two templates with the identical static prompt share one
+        # radix lineage at the engine, so the planner credits either id
+        self.warm_aliases = dict(warm_aliases or {})
 
     # ------------------------------------------------------------- T_model
     def t_model(self, v: NodeSpec, ctx: WorkerContext) -> float:
+        """Model-switch cost: load ``v``'s weights unless resident."""
         if ctx.model == v.model:
             return 0.0
         prof = self.models[v.model]
@@ -253,11 +275,26 @@ class CostModel:
     def _batch(self, v: NodeSpec) -> int:
         return max(self.batch_sizes.get(v.id, 1), 1)
 
+    def _alias_closure(self, parents: Sequence[str]) -> Sequence[str]:
+        """Parents plus their cross-template warm-KV aliases — any of
+        them being warm in a context makes that context a valid donor."""
+        if not self.warm_aliases:
+            return parents
+        out = list(parents)
+        for p in parents:
+            out.extend(self.warm_aliases.get(p, ()))
+        return out
+
     def _warm_shared_tokens(self, v: NodeSpec, ctx: WorkerContext,
                             parents: Sequence[str]) -> float:
         """Prompt tokens a warm parent lineage in ``ctx`` would cover."""
         p = float(v.est_prompt_tokens)
-        if ctx.warm_parent(parents) is None:
+        # donors: the node's parents, their aliases, and the node's OWN
+        # aliases (an alias that already ran left this node's identical
+        # static prompt warm in the radix tree)
+        donors = list(self._alias_closure(parents))
+        donors += list(self.warm_aliases.get(v.id, ()))
+        if ctx.warm_parent(donors) is None:
             return 0.0
         prof = self.models[v.model]
         if not prof.supports_partial_prefix:
@@ -312,6 +349,7 @@ class CostModel:
                                  parents: Sequence[str],
                                  peer_ctxs: Sequence[WorkerContext] = ()
                                  ) -> float:
+        """Prompt tokens left to prefill after every warm-KV discount."""
         return self.prefill_plan(v, ctx, parents, peer_ctxs)[0]
 
     def migration_wins(self, v: NodeSpec, tokens: float,
@@ -357,6 +395,7 @@ class CostModel:
     def t_infer(self, v: NodeSpec, ctx: WorkerContext,
                 parents: Sequence[str],
                 peer_ctxs: Sequence[WorkerContext] = ()) -> float:
+        """Roofline prefill+decode (+migration) time for one macro-node."""
         n = self._batch(v)
         if not self.use_profiling:
             # ablation "w/o profiling scoring": score by dependency count

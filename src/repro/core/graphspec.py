@@ -14,12 +14,16 @@ from typing import Dict, FrozenSet, Iterable, List, Sequence, Tuple
 
 
 class NodeType(str, enum.Enum):
+    """Whether a node runs on a GPU worker (LLM) or the CPU pool (TOOL)."""
+
     LLM = "llm"
     TOOL = "tool"
 
 
 @dataclass(frozen=True)
 class NodeSpec:
+    """One workflow node: an LLM invocation or a tool call template."""
+
     id: str
     type: NodeType
     # --- LLM nodes -----------------------------------------------------
@@ -36,9 +40,11 @@ class NodeSpec:
     est_seconds: float = 0.0
 
     def is_llm(self) -> bool:
+        """True for GPU-resident LLM nodes, False for CPU tool nodes."""
         return self.type == NodeType.LLM
 
     def with_(self, **kw) -> "NodeSpec":
+        """A copy of this spec with the given fields replaced."""
         return replace(self, **kw)
 
 
@@ -85,21 +91,27 @@ class GraphSpec:
 
     # ------------------------------------------------------------------
     def parents(self, v: str) -> List[str]:
+        """Direct predecessors of ``v``."""
         return list(self._parents[v])
 
     def children(self, v: str) -> List[str]:
+        """Direct successors of ``v``."""
         return list(self._children[v])
 
     def topo_order(self) -> List[str]:
+        """All node ids in a deterministic topological order."""
         return list(self._topo)
 
     def llm_nodes(self) -> List[str]:
+        """LLM node ids in topological order."""
         return [i for i in self._topo if self.nodes[i].is_llm()]
 
     def tool_nodes(self) -> List[str]:
+        """Tool node ids in topological order."""
         return [i for i in self._topo if not self.nodes[i].is_llm()]
 
     def ancestors(self, v: str) -> FrozenSet[str]:
+        """Every transitive predecessor of ``v``."""
         seen: set = set()
         stack = list(self._parents[v])
         while stack:
@@ -162,12 +174,15 @@ class LLMDag:
             self._children[u].append(v)
 
     def spec(self, v: str) -> NodeSpec:
+        """The underlying NodeSpec of LLM node ``v``."""
         return self.graph.nodes[v]
 
     def parents(self, v: str) -> List[str]:
+        """LLM-DAG predecessors of ``v``."""
         return list(self._parents[v])
 
     def children(self, v: str) -> List[str]:
+        """LLM-DAG successors of ``v``."""
         return list(self._children[v])
 
     def frontier(self, done: FrozenSet[str]) -> List[str]:
@@ -186,7 +201,7 @@ class LLMDag:
         topo = [v for v in self.graph.topo_order() if v in batch]
         parent: Dict[str, str] = {v: v for v in batch}
 
-        def find(x):
+        def _find(x):
             while parent[x] != x:
                 parent[x] = parent[parent[x]]
                 x = parent[x]
@@ -194,8 +209,8 @@ class LLMDag:
 
         for u, v in self.edges:
             if u in batch and v in batch:
-                parent[find(u)] = find(v)
+                parent[_find(u)] = _find(v)
         groups: Dict[str, List[str]] = {}
         for v in topo:
-            groups.setdefault(find(v), []).append(v)
+            groups.setdefault(_find(v), []).append(v)
         return list(groups.values())

@@ -16,6 +16,7 @@ Pair = Tuple[str, str, int]
 
 
 def consecutive_pairs(plan: ExecutionPlan, num_workers: int) -> Set[Pair]:
+    """P(S): (prev, next, worker) pairs of consecutive same-GPU nodes."""
     out: Set[Pair] = set()
     for w, seq in enumerate(plan.worker_sequences(num_workers)):
         for a, b in zip(seq, seq[1:]):
@@ -25,6 +26,7 @@ def consecutive_pairs(plan: ExecutionPlan, num_workers: int) -> Set[Pair]:
 
 def optimality_score(plan: ExecutionPlan, oracle_plan: ExecutionPlan,
                      num_workers: int) -> float:
+    """Opt(S): recall of the oracle's co-location decisions (§6.3)."""
     p_s = consecutive_pairs(plan, num_workers)
     p_star = consecutive_pairs(oracle_plan, num_workers)
     if not p_star:

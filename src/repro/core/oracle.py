@@ -22,6 +22,8 @@ from repro.core.state import WorkerContext
 
 @dataclass
 class OracleResult:
+    """The oracle's makespan-optimal schedule + search statistics."""
+
     makespan: float
     assign: Dict[str, int]
     start: Dict[str, float]
@@ -31,6 +33,8 @@ class OracleResult:
 
 
 class BranchAndBoundOracle:
+    """Exact (exponential) branch-and-bound scheduler — the Opt(S) ref."""
+
     def __init__(self, dag: LLMDag, cm: CostModel, num_workers: int,
                  time_limit: float = 120.0):
         self.dag = dag
@@ -101,6 +105,7 @@ class BranchAndBoundOracle:
 
     # ------------------------------------------------------------------
     def solve(self) -> OracleResult:
+        """Exhaustive search (within time_limit) for the optimal plan."""
         self._t0 = time.perf_counter()
         self._branch(frozenset(), {}, [0.0] * self.W,
                      [WorkerContext() for _ in range(self.W)], {}, {}, 0.0)

@@ -28,7 +28,9 @@ from typing import Dict, List, Tuple
 from repro.core.graphspec import GraphSpec, NodeSpec, NodeType
 
 _DIRECTIVE = re.compile(r"\{\{\s*(sql|http|fn)\s*:\s*(.*?)\s*\}\}", re.S)
-_REF = re.compile(r"\$\{([A-Za-z_][A-Za-z0-9_]*)\}")
+# upstream refs may be template-namespaced ("${t0/search}") by the
+# multi-template consolidator (DESIGN.md §8.1), hence the "/"
+_REF = re.compile(r"\$\{([A-Za-z_][A-Za-z0-9_/]*)\}")
 
 
 def _decouple(node: dict) -> Tuple[dict, List[dict], List[Tuple[str, str]]]:
@@ -38,7 +40,7 @@ def _decouple(node: dict) -> Tuple[dict, List[dict], List[Tuple[str, str]]]:
     edges: List[Tuple[str, str]] = []
     idx = 0
 
-    def sub(m: re.Match) -> str:
+    def _sub(m: re.Match) -> str:
         nonlocal idx
         tool_id = f"{node['id']}__{m.group(1)}{idx}"
         idx += 1
@@ -49,7 +51,7 @@ def _decouple(node: dict) -> Tuple[dict, List[dict], List[Tuple[str, str]]]:
         edges.append((tool_id, node["id"]))
         return "${" + tool_id + "}"
 
-    new_prompt = _DIRECTIVE.sub(sub, prompt)
+    new_prompt = _DIRECTIVE.sub(_sub, prompt)
     out = dict(node)
     out["prompt"] = new_prompt
     return out, tools, edges
@@ -109,10 +111,10 @@ def render(template: str, binding: Dict[str, str],
            upstream: Dict[str, str]) -> str:
     """Instantiate a prompt/args template with binding params ($param)
     and upstream results (${node_id})."""
-    def ref_sub(m: re.Match) -> str:
+    def _ref_sub(m: re.Match) -> str:
         return upstream.get(m.group(1), m.group(0))
 
-    out = _REF.sub(ref_sub, template)
+    out = _REF.sub(_ref_sub, template)
     # longest-first so $market_id wins over $market
     for key in sorted(binding, key=len, reverse=True):
         out = out.replace("$" + key, str(binding[key]))

@@ -14,12 +14,15 @@ from repro.core.graphspec import LLMDag
 
 @dataclass
 class Epoch:
+    """One plan step: chains of macro-nodes, one chain per worker."""
+
     # parallel lists: components[i] runs (in order) on workers[i]
     components: List[List[str]]
     workers: List[int]
     predicted_cost: float = 0.0
 
     def assignments(self) -> List[Tuple[str, int]]:
+        """(node, worker) pairs of this epoch, in chain order."""
         out = []
         for comp, w in zip(self.components, self.workers):
             out.extend((v, w) for v in comp)
@@ -28,6 +31,8 @@ class Epoch:
 
 @dataclass
 class ExecutionPlan:
+    """The Optimizer's output: an ordered list of epochs."""
+
     epochs: List[Epoch] = field(default_factory=list)
     predicted_cost: float = 0.0
     solver_seconds: float = 0.0
@@ -35,12 +40,14 @@ class ExecutionPlan:
 
     # ------------------------------------------------------------------
     def node_order(self) -> List[Tuple[str, int]]:
+        """(node, worker) pairs across every epoch, in plan order."""
         out = []
         for e in self.epochs:
             out.extend(e.assignments())
         return out
 
     def worker_sequences(self, num_workers: int) -> List[List[str]]:
+        """Per-worker node sequences (the Processor's claim lists)."""
         seqs: List[List[str]] = [[] for _ in range(num_workers)]
         for e in self.epochs:
             for comp, w in zip(e.components, e.workers):
@@ -48,6 +55,7 @@ class ExecutionPlan:
         return seqs
 
     def assignment_map(self) -> Dict[str, int]:
+        """node id -> planned worker."""
         return {v: w for v, w in self.node_order()}
 
     # ------------------------------------------------------------------

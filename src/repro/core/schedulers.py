@@ -82,15 +82,16 @@ def heft_plan(dag: LLMDag, cm: CostModel, num_workers: int) -> ExecutionPlan:
     mean_cost = {v: cm.t_node(v, fresh, frozenset())[0] for v in dag.node_ids}
     rank: Dict[str, float] = {}
 
-    def upward(v: str) -> float:
+    def _upward(v: str) -> float:
         if v in rank:
             return rank[v]
         succ = dag.children(v)
-        rank[v] = mean_cost[v] + (max(upward(s) for s in succ) if succ else 0.0)
+        rank[v] = mean_cost[v] + (max(_upward(s) for s in succ)
+                                  if succ else 0.0)
         return rank[v]
 
     for v in dag.node_ids:
-        upward(v)
+        _upward(v)
     order = sorted(dag.node_ids, key=lambda v: -rank[v])
 
     ready_time = [0.0] * num_workers

@@ -1,4 +1,4 @@
-"""Epoch-based dynamic-programming solver (Algorithm 1).
+"""Epoch-based dynamic-programming solver (Algorithm 1; DESIGN.md §8.3).
 
 Memoized recursion over states S = (D, H): D the completed LLM set, H
 the tuple of worker contexts.  Each step enumerates feasible epoch
@@ -29,6 +29,8 @@ from repro.core.state import SystemState, WorkerContext
 
 @dataclass
 class SolverConfig:
+    """EpochDPSolver knobs (workers, frontier depth, caps, beam)."""
+
     num_workers: int = 3
     chain_depth: int = 2           # frontier closure levels per epoch
     max_epoch_nodes: int = 6       # |B_e| cap
@@ -41,6 +43,8 @@ class SolverConfig:
 
 
 class EpochDPSolver:
+    """Algorithm 1: memoized epoch DP over (done, contexts) states."""
+
     def __init__(self, dag: LLMDag, cost_model: CostModel,
                  config: Optional[SolverConfig] = None):
         self.dag = dag
@@ -138,6 +142,7 @@ class EpochDPSolver:
 
     # ------------------------------------------------------------------
     def solve(self, initial: Optional[SystemState] = None) -> ExecutionPlan:
+        """Solve from ``initial`` (or cold start) and rebuild the plan."""
         t0 = time.perf_counter()
         state = initial or SystemState.initial(self.cfg.num_workers)
         start_done = state.done

@@ -19,6 +19,8 @@ WARM_CAP = 2
 
 @dataclass(frozen=True)
 class WorkerContext:
+    """Persistent per-worker GPU context h_w (resident model, warm KV)."""
+
     model: str = ""                               # resident weights m_w
     warm: Tuple[str, ...] = ()                    # kv signature u_w (recent-last)
 
@@ -30,6 +32,7 @@ class WorkerContext:
         return WorkerContext(model=self.model, warm=warm[-WARM_CAP:])
 
     def has_warm(self, node_id: str) -> bool:
+        """True when ``node_id``'s lineage is warm in this context."""
         return node_id in self.warm
 
     def warm_parent(self, parents: Sequence[str]) -> Optional[str]:
@@ -46,13 +49,17 @@ class WorkerContext:
 
 @dataclass(frozen=True)
 class SystemState:
+    """DP state S = (completed LLM set, per-worker contexts)."""
+
     done: FrozenSet[str] = frozenset()
     contexts: Tuple[WorkerContext, ...] = ()
 
     def key(self) -> Tuple:
+        """Hashable memo key."""
         return (self.done, self.contexts)
 
     @staticmethod
     def initial(num_workers: int) -> "SystemState":
+        """The empty starting state for ``num_workers`` cold workers."""
         return SystemState(frozenset(),
                            tuple(WorkerContext() for _ in range(num_workers)))

@@ -16,7 +16,7 @@
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple)
 
 from repro.core.graphspec import GraphSpec, LLMDag
 from repro.core.plan import Epoch, ExecutionPlan
@@ -24,13 +24,32 @@ from repro.core.state import WorkerContext
 
 
 class BatchState:
-    def __init__(self, graph: GraphSpec, n_queries: int):
+    """Thread-safe per-(query, node) result store for one batch run.
+
+    ``queries_of`` (node id → global query indices) restricts each node
+    to a subset of the batch — the multi-template mega-DAG case, where a
+    namespaced node serves only its own template's query slice.  By
+    default every node serves every query (single template).  A node
+    with an EMPTY query set is macro-complete from the start.
+    """
+
+    def __init__(self, graph: GraphSpec, n_queries: int,
+                 queries_of: Optional[Dict[str, Sequence[int]]] = None):
         self.graph = graph
         self.n = n_queries
         self.lock = threading.Condition()
         self.results: Dict[Tuple[int, str], str] = {}
         self.node_done_count: Dict[str, int] = {v: 0 for v in graph.nodes}
-        self.macro_done: Set[str] = set()
+        if queries_of is None:
+            self.queries_of = {v: list(range(n_queries)) for v in graph.nodes}
+        else:
+            self.queries_of = {v: sorted(queries_of.get(v, ()))
+                               for v in graph.nodes}
+        self._query_sets = {v: set(qs) for v, qs in self.queries_of.items()}
+        self.expected = {v: len(qs) for v, qs in self.queries_of.items()}
+        # zero-query nodes (an empty template slice) are done at birth
+        self.macro_done: Set[str] = {v for v, n in self.expected.items()
+                                     if n == 0}
         self._listeners: List[Callable[[int, str], None]] = []
 
     # ------------------------------------------------------------------
@@ -51,7 +70,7 @@ class BatchState:
                 return False
             self.results[(q, node)] = value
             self.node_done_count[node] += 1
-            macro = self.node_done_count[node] == self.n
+            macro = self.node_done_count[node] == self.expected[node]
             if macro:
                 self.macro_done.add(node)
             # per-result wakeup: pipelined workers wait on single-query
@@ -60,6 +79,14 @@ class BatchState:
         for fn in self._listeners:
             fn(q, node)
         return macro
+
+    def queries_for(self, node: str) -> List[int]:
+        """Global query indices ``node`` serves (immutable per run)."""
+        return list(self.queries_of[node])
+
+    def serves(self, q: int, node: str) -> bool:
+        """True when query ``q`` belongs to ``node``'s template slice."""
+        return q in self._query_sets[node]
 
     def macro_ready(self, node: str) -> bool:
         """All parents complete for ALL queries (LLM barrier readiness)."""

@@ -1,4 +1,4 @@
-"""Executors for the real Processor backend.
+"""Executors for the real Processor backend (DESIGN.md §7.1).
 
 * EngineHost — a worker's model slot: at most one resident continuous-
   batching engine; ``submit()`` feeds requests into the engine's
@@ -166,7 +166,7 @@ class GPUWorkerThread(threading.Thread):
 
     def _pending_queries(self, nid: str) -> List[int]:
         with self.state.lock:
-            return [q for q in range(self.state.n)
+            return [q for q in self.state.queries_for(nid)
                     if (q, nid) not in self.state.results]
 
     # ----------------------------------------------------- barrier mode
@@ -178,10 +178,14 @@ class GPUWorkerThread(threading.Thread):
         # real in barrier mode — give it the same 600s budget as every
         # other dependency wait
         self.state.wait_macro_ready(nid, timeout=600.0)
+        queries = self.state.queries_for(nid)   # this node's template slice
+        if not queries:
+            return
         eng = self.host.engine_for(spec.model)
         prompts = []
-        for q, b in enumerate(self.bindings):
-            text = render(spec.prompt, b, self.state.upstream(q))
+        for q in queries:
+            text = render(spec.prompt, self.bindings[q],
+                          self.state.upstream(q))
             prompts.append(tokenize(text, eng.cfg.vocab_size))
         self.host.log_prompts(nid, prompts)
         ts = time.perf_counter() - self.t0
@@ -197,7 +201,7 @@ class GPUWorkerThread(threading.Thread):
         if self.optimizer is not None:
             self.optimizer.observe_llm(nid, len(prompts), te - ts,
                                        f"gpu{self.wid}", span=(ts, te))
-        for q, toks in enumerate(outs):
+        for q, toks in zip(queries, outs):
             self.state.set_result(q, nid, detokenize(toks))
 
     # --------------------------------------------------- pipelined mode
@@ -449,7 +453,7 @@ class ToolDispatcher(threading.Thread):
         """Dispatch one (query, tool) task if ready. Returns True if it
         was dispatched (or served from the coalesce cache) just now."""
         key = (q, nid)
-        if key in self.dispatched:
+        if key in self.dispatched or not self.state.serves(q, nid):
             return False
         with self.state.lock:
             if key in self.state.results:
@@ -477,7 +481,7 @@ class ToolDispatcher(threading.Thread):
         tool_nodes = sorted(self.graph.tool_nodes(),
                             key=lambda t: self._depth[t])    # depth priority
         for nid in tool_nodes:
-            for q in range(self.state.n):
+            for q in self.state.queries_for(nid):
                 if self._maybe_dispatch(q, nid):
                     n += 1
         return n

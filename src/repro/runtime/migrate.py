@@ -1,5 +1,5 @@
 """Cross-worker KV-cache migration (paper §5: the Processor's
-"KV-cache sharing and **migration**").
+"KV-cache sharing and **migration**"; DESIGN.md §7.3).
 
 Prefix sharing keeps a node's warm KV useful only on the worker that
 computed it.  When a mid-run replan splices a node onto a DIFFERENT
@@ -117,13 +117,28 @@ class KVMigrator:
         sources = [w for w in range(len(self.hosts)) if w != dst_w]
         return self._migrate_node(nid, sources, dst_w)
 
+    def _alias_ids(self, nid: str) -> Sequence[str]:
+        """Cross-template warm aliases of ``nid`` (multi-template mega-
+        DAGs): nodes whose identical upstream subtree makes their warm
+        KV interchangeable with ``nid``'s.  The cost model prices these
+        as donors, so the migrator must probe them too or the planner's
+        credit would be savings execution never realizes."""
+        if self.cm is None:
+            return ()
+        return self.cm.warm_aliases.get(nid, ())
+
     def _lineage_prompts(self, nid: str, host) -> List[tuple]:
-        """Recent prompts of ``nid`` and of its LLM parents on ``host`` —
-        the node's warm parent lineage, newest first, deduplicated."""
+        """Recent prompts of ``nid`` / its LLM parents / their warm
+        aliases on ``host`` — the node's warm lineage, newest first,
+        deduplicated."""
         cand: List[tuple] = list(host.prompts_for(nid))
+        for a in self._alias_ids(nid):
+            cand.extend(host.prompts_for(a))
         for p in self.graph.parents(nid):
             if self.graph.nodes[p].is_llm():
                 cand.extend(host.prompts_for(p))
+                for a in self._alias_ids(p):
+                    cand.extend(host.prompts_for(a))
         seen: set = set()
         out: List[tuple] = []
         for prompt in reversed(cand):            # newest first

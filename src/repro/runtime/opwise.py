@@ -55,7 +55,9 @@ class OpWiseSimulator:
         m = cons.macro(nid)
         if self.graph.nodes[nid].is_llm():
             return m.n_logical                 # LLM calls are never deduped
-        return m.n_unique if self.coalescing else m.n_logical
+        if not self.coalescing:
+            return m.n_logical
+        return len(cons.physical_signatures(nid))   # cross-template aware
 
     # ------------------------------------------------------------------
     def run(self, cons: ConsolidatedGraph) -> RunReport:

@@ -1,4 +1,5 @@
-"""RealProcessor — executes an ExecutionPlan with REAL components:
+"""RealProcessor — executes an ExecutionPlan with REAL components
+(DESIGN.md §7):
 
 tiny JAX models behind InferenceEngines (continuous batching, prefix
 sharing, model switching), the minidb ToolRuntime, signature coalescing,
@@ -82,6 +83,32 @@ class RealProcessor:
         return out
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _cross_template_stats(cons: ConsolidatedGraph,
+                              table) -> Dict[str, int]:
+        """Runtime cross-template coalescing: physical tool executions
+        whose logical requesters span >= 2 templates (the merges only a
+        multi-template mega-DAG makes possible)."""
+        merged_tasks = 0
+        merged_requests = 0
+        tasks = list(table.completed.values()) + list(table.pending.values())
+        for task in tasks:
+            if not task.requesters:
+                continue
+            # only requesters from a DIFFERENT template than the one
+            # whose request ran the physical execution count as
+            # cross-template merges — same-template coalescing on a
+            # spanning task is ordinary dedup, not a mega-DAG win
+            owner = cons.template_of[task.requesters[0][1]]
+            crossed = sum(1 for _, nid in task.requesters
+                          if cons.template_of[nid] != owner)
+            if crossed:
+                merged_tasks += 1
+                merged_requests += crossed
+        return {"cross_template_merged_tasks": merged_tasks,
+                "cross_template_merged_requests": merged_requests}
+
+    # ------------------------------------------------------------------
     def run(self, cons: ConsolidatedGraph, plan: ExecutionPlan,
             checkpoint_path: Optional[str] = None,
             resume_from: Optional[str] = None,
@@ -96,7 +123,10 @@ class RealProcessor:
         each run gets fresh hosts.  ``optimizer`` (an OnlineOptimizer)
         enables cost calibration + mid-run replanning; like ``hosts`` it
         may persist across runs so calibration compounds."""
-        state = BatchState(self.graph, cons.n_queries)
+        # multi-template mega-DAGs restrict each namespaced node to its
+        # own template's query slice; single-template maps to all queries
+        state = BatchState(self.graph, cons.n_queries,
+                           queries_of=cons.queries_map())
         if resume_from:
             restored = load_batch_state(state, resume_from)
         else:
@@ -210,6 +240,9 @@ class RealProcessor:
             "tool_dedup_ratio": dispatcher.table.dedup_ratio,
             "restored_results": restored,
         }
+        if cons.n_templates > 1:
+            report.coalesce_stats.update(
+                self._cross_template_stats(cons, dispatcher.table))
         report.extra["results"] = {           # type: ignore[assignment]
             f"{q}:{node}": val
             for (q, node), val in sorted(state.results.items())}

@@ -1,5 +1,5 @@
 """Online cost calibration + mid-batch replanning (paper §5's feedback
-loop from the Processor back into the Optimizer).
+loop from the Processor back into the Optimizer; DESIGN.md §7.2).
 
 ``OnlineOptimizer`` sits between the real executors and the planning
 stack:

@@ -119,7 +119,10 @@ class ClusterSimulator:
         m = inst.cons.macro(nid)
         if self.graph.nodes[nid].is_llm() or not self.coalescing:
             return m.n_logical, m.n_logical
-        sigs = m.unique_signatures
+        # physical_signatures already removes cross-TEMPLATE duplicates a
+        # multi-template mega-DAG coalesced; the global set removes
+        # cross-INSTANCE duplicates on top
+        sigs = inst.cons.physical_signatures(nid)
         if self.cross_instance_cache:
             fresh = [s for s in sigs if s not in global_sigs]
             return m.n_logical, max(len(fresh), 0)
@@ -286,6 +289,16 @@ class ClusterSimulator:
             i, v = cand
             inst = self.instances[i]
             n_log, n_phys = self._n_phys(inst, v, set())
+            if n_log == 0:
+                # empty template slice in a mega-DAG instance: nothing
+                # to infer — retire instantly WITHOUT touching the
+                # worker context (no phantom batch-1 wave or model
+                # switch poisoning the consolidated-multi arm)
+                busy[w] = True
+                executed.add(cand)
+                inflight[w] = cand
+                push(t + 1e-4, "llm_done", (w, i, v, 0, t))
+                return
             peers = tuple(ctxs[x] for x in range(self.W)
                           if x != w and not dead[x]) \
                 if self.kv_migration else ()

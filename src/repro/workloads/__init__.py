@@ -1,7 +1,9 @@
 """Paper workloads: minidb (PostgreSQL stand-in), synthetic datasets,
 tool operators, and the W1–W6 / W+ workflow library (Table 3)."""
-from repro.workloads.library import WORKFLOWS, build_workload
+from repro.workloads.library import (MIXED_PARTS, WORKFLOWS,
+                                     build_mixed_workload, build_workload)
 from repro.workloads.minidb import MiniDB
 from repro.workloads.tools import ToolRuntime
 
-__all__ = ["WORKFLOWS", "build_workload", "MiniDB", "ToolRuntime"]
+__all__ = ["MIXED_PARTS", "WORKFLOWS", "build_mixed_workload",
+           "build_workload", "MiniDB", "ToolRuntime"]

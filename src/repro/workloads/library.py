@@ -13,7 +13,7 @@ request coalescing exploits — the workload property §6.2 measures.
 from __future__ import annotations
 
 import random
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 from repro.workloads.datagen import GENRES, MARKETS, SEGMENTS
 
@@ -284,6 +284,39 @@ def wplus_linear() -> Tuple[dict, Callable]:
 
 
 # ---------------------------------------------------------------------------
+def wd_doc_draft() -> Tuple[dict, Callable]:
+    """WD: retrieval-grounded briefing draft (3 LLM / 2 CPU).
+
+    Built for MIXED batches: its context retrieval renders the same
+    ``pages``-by-topic SQL template W4's aux lookups issue (topics drawn
+    from the same 4-genre pool), so a multi-template batch of wd+w4
+    coalesces requests ACROSS templates — the cross-template dedup the
+    mega-DAG consolidation (``consolidate_multi``) exists to find.
+    """
+    nodes = [
+        {"id": "outline", "type": "llm", "model": M14, "max_new_tokens": 24,
+         "est_prompt_tokens": 128,
+         "prompt": (
+             "Outline a briefing on $topic using "
+             "{{sql: SELECT title, views FROM pages WHERE topic = '$topic' "
+             "ORDER BY views DESC LIMIT 5}} and "
+             "{{sql: SELECT count(*) FROM pages WHERE topic = '$topic'}}.")},
+        {"id": "draft", "type": "llm", "model": M14, "max_new_tokens": 48,
+         "est_prompt_tokens": 224,
+         "prompt": "Draft the briefing from ${outline}."},
+        {"id": "polish", "type": "llm", "model": M32, "max_new_tokens": 48,
+         "est_prompt_tokens": 256,
+         "prompt": "Polish ${draft} for audience $aud."},
+    ]
+    wf = {"name": "WD-DocDraft", "nodes": nodes}
+
+    def pool(rng: random.Random) -> Dict:
+        return {"topic": GENRES[rng.randrange(4)],     # == W4's aux pool
+                "aud": SEGMENTS[rng.randrange(3)]}
+    return wf, _bind_sampler(pool)
+
+
+# ---------------------------------------------------------------------------
 def wt_tool_pipeline() -> Tuple[dict, Callable]:
     """WT: llm → dependent tools → llm, all on one model.
 
@@ -323,12 +356,19 @@ WORKFLOWS: Dict[str, WorkloadBuilder] = {
     "w6": w6_tpch_fanout,
     "w+": wplus_linear,
     "wt": wt_tool_pipeline,
+    "wd": wd_doc_draft,
 }
 
 DATABASE_OF = {
     "w1": "imdb", "w2": "imdb", "w3": "finewiki", "w4": "finewiki",
     "w5": "tpch", "w6": "tpch", "w+": "finewiki", "wt": "finewiki",
+    "wd": "finewiki",
 }
+
+# the default MIXED online-serving blend: a doc-draft template, the
+# tool-dependent pipeline, and one analytics template, all over the same
+# database so one ToolRuntime serves the whole mega-DAG
+MIXED_PARTS = ("wd", "wt", "w4")
 
 
 def _paper_scale_estimate(op: str, args: str) -> float:
@@ -367,3 +407,32 @@ def build_workload(name: str, n_queries: int, seed: int = 0,
         graph = GraphSpec(graph.name, nodes, graph.edges)
     bindings = sampler(n_queries, seed)
     return graph, bindings, DATABASE_OF[name]
+
+
+def build_mixed_workload(n_queries: int, seed: int = 0,
+                         parts: Sequence[str] = MIXED_PARTS,
+                         paper_scale_estimates: bool = True):
+    """A mixed multi-template batch: ``n_queries`` split (round-robin
+    remainders first) across ``parts``.
+
+    Returns ``(batches, database)`` where ``batches`` is the
+    ``[(GraphSpec, bindings), ...]`` list ``consolidate_multi`` takes.
+    Every part must live on the same database (one ToolRuntime serves
+    the merged graph).
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError("mixed workload needs at least one part")
+    dbs = {DATABASE_OF[p] for p in parts}
+    if len(dbs) > 1:
+        raise ValueError(f"mixed parts span databases {sorted(dbs)}; "
+                         "pick templates sharing one backend")
+    base, rem = divmod(n_queries, len(parts))
+    batches = []
+    for i, part in enumerate(parts):
+        n_i = base + (1 if i < rem else 0)
+        g, bindings, _ = build_workload(
+            part, n_i, seed=seed + i,
+            paper_scale_estimates=paper_scale_estimates)
+        batches.append((g, bindings))
+    return batches, dbs.pop()

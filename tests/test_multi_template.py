@@ -1,0 +1,335 @@
+"""Multi-template mega-DAG consolidation (DESIGN.md §8.1).
+
+Covers the consolidate_multi edge cases: colliding node ids across
+templates, zero cross-template overlap (degrades to disjoint
+subgraphs), the same template submitted twice (matches single-template
+consolidation), empty template slices (the n_logical == 0 div-zero
+regression), epoch interleaving, the cost model's cross-template warm
+alias, and bitwise-identical temp-0 outputs for consolidated-multi vs
+per-template-serial through REAL engines.
+"""
+import pytest
+
+from repro.core import (CostModel, EpochDPSolver, HARDWARE, PAPER_MODELS,
+                        SolverConfig, consolidate, consolidate_multi,
+                        parse_workflow)
+from repro.core.state import WorkerContext
+from repro.runtime.coordinator import BatchState
+from repro.workloads import build_mixed_workload
+
+WF_A = {"name": "A", "nodes": [
+    {"id": "a", "type": "llm", "model": "qwen3-14b",
+     "prompt": "Alpha $p with {{sql: SELECT x FROM t WHERE k='$p'}}"},
+    {"id": "b", "type": "llm", "model": "qwen3-14b", "prompt": "Blend ${a}"},
+]}
+# SAME node ids as WF_A, different template; shares WF_A's SQL template
+WF_SHARED = {"name": "S", "nodes": [
+    {"id": "a", "type": "llm", "model": "qwen3-32b",
+     "prompt": "Sigma $p via {{sql: SELECT x FROM t WHERE k='$p'}}"},
+    {"id": "b", "type": "llm", "model": "qwen3-32b", "prompt": "Sum ${a}"},
+]}
+# SAME node ids, zero overlap with WF_A (different table/params)
+WF_B = {"name": "B", "nodes": [
+    {"id": "a", "type": "llm", "model": "qwen3-32b",
+     "prompt": "Beta $q via {{sql: SELECT y FROM u WHERE j='$q'}}"},
+    {"id": "b", "type": "llm", "model": "qwen3-32b", "prompt": "Mix ${a}"},
+]}
+
+
+def _cm(g, cons):
+    return CostModel(g, HARDWARE["h200"], PAPER_MODELS,
+                     batch_sizes={n: len(cons.macro(n).bindings)
+                                  for n in g.nodes},
+                     warm_aliases=cons.warm_aliases())
+
+
+def _plan(g, cons, workers):
+    return EpochDPSolver(g.llm_dag(), _cm(g, cons),
+                         SolverConfig(num_workers=workers)).solve()
+
+
+# ---------------------------------------------------------------- structure
+def test_namespacing_keeps_colliding_ids_distinct():
+    ga, gs = parse_workflow(WF_A), parse_workflow(WF_SHARED)
+    mc = consolidate_multi([(ga, [{"p": "x"}]), (gs, [{"p": "x"}])])
+    g = mc.template
+    # both templates define "a"/"b"/"a__sql0" — all survive, namespaced
+    for nid in ("t0/a", "t1/a", "t0/b", "t1/b", "t0/a__sql0", "t1/a__sql0"):
+        assert nid in g.nodes
+    assert mc.template_of["t0/a"] == 0 and mc.template_of["t1/a"] == 1
+    # upstream refs were rewritten into the namespace
+    assert "${t1/a}" in g.nodes["t1/b"].prompt
+    # each namespaced node serves exactly its template's query slice
+    qm = mc.queries_map()
+    assert qm["t0/a"] == [0] and qm["t1/a"] == [1]
+    # the shared rendered SQL coalesced across templates
+    xt = mc.cross_template_summary()
+    assert xt["cross_template_deduped"] == 1
+    assert mc.physical_signatures("t0/a__sql0") and \
+        not mc.physical_signatures("t1/a__sql0")
+
+
+def test_identical_template_twice_matches_single_consolidate():
+    g = parse_workflow(WF_A)
+    b1 = [{"p": "x"}, {"p": "y"}]
+    b2 = [{"p": "x"}]
+    mc = consolidate_multi([(g, b1), (g, b2)])
+    single = consolidate(g, b1 + b2)
+    assert mc.n_queries == single.n_queries
+    for base in g.nodes:
+        merged_unique = set(mc.macro(f"t0/{base}").unique_signatures) \
+            | set(mc.macro(f"t1/{base}").unique_signatures)
+        assert len(merged_unique) == single.macro(base).n_unique, base
+        # physical executions across BOTH namespaced copies of a tool
+        # node collapse to the single-template count
+        if not g.nodes[base].is_llm():
+            phys = len(mc.physical_signatures(f"t0/{base}")) \
+                + len(mc.physical_signatures(f"t1/{base}"))
+            assert phys == len(single.physical_signatures(base)), base
+    # identical static LLM specs became warm aliases
+    assert "t1/a" in mc.warm_aliases()["t0/a"]
+
+
+def test_zero_overlap_degrades_to_disjoint_sum():
+    """No shared signatures -> the mega-DAG is two disjoint islands and
+    its plan costs the sum of the per-template plans (up to the shared
+    worker's model-eviction term and per-epoch overhead granularity);
+    with more workers the merged plan is strictly cheaper."""
+    ga, gb = parse_workflow(WF_A), parse_workflow(WF_B)
+    ba = [{"p": "x"}, {"p": "y"}]
+    bb = [{"q": "u"}, {"q": "v"}]
+    mc = consolidate_multi([(ga, ba), (gb, bb)])
+    assert mc.cross_template_summary()["cross_template_deduped"] == 0
+    assert mc.cross_template_summary()["merged_signatures"] == 0
+    assert mc.warm_aliases() == {}
+    serial = {w: _plan(ga, consolidate(ga, ba), w).predicted_cost
+              + _plan(gb, consolidate(gb, bb), w).predicted_cost
+              for w in (1, 2)}
+    multi = {w: _plan(mc.template, mc, w).predicted_cost for w in (1, 2)}
+    assert abs(multi[1] - serial[1]) < 0.15        # eviction + overhead
+    assert multi[2] < serial[2]                    # parallelism wins
+
+
+def test_empty_template_slice_no_division_by_zero():
+    """Regression pin: a macro-node with n_logical == 0 (empty bindings
+    slice) must not break the dedup reporting, and its nodes are
+    macro-complete from birth."""
+    ga, gb = parse_workflow(WF_A), parse_workflow(WF_B)
+    mc = consolidate_multi([(ga, []), (gb, [{"q": "u"}])])
+    assert mc.macro("t0/a").n_logical == 0
+    assert mc.static_dedup_ratio("t0/a") == 1.0    # not 0.0, not ZeroDiv
+    summary = mc.coalescing_summary()
+    assert summary["t0/a"] == {"logical": 0, "unique": 0, "physical": 0,
+                               "dedup_ratio": 1.0}
+    # merged-away macro (identical template twice): unique > 0, owned 0
+    mc2 = consolidate_multi([(ga, [{"p": "x"}]), (ga, [{"p": "x"}])])
+    row = mc2.coalescing_summary()["t1/a__sql0"]
+    assert row["unique"] == 1 and row["physical"] == 0
+    assert 0.0 < mc2.static_dedup_ratio("t1/a__sql0") <= 1.0
+    # runtime: zero-query nodes are done at birth, others are not
+    state = BatchState(mc.template, mc.n_queries,
+                       queries_of=mc.queries_map())
+    assert "t0/a" in state.macro_done and "t1/a" not in state.macro_done
+
+
+# ---------------------------------------------------------------- planning
+def test_epoch_plan_interleaves_templates():
+    from benchmarks.common import halo_plan, interleaved_epochs, setup_multi
+    g, mc, _, _ = setup_multi(6, seed=0, parts=("wd", "wt"))
+    plan = halo_plan(g, mc, workers=2)
+    assert interleaved_epochs(plan, mc) >= 1
+    # every node is planned exactly once
+    assert sorted(n for n, _ in plan.node_order()) == sorted(
+        g.llm_dag().node_ids)
+
+
+def test_warm_alias_gives_cross_template_prefix_credit():
+    g = parse_workflow(WF_A)
+    mc = consolidate_multi([(g, [{"p": "x"}]), (g, [{"p": "x"}])])
+    cm = _cm(mc.template, mc)
+    spec = mc.template.nodes["t1/b"]
+    # context warm on the OTHER template's copy of the parent
+    warm = WorkerContext(model=spec.model, warm=("t0/a",))
+    cold = WorkerContext(model=spec.model, warm=())
+    assert cm.t_infer(spec, warm, ["t1/a"]) < cm.t_infer(spec, cold,
+                                                         ["t1/a"])
+
+
+def test_colliding_ids_with_different_specs_never_merge():
+    """Regression pin: signatures of upstream-dependent nodes carry the
+    spec identity, so a colliding local id ('t' in two unrelated
+    templates) with different op/args must NOT dedup across templates."""
+    t1 = parse_workflow({"name": "T1", "nodes": [
+        {"id": "a", "type": "llm", "model": "qwen3-14b", "prompt": "Go $p"},
+        {"id": "t", "type": "tool", "op": "sql",
+         "args": "SELECT x FROM movies WHERE k=${a}", "deps": ["a"]}]})
+    t2 = parse_workflow({"name": "T2", "nodes": [
+        {"id": "a", "type": "llm", "model": "qwen3-14b", "prompt": "Run $p"},
+        {"id": "t", "type": "tool", "op": "http",
+         "args": "GET http://api/other?ref=${a}", "deps": ["a"]}]})
+    mc = consolidate_multi([(t1, [{"p": "x"}]), (t2, [{"p": "x"}])])
+    assert mc.physical_signatures("t1/t")          # still owns its run
+    assert mc.cross_template_summary()["cross_template_deduped"] == 0
+    # IDENTICAL tool spec over DIFFERENT parents must not merge either:
+    # ${a} renders different upstream outputs at runtime
+    t3 = parse_workflow({"name": "T3", "nodes": [
+        {"id": "a", "type": "llm", "model": "qwen3-14b", "prompt": "Go $p"},
+        {"id": "t", "type": "tool", "op": "sql",
+         "args": "SELECT x FROM movies WHERE k=${a}", "deps": ["a"]}]})
+    t4 = parse_workflow({"name": "T4", "nodes": [
+        {"id": "a", "type": "llm", "model": "qwen3-14b", "prompt": "No $p"},
+        {"id": "t", "type": "tool", "op": "sql",
+         "args": "SELECT x FROM movies WHERE k=${a}", "deps": ["a"]}]})
+    mc2 = consolidate_multi([(t3, [{"p": "x"}]), (t4, [{"p": "x"}])])
+    assert mc2.physical_signatures("t1/t")
+    assert mc2.cross_template_summary()["cross_template_deduped"] == 0
+    # ...but two copies of the SAME template still dedup
+    mc3 = consolidate_multi([(t3, [{"p": "x"}]), (t3, [{"p": "x"}])])
+    assert not mc3.physical_signatures("t1/t")
+    assert mc3.cross_template_summary()["cross_template_deduped"] == 1
+
+
+def test_warm_alias_requires_identical_upstream_lineage():
+    """Regression pin: 'Summarize ${x}' over DIFFERENT x templates must
+    not become a warm alias — only a fully identical upstream subtree
+    shares radix pages."""
+    def wf(name, research):
+        return parse_workflow({"name": name, "nodes": [
+            {"id": "x", "type": "llm", "model": "qwen3-14b",
+             "prompt": research},
+            {"id": "b", "type": "llm", "model": "qwen3-14b",
+             "prompt": "Summarize ${x}"}]})
+    mc = consolidate_multi([(wf("U1", "Research cats $p"), [{"p": "x"}]),
+                            (wf("U2", "Research dogs $p"), [{"p": "x"}])])
+    assert "t0/b" not in mc.warm_aliases()
+    same = wf("U1", "Research cats $p")
+    mc2 = consolidate_multi([(same, [{"p": "x"}]), (same, [{"p": "y"}])])
+    assert "t1/b" in mc2.warm_aliases()["t0/b"]
+
+
+def test_mixed_workload_builder():
+    batches, db = build_mixed_workload(7, seed=0)
+    assert db == "finewiki"
+    assert [len(b) for _, b in batches] == [3, 2, 2]   # remainder first
+    with pytest.raises(ValueError):
+        build_mixed_workload(4, parts=("w1", "w3"))    # imdb vs finewiki
+    mc = consolidate_multi(batches)
+    assert mc.cross_template_summary()["cross_template_deduped"] >= 1
+
+
+def test_simulated_multi_beats_per_template_serial():
+    from benchmarks.common import run_multi_sim_ab
+    rep, serial_s, plan, mc = run_multi_sim_ab(48, workers=3)
+    assert rep.makespan < serial_s
+    # the simulated run completed every namespaced node
+    llm_nodes = {r.node for r in rep.records if r.kind == "llm"}
+    assert llm_nodes == set(mc.template.llm_nodes())
+
+
+def test_empty_slice_costs_nothing_in_simulator():
+    """Regression pin: an empty template slice's LLM macro-nodes must
+    not be simulated as batch-1 inferences with phantom model switches
+    (they would inflate the consolidated-multi arm)."""
+    from benchmarks.common import make_cm
+    from repro.runtime import SimulatedProcessor
+    ga, gb = parse_workflow(WF_A), parse_workflow(WF_B)
+    binds = [{"p": "x"}, {"p": "y"}]
+    mc = consolidate_multi([(ga, binds), (gb, [])])
+    plan = _plan(mc.template, mc, 2)
+    rep = SimulatedProcessor(mc.template, make_cm(mc.template, mc),
+                             2).run(mc, plan)
+    for r in rep.records:
+        if r.node.startswith("t1/") and r.kind == "llm":
+            assert r.batch == 0 and (r.end - r.start) < 0.01, r
+    # the run is priced like template A alone (within jitter/overhead)
+    ca = consolidate(ga, binds)
+    alone = SimulatedProcessor(ga, make_cm(ga, ca), 2).run(
+        ca, _plan(ga, ca, 2))
+    assert rep.makespan < alone.makespan * 1.2 + 0.1
+
+
+def test_migrator_probes_warm_alias_lineage():
+    """Regression pin: the KVMigrator must probe warm-alias node ids
+    when collecting lineage prompts — the cost model prices peer
+    aliases as donors, so the runtime has to look for them."""
+    from repro.runtime.migrate import KVMigrator
+    g = parse_workflow(WF_A)
+    mc = consolidate_multi([(g, [{"p": "x"}]), (g, [{"p": "x"}])])
+    cm = _cm(mc.template, mc)
+
+    class _Host:
+        def prompts_for(self, nid):
+            return {"t0/a": [(1, 2)], "t0/b": [(3, 4)]}.get(nid, [])
+
+    mig = KVMigrator(mc.template, [_Host()], cost_model=cm)
+    prompts = mig._lineage_prompts("t1/b", _Host())
+    assert (1, 2) in prompts and (3, 4) in prompts   # via aliases
+
+
+def test_lineage_digest_linear_on_fanin_heavy_template():
+    """Regression pin: consolidating a deep diamond/fan-in template must
+    stay O(nodes) — a materialized nested lineage key would be O(2^k)."""
+    nodes = [{"id": "x0", "type": "llm", "model": "qwen3-14b",
+              "prompt": "Seed $p"}]
+    for i in range(1, 29):                       # 28 diamond levels
+        prev = f"x{i - 1}"
+        nodes.append({"id": f"a{i}", "type": "llm", "model": "qwen3-14b",
+                      "prompt": f"L ${{{prev}}}"})
+        nodes.append({"id": f"b{i}", "type": "llm", "model": "qwen3-14b",
+                      "prompt": f"R ${{{prev}}}"})
+        nodes.append({"id": f"x{i}", "type": "llm", "model": "qwen3-14b",
+                      "prompt": f"Join ${{a{i}}} ${{b{i}}}"})
+    g = parse_workflow({"name": "diamond", "nodes": nodes})
+    mc = consolidate_multi([(g, [{"p": "x"}]), (g, [{"p": "y"}])])
+    # two copies of the same template alias node-for-node
+    assert "t1/x28" in mc.warm_aliases()["t0/x28"]
+
+
+# ----------------------------------------------------------- real engines
+def test_real_multi_vs_per_template_serial_bitwise():
+    """The acceptance pin: one mega-DAG run through REAL engines produces
+    bitwise-identical temp-0 outputs to running each template's slice
+    separately, while reporting the cross-template coalescing stats."""
+    from benchmarks.common import (halo_plan, make_real_multi_processor,
+                                   smoke_models_for)
+    from repro.runtime import RealProcessor
+    from repro.workloads.datagen import build_database
+    from repro.workloads.tools import ToolRuntime
+    proc, g, mc, batches, plan, db = make_real_multi_processor(
+        4, workers=2, decode_cap=3, parts=("wd", "wt"))
+    rep = proc.run(mc, plan)
+    assert set(rep.coalesce_stats) >= {"cross_template_merged_tasks",
+                                       "cross_template_merged_requests"}
+    multi_results = rep.extra["results"]
+    # every (query, node) of every template slice produced a result
+    assert len(multi_results) == sum(
+        len(tb) * len(tg.nodes) for tg, tb in batches)
+
+    offsets, off = [], 0
+    for _, tb in batches:
+        offsets.append(off)
+        off += len(tb)
+    for k, (tg, tb) in enumerate(batches):
+        cons = consolidate(tg, tb)
+        r = RealProcessor(
+            tg, smoke_models_for(tg),
+            ToolRuntime(build_database(db), latency_scale=0.0),
+            num_workers=2, decode_cap=3).run(
+                cons, halo_plan(tg, cons, workers=2))
+        for key, val in r.extra["results"].items():
+            q, node = key.split(":", 1)
+            mkey = f"{int(q) + offsets[k]}:t{k}/{node}"
+            assert multi_results[mkey] == val, mkey
+
+
+# ------------------------------------------------------------------- docs
+def test_check_docs_passes():
+    """The CI docs job's checker is clean on the tree as committed."""
+    import importlib.util
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parent.parent / "tools" \
+        / "check_docs.py"
+    spec = importlib.util.spec_from_file_location("check_docs", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.main() == 0

@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""Docs consistency checker (run in CI's docs job and in the test suite).
+
+Three checks, all repo-local and dependency-free:
+
+1. **Intra-repo markdown links** — every relative ``[text](target)`` in
+   a tracked ``*.md`` file must point at an existing file/directory; a
+   ``#fragment`` on a markdown target must match a heading slug in it.
+2. **DESIGN.md § citations** — every ``DESIGN.md §N[.M]`` mention in the
+   Python sources must name a numbered section heading that actually
+   exists in ``docs/DESIGN.md`` (module docstrings cite sections; stale
+   numbers rot fast without this).
+3. **Core docstring audit** — mirrors the ruff pydocstyle subset enabled
+   for ``src/repro/core/`` (D100/D101/D102/D103: module, public class,
+   public method, public function docstrings) so the check also runs
+   where ruff isn't installed.
+
+Exit code 0 = clean; 1 = problems (each printed with file:line).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", "__pycache__", ".claude", "node_modules",
+             "experiments", ".venv", "venv", ".tox", ".eggs", "build",
+             "dist", "site-packages", ".pytest_cache", ".ruff_cache"}
+# quoted external-repo material — their links point outside this repo
+SKIP_FILES = {"SNIPPETS.md", "PAPERS.md"}
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CITATION = re.compile(r"DESIGN\.md\s*§\s*(\d+(?:\.\d+)*)")
+_HEADING_NUM = re.compile(r"^#{1,6}\s+(\d+(?:\.\d+)*)[.\s]", re.M)
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*$", re.M)
+
+
+def _tracked(pattern: str):
+    for p in sorted(ROOT.rglob(pattern)):
+        if p.name in SKIP_FILES:
+            continue
+        parts = p.relative_to(ROOT).parts
+        if any(d in SKIP_DIRS or d.endswith(".egg-info")
+               for d in parts[:-1]):
+            continue
+        yield p
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style anchor slug (close enough for intra-repo use)."""
+    s = re.sub(r"[`*_]", "", heading.strip().lower())
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    return s.replace(" ", "-")
+
+
+def check_markdown_links() -> list:
+    problems = []
+    for md in _tracked("*.md"):
+        text = md.read_text(encoding="utf-8")
+        for m in _MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            line = text[:m.start()].count("\n") + 1
+            where = f"{md.relative_to(ROOT)}:{line}"
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                if not dest.exists():
+                    problems.append(f"{where}: broken link -> {target}")
+                    continue
+            else:
+                dest = md
+            if frag and dest.suffix == ".md" and dest.is_file():
+                slugs = {_slugify(h) for _, h in
+                         _HEADING.findall(dest.read_text(encoding="utf-8"))}
+                if frag.lower() not in slugs:
+                    problems.append(
+                        f"{where}: missing anchor #{frag} in "
+                        f"{dest.relative_to(ROOT)}")
+    return problems
+
+
+def design_sections() -> set:
+    """Section numbers declared by docs/DESIGN.md headings."""
+    design = ROOT / "docs" / "DESIGN.md"
+    if not design.is_file():
+        return set()
+    return set(_HEADING_NUM.findall(design.read_text(encoding="utf-8")))
+
+
+def check_design_citations() -> list:
+    problems = []
+    sections = design_sections()
+    if not sections:
+        return ["docs/DESIGN.md missing or has no numbered headings"]
+    for py in _tracked("*.py"):
+        text = py.read_text(encoding="utf-8")
+        for m in _CITATION.finditer(text):
+            num = m.group(1)
+            if num not in sections:
+                line = text[:m.start()].count("\n") + 1
+                problems.append(
+                    f"{py.relative_to(ROOT)}:{line}: cites DESIGN.md "
+                    f"§{num} but DESIGN.md has no section {num} "
+                    f"(sections: {', '.join(sorted(sections))})")
+    return problems
+
+
+def check_core_docstrings() -> list:
+    problems = []
+    core = ROOT / "src" / "repro" / "core"
+    for py in sorted(core.glob("*.py")):
+        tree = ast.parse(py.read_text(encoding="utf-8"))
+        rel = py.relative_to(ROOT)
+
+        def _need(node, kind, name):
+            if not ast.get_docstring(node):
+                problems.append(
+                    f"{rel}:{getattr(node, 'lineno', 1)}: "
+                    f"missing docstring on {kind} {name}")
+
+        if not ast.get_docstring(tree):
+            problems.append(f"{rel}:1: missing module docstring")
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                if not node.name.startswith("_"):
+                    _need(node, "class", node.name)
+                for item in node.body:
+                    if (isinstance(item, ast.FunctionDef)
+                            and not item.name.startswith("_")):
+                        _need(item, "method", f"{node.name}.{item.name}")
+        for node in tree.body:
+            if (isinstance(node, ast.FunctionDef)
+                    and not node.name.startswith("_")):
+                _need(node, "function", node.name)
+    return problems
+
+
+def main() -> int:
+    problems = (check_markdown_links() + check_design_citations()
+                + check_core_docstrings())
+    for p in problems:
+        print(p)
+    n_md = sum(1 for _ in _tracked("*.md"))
+    n_py = sum(1 for _ in _tracked("*.py"))
+    print(f"check_docs: scanned {n_md} markdown + {n_py} python files; "
+          f"{len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
