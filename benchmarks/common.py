@@ -148,9 +148,9 @@ def make_real_processor(workload="w+", n=6, workers=2, decode_cap=4,
                         seed=0, latency_scale=0.0, **proc_kw):
     """(processor, graph, cons, bindings, plan) for real-engine runs.
 
-    ``proc_kw`` forwards to RealProcessor (``pipelining``,
+    ``proc_kw`` holds further ProcessorConfig fields (``pipelining``,
     ``engine_kwargs``, ...)."""
-    from repro.runtime import RealProcessor
+    from repro.runtime import ProcessorConfig, RealProcessor
     from repro.workloads.datagen import build_database
     from repro.workloads.tools import ToolRuntime
     g, bindings, dbname = build_workload(workload, n, seed=seed)
@@ -159,7 +159,8 @@ def make_real_processor(workload="w+", n=6, workers=2, decode_cap=4,
     proc = RealProcessor(
         g, smoke_models_for(g),
         ToolRuntime(build_database(dbname), latency_scale=latency_scale),
-        num_workers=workers, decode_cap=decode_cap, seed=seed, **proc_kw)
+        config=ProcessorConfig(num_workers=workers, decode_cap=decode_cap,
+                               seed=seed, **proc_kw))
     return proc, g, cons, bindings, plan
 
 
@@ -269,7 +270,7 @@ def make_real_multi_processor(n=6, workers=2, decode_cap=3, seed=0,
                               parts=MIXED_PARTS, **proc_kw):
     """(processor, merged graph, multi-cons, batches, plan, db) for a
     real-engine mixed-batch run."""
-    from repro.runtime import RealProcessor
+    from repro.runtime import ProcessorConfig, RealProcessor
     from repro.workloads.datagen import build_database
     from repro.workloads.tools import ToolRuntime
     g, mc, batches, db = setup_multi(n, seed=seed, parts=parts)
@@ -277,7 +278,8 @@ def make_real_multi_processor(n=6, workers=2, decode_cap=3, seed=0,
     proc = RealProcessor(
         g, smoke_models_for(g),
         ToolRuntime(build_database(db), latency_scale=0.0),
-        num_workers=workers, decode_cap=decode_cap, seed=seed, **proc_kw)
+        config=ProcessorConfig(num_workers=workers, decode_cap=decode_cap,
+                               seed=seed, **proc_kw))
     return proc, g, mc, batches, plan, db
 
 
@@ -294,7 +296,7 @@ def run_real_multi_ab(n: int = 6, workers: int = 2, decode_cap: int = 3,
     setup cost can't bias the comparison; outputs are
     bitwise-comparable to the multi arm's at temperature 0.
     """
-    from repro.runtime import RealProcessor
+    from repro.runtime import ProcessorConfig, RealProcessor
     from repro.runtime.executors import EngineHost
     from repro.workloads.datagen import build_database
     from repro.workloads.tools import ToolRuntime
@@ -316,7 +318,8 @@ def run_real_multi_ab(n: int = 6, workers: int = 2, decode_cap: int = 3,
         pr = RealProcessor(
             tg, smoke_models_for(tg),
             ToolRuntime(build_database(db), latency_scale=0.0),
-            num_workers=workers, decode_cap=decode_cap, seed=seed)
+            config=ProcessorConfig(num_workers=workers,
+                                   decode_cap=decode_cap, seed=seed))
         shosts = [EngineHost(pr.model_configs, seed=pr.seed)
                   for _ in range(workers)]
         try:

@@ -4,19 +4,67 @@
 
 Runs the simulated baselines at small N plus the REAL continuous-
 batching engines (pipelined-vs-barrier WT rows, calibrated online
-stream) and writes one ``BENCH_<section>.json`` per section into
-``experiments/results/`` — CI uploads them as artifacts so the perf
-trajectory is recorded run over run.
+stream, streaming-session-vs-micro-batched A/B) and writes one
+``BENCH_<section>.json`` per section into ``experiments/results/`` —
+CI uploads them as artifacts so the perf trajectory is recorded run
+over run.
+
+The run FAILS (nonzero exit) when a guarded A/B inverts, instead of
+silently uploading an artifact that contradicts the design claims:
+
+* ``halo-real-pipelined`` must not lose to ``halo-real-barrier``
+  (tool pipelining exists to hide CPU latency under decode);
+* ``session-stream`` must not lose to ``micro-batched`` on makespan
+  OR interactive p95 TTFT, and the arms' temp-0 outputs must match
+  bitwise (DESIGN.md §10).
+
+``_AB_SLACK`` absorbs CI timing noise; a genuine inversion (like the
+2026-08 artifact that showed pipelined at 4.51s vs barrier at 1.69s,
+which never reproduced locally) is far outside it.
 """
 from __future__ import annotations
 
 import json
 import os
 import time
+from typing import Dict, List
 
 from benchmarks import e2e_latency, online_serving
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "results")
+
+_AB_SLACK = 1.15                 # winner may be up to 15% "slower" (noise)
+
+
+def _row(rows: List[Dict], system: str) -> Dict:
+    return next(r for r in rows if r.get("system") == system)
+
+
+def check_inversions(sections: Dict[str, List[Dict]]) -> List[str]:
+    """Guarded A/B pairs that must not invert.  Returns violations."""
+    bad = []
+
+    def must_beat(rows, winner, loser, metric):
+        try:
+            w, l = _row(rows, winner), _row(rows, loser)
+        except StopIteration:
+            return                           # section ran without the pair
+        if w[metric] > l[metric] * _AB_SLACK:
+            bad.append(f"A/B INVERSION: {winner} {metric}={w[metric]} vs "
+                       f"{loser} {metric}={l[metric]}")
+
+    rows = sections.get("BENCH_e2e_latency", [])
+    must_beat(rows, "halo-real-pipelined", "halo-real-barrier",
+              "makespan_s")
+    rows = sections.get("BENCH_online_serving", [])
+    must_beat(rows, "session-stream", "micro-batched", "makespan_s")
+    must_beat(rows, "session-stream", "micro-batched",
+              "interactive_p95_ttft_s")
+    for r in rows:
+        if r.get("outputs_match") is False:
+            bad.append(f"OUTPUT MISMATCH: {r['system']} temp-0 outputs "
+                       "differ between streaming and micro-batched arms")
+    return bad
 
 
 def main() -> int:
@@ -25,21 +73,28 @@ def main() -> int:
             64, include_real=True),
         "BENCH_online_serving": lambda: (
             online_serving.run(32)
-            + online_serving.real_stream_rows()),
+            + online_serving.real_stream_rows()
+            + online_serving.session_stream_rows()),
     }
     os.makedirs(OUT, exist_ok=True)
+    results: Dict[str, List[Dict]] = {}
     for name, fn in sections.items():
         t0 = time.perf_counter()
         rows = fn()
         dt = time.perf_counter() - t0
+        results[name] = rows
         path = os.path.join(OUT, f"{name}.json")
         with open(path, "w") as f:
             json.dump(rows, f, indent=1, default=str)
         print(f"{name}: {len(rows)} rows in {dt:.1f}s -> {path}")
         for r in rows:
-            if str(r.get("system", "")).startswith("halo-real"):
+            if str(r.get("system", "")).startswith(
+                    ("halo-real", "session-stream", "micro-batched")):
                 print("  ", r)
-    return 0
+    violations = check_inversions(results)
+    for v in violations:
+        print(v)
+    return 1 if violations else 0
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ import time
 from repro.configs import get_smoke
 from repro.core import (CostModel, EpochDPSolver, HARDWARE, PAPER_MODELS,
                         SolverConfig, consolidate)
-from repro.runtime import RealProcessor
+from repro.runtime import ProcessorConfig, RealProcessor
 from repro.workloads import build_workload
 from repro.workloads.datagen import build_database
 from repro.workloads.tools import ToolRuntime
@@ -43,15 +43,16 @@ def main():
     print(f"plan: {len(plan.epochs)} epochs "
           f"(solver {plan.solver_seconds*1e3:.0f} ms)")
 
-    proc = RealProcessor(graph, models, tools, num_workers=args.workers,
-                         decode_cap=6)
+    proc = RealProcessor(graph, models, tools,
+                         config=ProcessorConfig(num_workers=args.workers,
+                                                decode_cap=6))
     t0 = time.time()
     rep = proc.run(cons, plan, checkpoint_path="/tmp/halo_example_ckpt.json")
     print(f"\ncompleted {cons.n_queries} queries in {time.time()-t0:.1f}s")
     print("coalescing:", rep.coalesce_stats)
     print("model switches:", rep.extra["model_switches"],
           "| prefill tokens saved:", rep.extra["prefill_tokens_saved"])
-    q0 = {k: v[:60] for k, v in rep.extra["results"].items()
+    q0 = {k: v[:60] for k, v in rep.results().items()
           if k.startswith("0:") and "report" in k or "judge" in k}
     for k, v in sorted(q0.items())[:3]:
         print(f"  {k}: {v}...")
@@ -59,7 +60,7 @@ def main():
     # resume from checkpoint: instant
     t0 = time.time()
     rep2 = proc.run(cons, plan, resume_from="/tmp/halo_example_ckpt.json")
-    assert rep2.extra["results"] == rep.extra["results"]
+    assert rep2.results() == rep.results()
     print(f"resume from checkpoint: {time.time()-t0:.2f}s "
           f"({rep2.coalesce_stats['restored_results']} results restored)")
 

@@ -10,7 +10,7 @@ page-sharing counters.
 """
 from repro.core import (EpochDPSolver, HARDWARE, PAPER_MODELS,
                         SolverConfig, CostModel, consolidate_multi)
-from repro.runtime import RealProcessor
+from repro.runtime import ProcessorConfig, RealProcessor
 from repro.workloads import build_mixed_workload
 from repro.workloads.datagen import build_database
 from repro.workloads.tools import ToolRuntime
@@ -46,7 +46,7 @@ from benchmarks.common import smoke_models_for  # noqa: E402 (optional dep)
 
 proc = RealProcessor(graph, smoke_models_for(graph),
                      ToolRuntime(build_database(db), latency_scale=0.0),
-                     num_workers=2, decode_cap=3)
+                     config=ProcessorConfig(num_workers=2, decode_cap=3))
 report = proc.run(mc, plan)
 print("makespan:", round(report.makespan, 2), "s")
 print("coalesce:", report.coalesce_stats)

@@ -209,6 +209,15 @@ class ConsolidatedGraph:
                       "dedup_ratio": round(self.static_dedup_ratio(nid), 6)}
                 for nid, m in self.macros.items()}
 
+    def batch_sizes(self, logical_tools: bool = False) -> Dict[str, int]:
+        """Per-node request counts for the cost model: LLM nodes price
+        their logical batch (every query decodes); tool nodes price only
+        the physical executions left after coalescing (or the logical
+        count when ``logical_tools`` — the no-coalescing A/B control)."""
+        return {nid: (m.n_logical if (m.spec.is_llm() or logical_tools)
+                      else len(self.physical_signatures(nid)))
+                for nid, m in self.macros.items()}
+
 
 class MultiConsolidatedGraph(ConsolidatedGraph):
     """Several (template, bindings) pairs merged into one mega-DAG.
@@ -232,15 +241,39 @@ class MultiConsolidatedGraph(ConsolidatedGraph):
         batches = list(batches)
         if not batches:
             raise ValueError("consolidate_multi needs at least one batch")
-        nodes: List[NodeSpec] = []
-        edges: List[Tuple[str, str]] = []
-        self.bindings = []
+        # persistent merge state: graft() appends to these and re-derives
+        # the views, so a session can keep consolidating into one graph
+        self._nodes: List[NodeSpec] = []
+        self._edges: List[Tuple[str, str]] = []
+        self.bindings = []            # identity is shared with the runtime
         self.template_names = []
         self.template_of = {}
         self.macros = {}
-        alias_key: Dict[str, str] = {}    # nid -> upstream lineage digest
-        offset = 0
-        for k, (tmpl, binds) in enumerate(batches):
+        self._alias_key: Dict[str, str] = {}  # nid -> lineage digest
+        self._owner: Dict[str, str] = {}
+        self._absorb(batches)
+
+    def _absorb(self, batches: Sequence[Tuple[GraphSpec,
+                                              Sequence[Dict[str, str]]]]
+                ) -> List[str]:
+        """Merge ``batches`` into the persistent state (initial build and
+        every later graft) and return the newly added node ids.
+
+        Template indices and query offsets continue where the last absorb
+        stopped; ``self.bindings`` is EXTENDED in place (the running
+        dispatcher/workers hold a reference to it); signature ownership
+        uses ``setdefault`` over the full merged topo order, so an
+        already-owned signature keeps its owner — a grafted node whose
+        request an in-flight (or finished) node already issued aliases
+        that execution instead of re-running it (DESIGN.md §10.2).
+        """
+        nodes: List[NodeSpec] = list(self._nodes)
+        edges: List[Tuple[str, str]] = list(self._edges)
+        new_ids: List[str] = []
+        alias_key = self._alias_key
+        offset = len(self.bindings)
+        for k, (tmpl, binds) in enumerate(batches,
+                                          start=len(self.template_names)):
             ns = f"t{k}/"
             binds = [dict(b) for b in binds]
             keys: Set[str] = set()
@@ -270,6 +303,7 @@ class MultiConsolidatedGraph(ConsolidatedGraph):
             for nid, spec in tmpl.nodes.items():
                 nspec = _namespace_spec(spec, id_map)
                 nodes.append(nspec)
+                new_ids.append(nspec.id)
                 self.template_of[nspec.id] = k
                 # the lineage digest keys upstream-dependent signatures:
                 # requests dedup across templates ONLY when the whole
@@ -293,12 +327,14 @@ class MultiConsolidatedGraph(ConsolidatedGraph):
             self.template_names.append(tmpl.name)
             self.bindings.extend(binds)
             offset += len(binds)
+        self._nodes, self._edges = nodes, edges
         self.template = GraphSpec(
             "multi(" + "+".join(self.template_names) + ")", nodes, edges)
 
         # ---- cross-template signature ownership (tool dedup) ------------
-        # first issuer in merged topo order owns the physical execution
-        self._owner: Dict[str, str] = {}
+        # first issuer in merged topo order owns the physical execution;
+        # setdefault never re-keys an existing signature, so grafts can't
+        # move ownership off a node that may already have executed
         for nid in self.template.topo_order():
             m = self.macros[nid]
             if m.spec.is_llm():
@@ -316,6 +352,29 @@ class MultiConsolidatedGraph(ConsolidatedGraph):
                 continue
             for nid in members:
                 self._aliases[nid] = tuple(x for x in members if x != nid)
+        return new_ids
+
+    # ------------------------------------------------------------------
+    def graft(self, batches: Sequence[Tuple[GraphSpec,
+                                            Sequence[Dict[str, str]]]]
+              ) -> Tuple[List[str], int]:
+        """Incrementally consolidate ``batches`` into this mega-DAG
+        (DESIGN.md §10.2).
+
+        Returns ``(new_node_ids, query_offset)``: the namespaced ids the
+        graft added and the global index of its first query.  The grafted
+        nodes join the EXISTING signature table (a request an in-flight
+        node already issued is aliased, not re-executed) and the existing
+        warm-alias groups (the engine's radix tree shares their pages),
+        which is what lets a query arriving mid-run ride on the running
+        batch's work instead of waiting for the next one.
+        """
+        batches = list(batches)
+        if not batches:
+            raise ValueError("graft needs at least one batch")
+        query_offset = len(self.bindings)
+        new_ids = self._absorb(batches)
+        return new_ids, query_offset
 
     # ------------------------------------------------------------------
     def queries_map(self) -> Optional[Dict[str, List[int]]]:

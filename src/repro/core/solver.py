@@ -35,6 +35,12 @@ class SolverConfig:
     chain_depth: int = 2           # frontier closure levels per epoch
     max_epoch_nodes: int = 6       # |B_e| cap
     max_states: int = 200_000      # hard safety valve on memo size
+    # weight on the priority-hold term: each epoch's cost is scaled by
+    # 1 + priority_hold * (pending priority mass), so time spent while
+    # interactive-class nodes wait costs more than the same time after
+    # they finish — priority-weighted flow time (DESIGN.md §10.3).
+    # With no priorities the objective reduces to plain makespan.
+    priority_hold: float = 0.5
     # beam over epoch actions per state, ranked by immediate cost with a
     # work-density tie-break; None = exact enumeration.  This is the
     # "pruning to topological frontiers" knob that keeps planning
@@ -46,12 +52,18 @@ class EpochDPSolver:
     """Algorithm 1: memoized epoch DP over (done, contexts) states."""
 
     def __init__(self, dag: LLMDag, cost_model: CostModel,
-                 config: Optional[SolverConfig] = None):
+                 config: Optional[SolverConfig] = None,
+                 priorities: Optional[Dict[str, float]] = None):
         self.dag = dag
         self.cm = cost_model
         # fresh instance per solver: a module-level default would be one
         # shared mutable object across every EpochDPSolver in the process
         self.cfg = config if config is not None else SolverConfig()
+        # per-node SLO priority mass (DESIGN.md §10.3): only nodes still
+        # pending hold the objective, so the DP front-loads them.  Empty
+        # or all-zero priorities leave every plan bitwise unchanged.
+        self.prio = {n: w for n, w in (priorities or {}).items()
+                     if w and n in dag.node_ids}
         self.memo: Dict[Tuple, Tuple[float, Optional[Tuple]]] = {}
         self.states_explored = 0
 
@@ -129,11 +141,21 @@ class EpochDPSolver:
         if self.cfg.beam is not None:
             actions = actions[:self.cfg.beam]
 
+        # priority hold: epoch time is weighted by the priority mass
+        # still pending BEFORE the epoch runs, so plans that clear
+        # interactive-class nodes early score better (weighted flow
+        # time).  hold == 1.0 exactly when no priorities are set, which
+        # keeps batch-only plans bitwise identical to the unweighted DP.
+        hold = 1.0
+        if self.prio:
+            hold += self.cfg.priority_hold * sum(
+                w for n, w in self.prio.items() if n not in state.done)
+
         best = (float("inf"), None)
         for _, c_now, comps, workers, ctxs, batch in actions:
             nxt = SystemState(state.done | batch, ctxs)
             c_fut, _ = self._solve(nxt)
-            total = c_now + c_fut
+            total = c_now * hold + c_fut
             if total < best[0]:
                 best = (total, (tuple(map(tuple, comps)),
                                 tuple(workers), c_now, nxt))

@@ -4,11 +4,16 @@
 model id and a compact warm-KV signature — the ordered tuple of the most
 recent LLM node ids whose lineage is warm on that worker.  Both are
 hashable so (D, H) keys the memo table.
+
+``SLOClass`` is the per-request service lane (DESIGN.md §10.3): session
+``submit()`` tags each query interactive or batch, the solver holds a
+priority-weighted flow-time objective, and engine admission prefers the
+higher class under KV-pool pressure.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import FrozenSet, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Optional, Sequence, Tuple
 
 # Compact representation: keep only the most recent K lineage ids.  K=2
 # keeps the DP state space tractable (prefix discounts look one hop back:
@@ -45,6 +50,31 @@ class WorkerContext:
             if u in self.warm:
                 return u
         return None
+
+
+@dataclass(frozen=True)
+class SLOClass:
+    """A service lane for session submissions (DESIGN.md §10.3).
+
+    ``priority`` orders lanes: a pending higher-priority request wins
+    engine admission and weights the solver toward finishing its nodes
+    early.  ``ttft_target_s`` / ``tpot_target_s`` are the lane's latency
+    targets — reported against, never enforced by dropping work.
+    """
+
+    name: str
+    priority: int = 0
+    ttft_target_s: Optional[float] = None
+    tpot_target_s: Optional[float] = None
+
+
+#: latency-sensitive lane: preempts batch admission, never vice versa
+INTERACTIVE = SLOClass("interactive", priority=1,
+                       ttft_target_s=1.0, tpot_target_s=0.25)
+#: throughput lane: the default for bulk analytics submissions
+BATCH = SLOClass("batch", priority=0)
+
+SLO_CLASSES: Dict[str, SLOClass] = {c.name: c for c in (INTERACTIVE, BATCH)}
 
 
 @dataclass(frozen=True)

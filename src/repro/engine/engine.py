@@ -97,6 +97,7 @@ class EngineStats:
     load_seconds: float = 0.0
     prefix_hits: int = 0
     admission_waves: int = 0             # scheduler passes that admitted >=1
+    priority_jumps: int = 0              # admissions that bypassed FIFO order
     peak_batch: int = 0                  # max concurrent decode slots
     pages_shared: int = 0                # mirrored from PagedKVCache
     tokens_reused: int = 0               # mirrored from PagedKVCache
@@ -191,6 +192,7 @@ class _Request:
     max_new: int
     temperature: float
     handle: RequestHandle
+    priority: int = 0                    # SLO lane (DESIGN.md §10.3)
 
 
 @dataclass
@@ -216,6 +218,8 @@ class InferenceEngine:
 
     MIN_SHARED_PREFIX = 4        # tokens; below this, page aliasing not worth it
     _T_QUANTUM = 32              # decode-view time bucket (bounds recompiles)
+    _PF_QUANTUM = 16             # chunk-prefill suffix bucket (share points
+                                 # are timing-dependent under streaming)
 
     def __init__(self, cfg: ModelConfig, seed: int = 0, max_batch: int = 8,
                  enable_prefix_sharing: bool = True, page_size: int = 8,
@@ -256,8 +260,8 @@ class InferenceEngine:
             lambda p, toks: self.model.prefill(p, toks))
         if self._paged_layout:
             self._chunk_prefill_jit = jax.jit(
-                lambda p, toks, cache: self.model.prefill_with_cache(
-                    p, toks, cache))
+                lambda p, toks, cache, n: self.model.prefill_with_cache(
+                    p, toks, cache, valid_len=n))
         if self._use_paged:
             # the pool arrays flow through the step; donating them lets
             # XLA scatter in place on device backends (CPU ignores it)
@@ -315,11 +319,18 @@ class InferenceEngine:
     # ----------------------------------------------------------- submission
     def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16,
                temperature: float = 0.0,
-               extra: Optional[Dict[str, Any]] = None) -> RequestHandle:
+               extra: Optional[Dict[str, Any]] = None,
+               priority: int = 0) -> RequestHandle:
         """Enqueue one request into the persistent engine loop.
 
         Returns immediately; the request joins the running decode batch at
         the next admission pass (mid-decode if a batch is in flight).
+        ``priority`` is the SLO lane (DESIGN.md §10.3): each admission
+        pass picks the highest-priority waiting request (FIFO within a
+        lane), so an interactive request preempts batch-lane admission —
+        including under KV-pool pressure, where a deferred interactive
+        request holds the pass rather than letting batch work slip past
+        it.  All-equal priorities reduce exactly to FIFO.
         """
         if not self._paged_layout \
                 and len(prompt) + max_new_tokens > self.max_seq_len:
@@ -333,7 +344,7 @@ class InferenceEngine:
             self._rid += 1
             req = _Request(self._rid, tuple(int(t) for t in prompt),
                            dict(extra or {}), max_new_tokens, temperature,
-                           RequestHandle(self._rid))
+                           RequestHandle(self._rid), priority=int(priority))
             self._pending.append(req)
             self._last_submit = time.monotonic()
             self._ensure_loop()
@@ -616,18 +627,26 @@ class InferenceEngine:
             with self._cv:
                 if not self._pending:
                     break
-                # peek; the request stays visible to drain() until it has
-                # a slot (only the loop thread ever pops)
-                req = self._pending[0]
+                # peek the highest-priority waiting request (max() keeps
+                # the FIRST maximum, so equal priorities — the common
+                # all-zero case — are exact FIFO); the request stays
+                # visible to drain() until it has a slot (only the loop
+                # thread ever removes it)
+                req = max(self._pending, key=lambda r: r.priority)
+                jumped = req is not self._pending[0]
             if self._coalesce(req):
-                self._pop_pending()
+                self._remove_pending(req)
                 continue
             try:
                 slot = self._admit_one(req)
             except _Defer:
-                break                                   # left at queue front
+                # left in the queue: under KV-pool pressure the deferred
+                # request blocks the whole pass, so lower-priority work
+                # can never be admitted around a waiting interactive
+                # request (it preempts batch, never vice versa)
+                break
             except BaseException as e:                  # per-request failure
-                self._pop_pending()
+                self._remove_pending(req)
                 req.handle._fail(e)
                 continue
             # attach still-queued exact duplicates NOW: a leader that
@@ -640,7 +659,9 @@ class InferenceEngine:
                 admitted += 1
             else:
                 self._retire(slot)
-            self._pop_pending()
+            self._remove_pending(req)
+            if jumped:
+                self.stats.priority_jumps += 1
         if admitted:
             self.stats.admission_waves += 1
             self.stats.peak_batch = max(self.stats.peak_batch,
@@ -701,9 +722,12 @@ class InferenceEngine:
                                    kv_heads, head_dim)
         return self.kv
 
-    def _pop_pending(self) -> None:
+    def _remove_pending(self, req: _Request) -> None:
         with self._cv:
-            self._pending.popleft()
+            try:
+                self._pending.remove(req)
+            except ValueError:       # already claimed as a duplicate
+                pass
 
     def _reserved_pages(self) -> int:
         """Pages the in-flight batch may still allocate: each active slot
@@ -786,6 +810,15 @@ class InferenceEngine:
                 self.stats.prefix_hits += 1
                 self.stats.prefill_tokens += S - shared
                 self.stats.prefill_tokens_saved += shared
+            elif not req.extra and hasattr(self.model,
+                                           "prefill_with_cache"):
+                # cold prompts run the SAME bucketed chunk-prefill step
+                # as shared ones: whether a prompt finds a warm donor is
+                # timing-dependent under streaming arrivals, so giving
+                # the cold path its own per-length compiled shape would
+                # re-trace run to run
+                logits = self._prefill_cold(slot)
+                self.stats.prefill_tokens += S
             else:
                 tokens = jnp.asarray([req.prompt], jnp.int32)
                 logits, cache = self._prefill(tokens, req.extra)
@@ -814,6 +847,26 @@ class InferenceEngine:
             self._emit_token(slot, logits[0:1])
         return slot
 
+    def _prefill_cold(self, slot: _Slot):
+        """Prefill a donor-less prompt via the bucketed chunk step over
+        an empty cache view — one compiled shape per (suffix bucket,
+        time bucket) instead of one per prompt length."""
+        kv = self.kv
+        req = slot.req
+        S = len(req.prompt)
+        pad = -(-S // self._PF_QUANTUM) * self._PF_QUANTUM
+        T1 = self._round_t(pad + req.max_new)
+        layers, heads, dh = self._paged_layout
+        k_rows = jnp.zeros((1, layers, T1, heads, dh), jnp.float32)
+        v_rows = jnp.zeros((1, layers, T1, heads, dh), jnp.float32)
+        cache = self.model.paged_cache_view(k_rows, v_rows, [0])
+        toks = jnp.asarray([list(req.prompt) + [0] * (pad - S)], jnp.int32)
+        logits, cache = self._chunk_prefill_jit(
+            self.params, toks, cache, jnp.asarray([S], jnp.int32))
+        k_row, v_row = self._kv_rows(cache, 0, S)           # (L, S, H, D)
+        slot.seq_id = kv.add_sequence(k_row, v_row)
+        return logits
+
     def _prefill_shared(self, slot: _Slot, donor: int, shared: int):
         """Admit via page aliasing: reuse the donor's first ``shared``
         tokens, chunk-prefill only the unseen suffix, append its KV.
@@ -825,15 +878,23 @@ class InferenceEngine:
         slot.seq_id = seq
         kp, vp = kv.gather(seq)              # device (L, shared, H, D)
         S = len(req.prompt)
-        T1 = self._round_t(S + req.max_new)
+        # pad the suffix to a quantum: the share point depends on which
+        # prefixes happen to be warm at admission time, so under
+        # streaming arrivals raw suffix shapes are timing-dependent and
+        # each one would JIT-compile its own chunk-prefill step
+        n_suf = S - shared
+        pad = -(-n_suf // self._PF_QUANTUM) * self._PF_QUANTUM
+        T1 = self._round_t(shared + pad + req.max_new)
         L, _, H, D = kp.shape
         k_rows = jnp.zeros((1, L, T1, H, D), jnp.float32).at[
             0, :, :shared].set(kp)
         v_rows = jnp.zeros((1, L, T1, H, D), jnp.float32).at[
             0, :, :shared].set(vp)
         cache = self.model.paged_cache_view(k_rows, v_rows, [shared])
-        suffix = jnp.asarray([req.prompt[shared:]], jnp.int32)
-        logits, cache = self._chunk_prefill_jit(self.params, suffix, cache)
+        suffix = jnp.asarray(
+            [list(req.prompt[shared:]) + [0] * (pad - n_suf)], jnp.int32)
+        logits, cache = self._chunk_prefill_jit(
+            self.params, suffix, cache, jnp.asarray([n_suf], jnp.int32))
         k_row, v_row = self._kv_rows(cache, 0, S)           # (L, S, H, D)
         kv.extend_sequence(seq, k_row[:, shared:], v_row[:, shared:])
         return logits

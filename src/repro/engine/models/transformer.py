@@ -328,7 +328,8 @@ class TransformerLM:
     # ----------------------------------------------------- chunked prefill
     def prefill_with_cache(self, params: Params, tokens: jax.Array,
                            cache: Dict[str, jax.Array],
-                           impl: Optional[str] = None
+                           impl: Optional[str] = None,
+                           valid_len: Optional[jax.Array] = None
                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         """Prefill ``tokens`` (B, S_suf) as a continuation of ``cache``.
 
@@ -338,6 +339,13 @@ class TransformerLM:
         Full-attention caches only (slot s holds position s), so the
         result is bitwise what a monolithic ``prefill`` of prefix+chunk
         would produce for these positions.
+
+        ``valid_len`` (B,) marks the REAL chunk length when ``tokens``
+        is right-padded to a bucketed shape (the engine pads suffixes so
+        timing-dependent prefix-share points reuse one compiled step).
+        Causal attention keeps pad rows out of every real row's result;
+        logits are read at ``valid_len - 1`` and the cache length
+        advances by ``valid_len``, so padding is bitwise-invisible.
         """
         cfg = self.cfg
         assert not cfg.swa_window, "chunked prefill needs full attention"
@@ -391,11 +399,16 @@ class TransformerLM:
         x, (ks, vs) = lax.scan(body, x,
                                (params["blocks"], cache["k"], cache["v"]))
         new_cache["k"], new_cache["v"] = ks, vs
-        new_cache["length"] = pos0 + Ssuf
+        new_cache["length"] = pos0 + (Ssuf if valid_len is None
+                                      else valid_len)
 
         x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-        return x[:, -1] @ head, new_cache
+        if valid_len is None:
+            return x[:, -1] @ head, new_cache
+        last = jnp.take_along_axis(
+            x, (valid_len - 1).astype(jnp.int32)[:, None, None], axis=1)[:, 0]
+        return last @ head, new_cache
 
     # ------------------------------------------------------------ decode step
     def decode_step(self, params: Params, token: jax.Array,

@@ -1,14 +1,19 @@
 """Halo Processor (paper §5): event-driven execution over heterogeneous
 CPU/GPU workers, with a discrete-event simulated backend (paper-scale
 numbers) and a real backend (tiny JAX models + minidb, semantics checks).
+``ProcessorSession`` (DESIGN.md §10) is the streaming entry point:
+queries submitted mid-run graft into the running mega-DAG.
 """
 from repro.runtime.events import RunReport, TaskRecord
 from repro.runtime.opwise import OpWiseSimulator
 from repro.runtime.simulator import SimulatedProcessor, OnlineSimulator
+from repro.runtime.session import (ProcessorConfig, ProcessorSession,
+                                   QueryHandle)
 from repro.runtime.processor import RealProcessor
 from repro.runtime.replan import OnlineOptimizer
 from repro.runtime.migrate import KVMigrator
 
 __all__ = ["RunReport", "TaskRecord", "SimulatedProcessor",
            "OnlineSimulator", "RealProcessor", "OpWiseSimulator",
-           "OnlineOptimizer", "KVMigrator"]
+           "OnlineOptimizer", "KVMigrator", "ProcessorConfig",
+           "ProcessorSession", "QueryHandle"]

@@ -50,7 +50,45 @@ class BatchState:
         # zero-query nodes (an empty template slice) are done at birth
         self.macro_done: Set[str] = {v for v, n in self.expected.items()
                                      if n == 0}
+        # per-query SLO priority (DESIGN.md §10.3); absent = 0 = batch
+        self.query_priority: Dict[int, int] = {}
         self._listeners: List[Callable[[int, str], None]] = []
+
+    # ------------------------------------------------------------------
+    def priority_of(self, q: int) -> int:
+        """SLO-lane priority of query ``q`` (0 = batch lane)."""
+        return self.query_priority.get(q, 0)
+
+    def extend(self, graph: GraphSpec, n_new: int,
+               queries_of: Optional[Dict[str, Sequence[int]]] = None,
+               priorities: Optional[Dict[int, int]] = None) -> None:
+        """Grow the batch mid-run (a session graft; DESIGN.md §10.2).
+
+        ``graph`` must be a supergraph of the current one: existing
+        nodes keep their ids, query slices and results; new nodes (and
+        the ``n_new`` new queries) are added with fresh bookkeeping.
+        Zero-query new nodes are macro-complete at birth, exactly as in
+        ``__init__``.
+        """
+        with self.lock:
+            missing = set(self.graph.nodes) - set(graph.nodes)
+            if missing:
+                raise ValueError(
+                    f"graft graph dropped existing nodes: {sorted(missing)}")
+            self.graph = graph
+            self.n += n_new
+            for v in graph.nodes:
+                if v in self.queries_of:
+                    continue
+                qs = sorted((queries_of or {}).get(v, ()))
+                self.queries_of[v] = qs
+                self._query_sets[v] = set(qs)
+                self.expected[v] = len(qs)
+                self.node_done_count[v] = 0
+                if not qs:
+                    self.macro_done.add(v)
+            self.query_priority.update(priorities or {})
+            self.lock.notify_all()
 
     # ------------------------------------------------------------------
     def add_listener(self, fn: Callable[[int, str], None]) -> None:
@@ -228,6 +266,24 @@ class PlanBoard:
         with self.lock:
             return self.claimed_prefix_epochs_locked()
 
+    def _splice_locked(self, tail: ExecutionPlan) -> None:
+        seqs = tail.worker_sequences(self.W)
+        self.seqs = [[n for n in seqs[w] if n not in self.claimed_set]
+                     for w in range(self.W)]
+        # tail work planned onto an abandoned worker would be
+        # unclaimable (try_claim only reads seqs[wid] + overflow) —
+        # reroute it through overflow for the survivors
+        orphaned: List[str] = []
+        for w in self.dead:
+            orphaned.extend(self.seqs[w])
+            self.seqs[w] = []
+        self.overflow = [n for n in self.overflow
+                         if n not in self.claimed_set
+                         and not any(n in s for s in self.seqs)
+                         and n not in orphaned] + orphaned
+        self.splices += 1
+        self.lock.notify_all()
+
     def splice(self, tail: ExecutionPlan) -> None:
         """Replace every worker's unclaimed tail with ``tail``'s sequences.
 
@@ -235,19 +291,21 @@ class PlanBoard:
         whose done-set equals the current claimed set.
         """
         with self.lock:
-            seqs = tail.worker_sequences(self.W)
-            self.seqs = [[n for n in seqs[w] if n not in self.claimed_set]
-                         for w in range(self.W)]
-            # tail work planned onto an abandoned worker would be
-            # unclaimable (try_claim only reads seqs[wid] + overflow) —
-            # reroute it through overflow for the survivors
-            orphaned: List[str] = []
-            for w in self.dead:
-                orphaned.extend(self.seqs[w])
-                self.seqs[w] = []
-            self.overflow = [n for n in self.overflow
-                             if n not in self.claimed_set
-                             and not any(n in s for s in self.seqs)
-                             and n not in orphaned] + orphaned
-            self.splices += 1
-            self.lock.notify_all()
+            self._splice_locked(tail)
+
+    def graft(self, dag: LLMDag, tail: ExecutionPlan) -> None:
+        """Atomically adopt a grown LLM DAG and splice in its re-solved
+        tail (a session graft; DESIGN.md §10.2).
+
+        ``dag`` must contain every already-claimed node (claims and claim
+        chains survive); the tail covers the unclaimed remainder —
+        including the freshly grafted nodes — so parked workers wake with
+        claimable work the moment the splice publishes.
+        """
+        with self.lock:
+            missing = self.claimed_set - set(dag.node_ids)
+            if missing:
+                raise ValueError(
+                    f"graft DAG dropped claimed nodes: {sorted(missing)}")
+            self.dag = dag
+            self._splice_locked(tail)

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclass
@@ -32,6 +32,19 @@ class RunReport:
     extra: Dict[str, float] = field(default_factory=dict)
     # online mode
     query_completion: List[float] = field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    def results(self) -> Dict[str, str]:
+        """Per-(query, node) outputs as ``"{q}:{node}" -> text`` — the
+        typed accessor for what used to be ``extra["results"]`` reads.
+        Empty for simulated runs (no real outputs to report)."""
+        return dict(self.extra.get("results", {}))
+
+    def migration_summary(self) -> Optional[Dict[str, float]]:
+        """The KV migrator's counters for this run, or None when the run
+        executed without a migrator (``kv_migration=False``)."""
+        mig = self.extra.get("migration")
+        return dict(mig) if mig is not None else None
 
     # ------------------------------------------------------------------
     def gpu_busy(self) -> Dict[str, float]:

@@ -106,17 +106,21 @@ class EngineHost:
     def submit(self, model: str, prompts: Sequence[Sequence[int]], *,
                max_new_tokens: int = 16, temperature: float = 0.0,
                extras: Optional[List[Dict[str, Any]]] = None,
+               priorities: Optional[Sequence[int]] = None,
                ) -> List[RequestHandle]:
         """Submit prompts into the resident engine's persistent loop.
 
         Non-blocking: the requests join the engine's running decode batch
         (continuous batching); callers wait on the returned handles.
+        ``priorities`` (per-prompt, default all-0) feed the engine's
+        SLO-lane admission (DESIGN.md §10.3).
         """
         eng = self.engine_for(model)
         extras = extras or [{} for _ in prompts]
+        prios = priorities or [0] * len(prompts)
         return [eng.submit(p, max_new_tokens=max_new_tokens,
-                           temperature=temperature, extra=e)
-                for p, e in zip(prompts, extras)]
+                           temperature=temperature, extra=e, priority=pr)
+                for p, e, pr in zip(prompts, extras, prios)]
 
     def shutdown(self) -> None:
         """Stop every engine's loop thread (stats stay readable)."""
@@ -131,7 +135,8 @@ class GPUWorkerThread(threading.Thread):
                  records_lock: threading.Lock, t0: float,
                  die_after: Optional[int] = None, pipelining: bool = True,
                  optimizer=None, migrator=None,
-                 claim_ahead: Optional[int] = None):
+                 claim_ahead: Optional[int] = None,
+                 stop_event: Optional[threading.Event] = None):
         super().__init__(daemon=True, name=f"gpu{wid}")
         self.wid = wid
         self.board = board
@@ -152,10 +157,19 @@ class GPUWorkerThread(threading.Thread):
         # window to nothing; a small K keeps late-batch drift replans
         # able to re-place real work.
         self.claim_ahead = claim_ahead
+        # session mode: when set, the worker parks on an empty board
+        # (never exits on exhaustion — a graft may hand it new work) and
+        # only returns once the event fires (DESIGN.md §10.1)
+        self.stop_event = stop_event
         self.executed = 0
         self.error: Optional[BaseException] = None
         self._outstanding: List[RequestHandle] = []
         self._my_claims: List[str] = []
+
+    def rebind(self, graph: GraphSpec) -> None:
+        """Adopt a grafted supergraph (atomic reference swap; node specs
+        already claimed are identical in the new graph)."""
+        self.graph = graph
 
     # ------------------------------------------------------------------
     def _fail(self, err: BaseException) -> None:
@@ -191,7 +205,8 @@ class GPUWorkerThread(threading.Thread):
         ts = time.perf_counter() - self.t0
         handles = self.host.submit(
             spec.model, prompts, max_new_tokens=spec.max_new_tokens,
-            temperature=spec.temperature)
+            temperature=spec.temperature,
+            priorities=[self.state.priority_of(q) for q in queries])
         outs = [h.result() for h in handles]
         te = time.perf_counter() - self.t0
         with self.records_lock:
@@ -224,6 +239,8 @@ class GPUWorkerThread(threading.Thread):
         pending = set(todo)
         deadline = time.monotonic() + 600.0
         while pending:
+            if self.stop_event is not None and self.stop_event.is_set():
+                return                       # session closing mid-node
             if time.monotonic() > deadline:
                 raise TimeoutError(f"deps of {nid!r} never completed")
             wave = self._settle_ready_wave(nid, pending)
@@ -248,7 +265,8 @@ class GPUWorkerThread(threading.Thread):
                 wave_prompts.append(toks)
                 h = eng.submit(toks,
                                max_new_tokens=spec.max_new_tokens,
-                               temperature=spec.temperature)
+                               temperature=spec.temperature,
+                               priority=state.priority_of(q))
                 h.add_done_callback(
                     self._on_request_done(nid, q, node_track, wave_track,
                                           tlock))
@@ -334,11 +352,21 @@ class GPUWorkerThread(threading.Thread):
             return sum(1 for n in self._my_claims
                        if n not in self.state.macro_done)
 
+    def _finished(self) -> bool:
+        """One-shot mode ends with the batch; session mode (stop_event
+        set) parks through exhaustion and ends only on the event."""
+        if self.stop_event is not None:
+            return self.stop_event.is_set()
+        return self.state.all_done()
+
     def run(self) -> None:
         """Claim nodes off the board until nothing is left for us; pick
-        up failed peers' overflow work the moment it is claimable."""
+        up failed peers' overflow work the moment it is claimable.  In
+        session mode an idle worker parks instead of exiting: a graft's
+        splice (which notifies the board lock) can hand it new work at
+        any time (DESIGN.md §10.1)."""
         try:
-            while not self.state.all_done():
+            while not self._finished():
                 if (self.die_after is not None
                         and self.executed >= self.die_after):
                     self.board.abandon(self.wid)     # simulated failure
@@ -353,7 +381,8 @@ class GPUWorkerThread(threading.Thread):
                     continue
                 nid = self.board.try_claim(self.wid)
                 if nid is None:
-                    if self.board.exhausted(self.wid):
+                    if self.stop_event is None and \
+                            self.board.exhausted(self.wid):
                         break                        # nothing left for us
                     with self.board.lock:
                         self.board.lock.wait(timeout=0.05)
@@ -390,9 +419,13 @@ class ToolDispatcher(threading.Thread):
                  bindings: Sequence[dict], tools: ToolRuntime,
                  records: List[TaskRecord], records_lock: threading.Lock,
                  t0: float, cpu_slots: int = 8, coalescing: bool = True,
-                 optimizer=None):
+                 optimizer=None, persistent: bool = False):
         super().__init__(daemon=True, name="tool-dispatcher")
         self.graph = graph
+        # session mode: outlive batch completion (a graft may add work);
+        # the owner is responsible for stop()
+        self.persistent = persistent
+        self._force_scan = threading.Event()
         self.state = state
         self.bindings = bindings
         self.tools = tools
@@ -424,6 +457,23 @@ class ToolDispatcher(threading.Thread):
 
     def stop(self) -> None:
         self.stop_flag.set()
+        self._wake.set()
+
+    def rebind(self, graph: GraphSpec) -> None:
+        """Adopt a grafted supergraph and force a full dispatch sweep.
+
+        Grafted ROOT tool nodes have no upstream result to trigger the
+        incremental event path, so the next loop iteration runs a full
+        ``_scan`` over the (grown) shared-identity bindings list.  The
+        derived indices are rebuilt before the graph swap publishes."""
+        depth = {t: len(graph.ancestors(t)) for t in graph.tool_nodes()}
+        children = {nid: [c for c in graph.children(nid)
+                          if not graph.nodes[c].is_llm()]
+                    for nid in graph.nodes}
+        self._depth = depth
+        self._tool_children = children
+        self.graph = graph
+        self._force_scan.set()
         self._wake.set()
 
     # ------------------------------------------------------------------
@@ -508,13 +558,18 @@ class ToolDispatcher(threading.Thread):
         try:
             self._scan()
             idle = 0
-            while not self.stop_flag.is_set() and not self.state.all_done():
+            while not self.stop_flag.is_set() and \
+                    (self.persistent or not self.state.all_done()):
                 if self._wake.wait(timeout=0.25):
                     self._wake.clear()
                     idle = 0
                 else:
                     idle += 1
                 self._drain_events()
+                if self._force_scan.is_set():        # a graft landed
+                    self._force_scan.clear()
+                    idle = 0
+                    self._scan()
                 if idle >= self._FULL_SCAN_EVERY:
                     idle = 0
                     self._scan()

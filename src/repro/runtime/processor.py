@@ -9,104 +9,72 @@ real mode exists to prove the semantics: coalescing, plan choice,
 per-request pipelining and mid-run replanning must not change outputs
 (asserted in tests).
 
-Per-request CPU-GPU pipelining is on by default: each query's result is
-published the moment its request retires (releasing that query's tool
-tasks immediately) and a node's per-query requests are submitted as soon
-as that query's deps land — no macro barrier.  Pass an
-``OnlineOptimizer`` to ``run`` to additionally calibrate the cost model
-from measured latencies and re-solve the remaining DAG mid-run when
-observed epoch cost drifts from the plan's predictions.
+Since the session redesign (DESIGN.md §10), ``run()`` is a thin
+ONE-SHOT wrapper over ``ProcessorSession``: open a session, bootstrap
+it with the consolidated batch, drain, report, close.  Streaming
+callers should hold a ``ProcessorSession`` directly and ``submit()``
+into it — arriving queries then graft into the running mega-DAG
+instead of waiting for the next ``run()``.
+
+Construction takes a ``ProcessorConfig``; the former 11 loose keyword
+arguments are still accepted for one release behind a
+``DeprecationWarning`` shim.
 """
 from __future__ import annotations
 
-import threading
-import time
+import warnings
+from dataclasses import fields, replace
 from typing import Any, Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.consolidate import ConsolidatedGraph
 from repro.core.graphspec import GraphSpec
 from repro.core.plan import ExecutionPlan
-from repro.runtime.checkpoint import load_batch_state, save_batch_state
-from repro.runtime.coordinator import BatchState, PlanBoard
-from repro.runtime.events import RunReport, TaskRecord
-from repro.runtime.executors import (EngineHost, GPUWorkerThread,
-                                     ToolDispatcher)
-from repro.runtime.migrate import KVMigrator
+from repro.runtime.checkpoint import save_batch_state
+from repro.runtime.events import RunReport
+from repro.runtime.executors import EngineHost
+from repro.runtime.session import ProcessorConfig, ProcessorSession
 from repro.workloads.tools import ToolRuntime
 
-# engine counters that accumulate monotonically (reported as per-run
-# deltas so persistent hosts don't leak prior runs into each report)
-_ENGINE_COUNTERS = ("prefill_tokens_saved", "admission_waves",
-                    "pages_shared", "tokens_reused", "coalesced_requests",
-                    "pages_migrated_in", "pages_migrated_out",
-                    "migrate_seconds", "h2d_bytes", "d2h_bytes",
-                    "view_rebuilds")
+_CONFIG_FIELDS = {f.name for f in fields(ProcessorConfig)}
 
 
 class RealProcessor:
-    def __init__(self, graph: GraphSpec, model_configs: Dict[str, ModelConfig],
-                 tools: ToolRuntime, num_workers: int = 2,
-                 cpu_slots: int = 8, coalescing: bool = True, seed: int = 0,
-                 decode_cap: Optional[int] = None, pipelining: bool = True,
-                 engine_kwargs: Optional[Dict[str, Any]] = None,
-                 kv_migration: bool = True,
-                 claim_ahead: Optional[int] = None):
-        self.graph = graph
+    """One-shot real-mode Processor facade over ``ProcessorSession``."""
+
+    def __init__(self, graph: GraphSpec,
+                 model_configs: Dict[str, ModelConfig],
+                 tools: ToolRuntime,
+                 config: Optional[ProcessorConfig] = None,
+                 **legacy: Any):
+        if legacy:
+            unknown = set(legacy) - _CONFIG_FIELDS
+            if unknown:
+                raise TypeError(
+                    f"unknown RealProcessor arguments: {sorted(unknown)}")
+            warnings.warn(
+                "passing loose keyword arguments to RealProcessor is "
+                "deprecated; pass config=ProcessorConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            config = replace(config or ProcessorConfig(), **legacy)
+        self.config = config or ProcessorConfig()
         self.model_configs = model_configs
         self.tools = tools
-        self.W = num_workers
-        self.cpu_slots = cpu_slots
-        self.coalescing = coalescing
-        self.seed = seed
-        self.pipelining = pipelining
-        self.engine_kwargs = engine_kwargs
-        # migrate moved nodes' warm KV on plan splices (off = A/B control)
-        self.kv_migration = kv_migration
-        # workers claim at most this many incomplete nodes ahead (None =
-        # unlimited) so pipelined claims can't outrun completions and
-        # starve the mid-run replanning window
-        self.claim_ahead = claim_ahead
+        self.W = self.config.num_workers
+        self.cpu_slots = self.config.cpu_slots
+        self.coalescing = self.config.coalescing
+        self.seed = self.config.seed
+        self.pipelining = self.config.pipelining
+        self.engine_kwargs = self.config.engine_kwargs
+        self.kv_migration = self.config.kv_migration
+        self.claim_ahead = self.config.claim_ahead
+        self.graph = graph
         # cap generation length in tests (CPU real mode); None = node spec
-        if decode_cap is not None:
-            nodes = [n.with_(max_new_tokens=min(n.max_new_tokens, decode_cap))
+        if self.config.decode_cap is not None:
+            cap = self.config.decode_cap
+            nodes = [n.with_(max_new_tokens=min(n.max_new_tokens, cap))
                      if n.is_llm() else n for n in graph.nodes.values()]
             self.graph = GraphSpec(graph.name, nodes, graph.edges)
-
-    # ------------------------------------------------------------------
-    @staticmethod
-    def _engine_totals(hosts: List[EngineHost]) -> Dict[str, int]:
-        engines = [e for h in hosts for e in h._engines.values()]
-        out = {k: sum(getattr(e.stats, k) for e in engines)
-               for k in _ENGINE_COUNTERS}
-        out["model_switches"] = sum(h.switches for h in hosts)
-        return out
-
-    # ------------------------------------------------------------------
-    @staticmethod
-    def _cross_template_stats(cons: ConsolidatedGraph,
-                              table) -> Dict[str, int]:
-        """Runtime cross-template coalescing: physical tool executions
-        whose logical requesters span >= 2 templates (the merges only a
-        multi-template mega-DAG makes possible)."""
-        merged_tasks = 0
-        merged_requests = 0
-        tasks = list(table.completed.values()) + list(table.pending.values())
-        for task in tasks:
-            if not task.requesters:
-                continue
-            # only requesters from a DIFFERENT template than the one
-            # whose request ran the physical execution count as
-            # cross-template merges — same-template coalescing on a
-            # spanning task is ordinary dedup, not a mega-DAG win
-            owner = cons.template_of[task.requesters[0][1]]
-            crossed = sum(1 for _, nid in task.requesters
-                          if cons.template_of[nid] != owner)
-            if crossed:
-                merged_tasks += 1
-                merged_requests += crossed
-        return {"cross_template_merged_tasks": merged_tasks,
-                "cross_template_merged_requests": merged_requests}
 
     # ------------------------------------------------------------------
     def run(self, cons: ConsolidatedGraph, plan: ExecutionPlan,
@@ -115,155 +83,25 @@ class RealProcessor:
             die_after: Optional[Dict[int, int]] = None,
             hosts: Optional[List[EngineHost]] = None,
             optimizer=None) -> RunReport:
-        """Execute the consolidated batch. Returns a RunReport whose
-        ``extra['results']`` holds the per-(query,node) outputs.
+        """Execute the consolidated batch as one session: bootstrap →
+        drain → report.  ``RunReport.results()`` holds the per-(query,
+        node) outputs.
 
         ``hosts`` lets an online driver keep engines (resident models,
         warm KV pages) alive across successive micro-batches; by default
         each run gets fresh hosts.  ``optimizer`` (an OnlineOptimizer)
         enables cost calibration + mid-run replanning; like ``hosts`` it
         may persist across runs so calibration compounds."""
-        # multi-template mega-DAGs restrict each namespaced node to its
-        # own template's query slice; single-template maps to all queries
-        state = BatchState(self.graph, cons.n_queries,
-                           queries_of=cons.queries_map())
-        if resume_from:
-            restored = load_batch_state(state, resume_from)
-        else:
-            restored = 0
-
-        records: List[TaskRecord] = []
-        rlock = threading.Lock()
-        t0 = time.perf_counter()
-        board = PlanBoard(plan, self.graph.llm_dag(), self.W)
-        base_replans = 0
-        if optimizer is not None:
-            optimizer.bind_graph(self.graph)   # decode_cap-rewritten copy
-            optimizer.solver_config.num_workers = self.W
-            # replans must price placement moves the way THIS processor
-            # executes them: no migration credit when migration is off
-            optimizer.cm.use_migration = self.kv_migration
-            optimizer.attach_plan(plan)
-            base_replans = optimizer.replans
-
-        dispatcher = ToolDispatcher(
-            self.graph, state, cons.bindings, self.tools, records, rlock,
-            t0, cpu_slots=self.cpu_slots, coalescing=self.coalescing,
-            optimizer=optimizer)
-        dispatcher.start()
-
-        own_hosts = hosts is None
-        if hosts is None:
-            hosts = [EngineHost(self.model_configs, seed=self.seed,
-                                engine_kwargs=self.engine_kwargs)
-                     for _ in range(self.W)]
-        assert len(hosts) == self.W
-        base = self._engine_totals(hosts)       # persistent-host baseline
-        for h in hosts:                         # per-run peak watermark
-            for e in h._engines.values():
-                e.reset_peak_batch()
-
-        migrator = None
-        if self.kv_migration:
-            # no optimizer -> no replanning, but workers still pull warm
-            # lineage from peers at claim time (cost-model decision falls
-            # back to migrate-on-hit without a cm)
-            migrator = KVMigrator(
-                self.graph, hosts,
-                cost_model=optimizer.cm if optimizer is not None else None)
-
-        workers = [
-            GPUWorkerThread(w, board, self.graph, state, cons.bindings,
-                            hosts[w], records, rlock, t0,
-                            die_after=(die_after or {}).get(w),
-                            pipelining=self.pipelining, optimizer=optimizer,
-                            migrator=migrator, claim_ahead=self.claim_ahead)
-            for w in range(self.W)]
+        session = ProcessorSession(self.model_configs, self.tools,
+                                   config=self.config)
+        session.open(hosts=hosts, optimizer=optimizer)
         try:
-            if optimizer is not None:
-                # admission-time pass: a queued (forced) splice — or a
-                # plan already known-drifted from a prior micro-batch —
-                # re-places work and migrates warm KV before any claim
-                optimizer.maybe_replan(board, migrator=migrator)
-            for wk in workers:
-                wk.start()
-            deadline = time.monotonic() + 600.0
-            while any(wk.is_alive() for wk in workers):
-                if any(wk.error for wk in workers) or dispatcher.error:
-                    break
-                for wk in workers:
-                    wk.join(timeout=0.05)
-                if optimizer is not None:
-                    optimizer.maybe_replan(board, migrator=migrator)
-                if time.monotonic() > deadline:
-                    break
-            err = next((wk.error for wk in workers if wk.error), None) \
-                or dispatcher.error
-            if err is None:
-                # results land from engine callbacks; tool tasks may still
-                # be draining — wait for full completion (or a late
-                # failure, which also notifies the state lock), then stop
-                target = len(self.graph.nodes)
-                with state.lock:
-                    state.lock.wait_for(
-                        lambda: (len(state.macro_done) == target
-                                 or dispatcher.error is not None
-                                 or any(wk.error for wk in workers)),
-                        timeout=60.0)
-            dispatcher.stop()
-            dispatcher.join(timeout=60)
-
-            err = err or next((wk.error for wk in workers if wk.error),
-                              None) or dispatcher.error
-            if err is not None:
-                raise err
-            if not state.all_done():
-                missing = set(self.graph.nodes) - state.macro_done
-                raise RuntimeError(
-                    f"run incomplete; missing {sorted(missing)}")
+            session.submit_consolidated(cons, plan, graph=self.graph,
+                                        resume_from=resume_from,
+                                        die_after=die_after)
+            session.drain(timeout=600.0)
+            if checkpoint_path:
+                save_batch_state(session.state, checkpoint_path)
+            return session.report()
         finally:
-            dispatcher.stop()           # idempotent; covers raise paths
-            dispatcher.join(timeout=60)
-            if own_hosts:               # persistent hosts outlive the run
-                for h in hosts:
-                    h.shutdown()
-
-        if checkpoint_path:
-            save_batch_state(state, checkpoint_path)
-
-        report = RunReport(
-            name=plan.scheduler_name, makespan=time.perf_counter() - t0,
-            records=records, num_queries=cons.n_queries, num_workers=self.W)
-        report.coalesce_stats = {
-            "tool_logical": dispatcher.table.logical_requests,
-            "tool_physical": dispatcher.table.physical_executions,
-            "tool_dedup_ratio": dispatcher.table.dedup_ratio,
-            "restored_results": restored,
-        }
-        if cons.n_templates > 1:
-            report.coalesce_stats.update(
-                self._cross_template_stats(cons, dispatcher.table))
-        report.extra["results"] = {           # type: ignore[assignment]
-            f"{q}:{node}": val
-            for (q, node), val in sorted(state.results.items())}
-        # per-run deltas against the at-start totals: persistent hosts
-        # must not re-report earlier micro-batches' counts
-        totals = self._engine_totals(hosts)
-        for key, cur in totals.items():
-            report.extra[key] = max(cur - base.get(key, 0), 0)
-        engines = [e for h in hosts for e in h._engines.values()]
-        # per-run gauge: watermarks were reset at run start, so the max
-        # is THIS run's peak concurrency, not an earlier run's
-        report.extra["peak_batch"] = max(
-            (e.stats.peak_batch for e in engines), default=0)
-        report.extra["cpu_gpu_overlap_s"] = round(
-            report.cpu_gpu_overlap(), 6)
-        report.extra["plan_splices"] = board.splices
-        if optimizer is not None:
-            report.extra["replans"] = optimizer.replans - base_replans
-            report.extra["calibration"] = (   # type: ignore[assignment]
-                optimizer.calibration_summary())
-        if migrator is not None:
-            report.extra["migration"] = (     # type: ignore[assignment]
-                migrator.summary())
-        return report
+            session.close()

@@ -60,6 +60,10 @@ class OnlineOptimizer:
         self.predicted_errors: List[float] = []  # |pred-obs|/obs per LLM node
         self.spliced_plan: Optional[ExecutionPlan] = None
         self._queued_tail: Optional[ExecutionPlan] = None
+        # per-node SLO priority mass (session grafts set this); drift
+        # replans re-solve with the same weights the graft solve used,
+        # so a replan never silently drops the interactive lanes
+        self.node_priorities: Dict[str, float] = {}
 
     # ------------------------------------------------------------------
     def bind_graph(self, graph) -> None:
@@ -76,6 +80,33 @@ class OnlineOptimizer:
         with self.lock:
             self.cm.graph = graph
             self.dag = graph.llm_dag()
+
+    def adopt_graft(self, graph, batch_sizes: Dict[str, int],
+                    warm_aliases: Optional[Dict[str, tuple]] = None,
+                    node_priorities: Optional[Dict[str, float]] = None
+                    ) -> None:
+        """Point the live cost model at a grafted SUPERGRAPH mid-run
+        (DESIGN.md §10.2).
+
+        Unlike ``bind_graph`` the node set is allowed to GROW: a session
+        graft extends the running mega-DAG, and subsequent drift replans
+        must price the new nodes too.  Calibration state (roofline knobs,
+        tool EWMAs) and per-node observations persist — that continuity
+        is the point of grafting into a live session instead of starting
+        a fresh run.
+        """
+        missing = set(self.cm.graph.nodes) - set(graph.nodes)
+        if missing:
+            raise ValueError(
+                f"graft graph dropped existing nodes: {sorted(missing)}")
+        with self.lock:
+            self.cm.graph = graph
+            self.dag = graph.llm_dag()
+            self.cm.batch_sizes = dict(batch_sizes)
+            if warm_aliases is not None:
+                self.cm.warm_aliases = dict(warm_aliases)
+            if node_priorities is not None:
+                self.node_priorities = dict(node_priorities)
 
     def attach_plan(self, plan: ExecutionPlan, fresh: bool = True,
                     evaluated_prefix: int = 0) -> None:
@@ -221,7 +252,8 @@ class OnlineOptimizer:
             contexts = board.contexts_locked()
         if len(done) == len(self.dag.node_ids):
             return False                          # nothing left to replan
-        solver = EpochDPSolver(self.dag, self.cm, self.solver_config)
+        solver = EpochDPSolver(self.dag, self.cm, self.solver_config,
+                               priorities=self.node_priorities)
         tail = solver.solve(initial=SystemState(done, contexts))
         return self._apply_tail(board, tail, migrator)
 

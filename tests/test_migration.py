@@ -216,15 +216,15 @@ def test_forced_replan_migrates_and_saves_prefill_bitwise_identical():
     # in/out counters track confirmed transfers symmetrically
     assert (rep_on.extra["pages_migrated_out"]
             == rep_on.extra["pages_migrated_in"])
-    assert rep_on.extra["migration"]["pages_migrated"] > 0
-    assert rep_on.extra["migration"]["nodes_moved"] > 0
-    assert rep_on.extra["migration"]["migrate_seconds"] > 0
+    assert rep_on.migration_summary()["pages_migrated"] > 0
+    assert rep_on.migration_summary()["nodes_moved"] > 0
+    assert rep_on.migration_summary()["migrate_seconds"] > 0
     assert (rep_on.extra["prefill_tokens_saved"]
             > rep_off.extra["prefill_tokens_saved"])
     assert rep_off.extra.get("pages_migrated_in", 0) == 0
     # semantics preserved: migration on / off / never-replanned agree
-    assert (rep_on.extra["results"] == rep_off.extra["results"]
-            == warm.extra["results"])
+    assert (rep_on.results() == rep_off.results()
+            == warm.results())
 
 
 def test_migrator_assignment_diff_only_reports_real_moves():

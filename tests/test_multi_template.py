@@ -300,7 +300,7 @@ def test_real_multi_vs_per_template_serial_bitwise():
     rep = proc.run(mc, plan)
     assert set(rep.coalesce_stats) >= {"cross_template_merged_tasks",
                                        "cross_template_merged_requests"}
-    multi_results = rep.extra["results"]
+    multi_results = rep.results()
     # every (query, node) of every template slice produced a result
     assert len(multi_results) == sum(
         len(tb) * len(tg.nodes) for tg, tb in batches)
@@ -316,7 +316,7 @@ def test_real_multi_vs_per_template_serial_bitwise():
             ToolRuntime(build_database(db), latency_scale=0.0),
             num_workers=2, decode_cap=3).run(
                 cons, halo_plan(tg, cons, workers=2))
-        for key, val in r.extra["results"].items():
+        for key, val in r.results().items():
             q, node = key.split(":", 1)
             mkey = f"{int(q) + offsets[k]}:t{k}/{node}"
             assert multi_results[mkey] == val, mkey

@@ -191,7 +191,7 @@ def test_paged_ab_kills_host_gather_traffic():
     temperature-0 outputs."""
     from benchmarks.common import run_paged_ab
     rep_p, rep_d = run_paged_ab("wt", n=3, workers=2, decode_cap=3)
-    assert rep_p.extra["results"] == rep_d.extra["results"]
+    assert rep_p.results() == rep_d.results()
     assert rep_p.extra["view_rebuilds"] == 0
     assert rep_d.extra["view_rebuilds"] > 0
     paged_traffic = rep_p.extra["h2d_bytes"] + rep_p.extra["d2h_bytes"]
@@ -270,4 +270,4 @@ def test_claim_throttling_lets_drift_replan_fire_late():
     ctrl, _, cons2, _, plan2 = make_real_processor(
         "w+", 2, 2, 2, kv_migration=False)
     rep2 = ctrl.run(cons2, plan2)
-    assert rep.extra["results"] == rep2.extra["results"]
+    assert rep.results() == rep2.results()

@@ -76,13 +76,13 @@ def test_pipelined_outputs_bitwise_match_barrier_and_replan():
     g, cons, dbname, _, plan = _setup("wt", 4)
     base = _proc(g, dbname, pipelining=False).run(cons, plan)
     piped = _proc(g, dbname, pipelining=True).run(cons, plan)
-    assert piped.extra["results"] == base.extra["results"]
+    assert piped.results() == base.results()
 
     _, _, _, cm, _ = _setup("wt", 4)
     opt = OnlineOptimizer(cm, drift_threshold=0.0)
     replanned = _proc(g, dbname, pipelining=True).run(
         cons, plan, optimizer=opt)
-    assert replanned.extra["results"] == base.extra["results"]
+    assert replanned.results() == base.results()
     assert replanned.extra["replans"] == replanned.extra["plan_splices"]
 
 
@@ -159,7 +159,7 @@ def test_worker_failure_recovery_completes():
     survivor the moment they are claimable."""
     g, cons, dbname, _, plan = _setup("w+", 2)
     rep = _proc(g, dbname).run(cons, plan, die_after={0: 1})
-    assert len(rep.extra["results"]) == 2 * len(g.nodes)
+    assert len(rep.results()) == 2 * len(g.nodes)
 
 
 def test_wave_span_union_does_not_double_count():

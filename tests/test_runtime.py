@@ -114,4 +114,4 @@ def test_real_processor_semantics_wplus():
     r2 = RealProcessor(g, models, ToolRuntime(build_database(dbname),
                                               latency_scale=0.0),
                        num_workers=2, decode_cap=3).run(cons, ow)
-    assert r1.extra["results"] == r2.extra["results"]
+    assert r1.results() == r2.results()

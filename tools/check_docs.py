@@ -9,7 +9,9 @@ Three checks, all repo-local and dependency-free:
 2. **DESIGN.md § citations** — every ``DESIGN.md §N[.M]`` mention in the
    Python sources must name a numbered section heading that actually
    exists in ``docs/DESIGN.md`` (module docstrings cite sections; stale
-   numbers rot fast without this).
+   numbers rot fast without this).  GLOSSARY.md's bare ``(§N[.M])``
+   pointers are held to the same rule — glossary entries point into
+   DESIGN.md by number only, so a renumbering silently strands them.
 3. **Core docstring audit** — mirrors the ruff pydocstyle subset enabled
    for ``src/repro/core/`` (D100/D101/D102/D103: module, public class,
    public method, public function docstrings) so the check also runs
@@ -109,6 +111,27 @@ def check_design_citations() -> list:
     return problems
 
 
+_GLOSSARY_PTR = re.compile(r"§\s*(\d+(?:\.\d+)*)")
+
+
+def check_glossary_pointers() -> list:
+    """GLOSSARY entries cite DESIGN.md by bare section number."""
+    problems = []
+    sections = design_sections()
+    gl = ROOT / "docs" / "GLOSSARY.md"
+    if not sections or not gl.is_file():
+        return problems
+    text = gl.read_text(encoding="utf-8")
+    for m in _GLOSSARY_PTR.finditer(text):
+        num = m.group(1)
+        if num not in sections:
+            line = text[:m.start()].count("\n") + 1
+            problems.append(
+                f"docs/GLOSSARY.md:{line}: points at §{num} but "
+                f"DESIGN.md has no section {num}")
+    return problems
+
+
 def check_core_docstrings() -> list:
     problems = []
     core = ROOT / "src" / "repro" / "core"
@@ -141,7 +164,7 @@ def check_core_docstrings() -> list:
 
 def main() -> int:
     problems = (check_markdown_links() + check_design_citations()
-                + check_core_docstrings())
+                + check_glossary_pointers() + check_core_docstrings())
     for p in problems:
         print(p)
     n_md = sum(1 for _ in _tracked("*.md"))
