@@ -40,6 +40,19 @@ def _row(rows: List[Dict], system: str) -> Dict:
     return next(r for r in rows if r.get("system") == system)
 
 
+def static_analysis_rows() -> List[Dict]:
+    """Counters from ``tools.analysis`` (DESIGN.md §11) as one row —
+    the nightly artifact makes the host-sync budget and guarded-attr
+    coverage a tracked series, not a one-time assertion."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from tools.analysis import run as analysis_run
+    res = analysis_run()
+    row = {"system": "tools-analysis", **res.counts,
+           "strict_clean": res.ok(strict=True)}
+    return [row]
+
+
 def check_inversions(sections: Dict[str, List[Dict]]) -> List[str]:
     """Guarded A/B pairs that must not invert.  Returns violations."""
     bad = []
@@ -75,6 +88,7 @@ def main() -> int:
             online_serving.run(32)
             + online_serving.real_stream_rows()
             + online_serving.session_stream_rows()),
+        "BENCH_static_analysis": static_analysis_rows,
     }
     os.makedirs(OUT, exist_ok=True)
     results: Dict[str, List[Dict]] = {}

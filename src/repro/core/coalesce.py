@@ -68,17 +68,23 @@ class PhysicalTask:
     done: bool = False
 
 
-class CoalesceTable:
-    """Merge map from logical requests to physical executions."""
+class CoalesceTable:  # requires: BatchState.lock
+    """Merge map from logical requests to physical executions.
+
+    Thread contract: every method (and every direct read of the table's
+    maps/counters) runs under the owning ``BatchState.lock`` — the tool
+    dispatcher, the pool's ``_execute`` threads and the session's
+    reporting all serialize on it (DESIGN.md §11).
+    """
 
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
-        self.pending: Dict[str, PhysicalTask] = {}
-        self.completed: Dict[str, PhysicalTask] = {}
+        self.pending: Dict[str, PhysicalTask] = {}      # guarded-by: BatchState.lock
+        self.completed: Dict[str, PhysicalTask] = {}    # guarded-by: BatchState.lock
         # stats
-        self.logical_requests = 0
-        self.physical_executions = 0
-        self.result_cache_hits = 0
+        self.logical_requests = 0           # guarded-by: BatchState.lock
+        self.physical_executions = 0        # guarded-by: BatchState.lock
+        self.result_cache_hits = 0          # guarded-by: BatchState.lock
 
     def register(self, op: str, args: str, requester: Tuple[int, str],
                  model: str = "") -> Tuple[str, bool, Optional[object]]:

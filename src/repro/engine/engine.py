@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.debugsync import named_condition, named_lock
 from repro.engine.kvcache import PagedKVCache
 from repro.engine.models import build_model
 from repro.engine.prefix_tree import RadixPrefixTree
@@ -130,8 +131,8 @@ class RequestHandle:
         self._event = threading.Event()
         self._result: Optional[List[int]] = None
         self._error: Optional[BaseException] = None
-        self._callbacks: List[Any] = []
-        self._cb_lock = threading.Lock()
+        self._cb_lock = named_lock("RequestHandle._cb_lock")
+        self._callbacks: List[Any] = []       # guarded-by: self._cb_lock
 
     def add_done_callback(self, fn) -> None:
         """Call ``fn(handle)`` when the request completes (or failed).
@@ -244,21 +245,24 @@ class InferenceEngine:
         # instead of fragmenting into per-arrival recompiles.  Applied
         # only while the engine is idle — a running batch is never stalled.
         self.admission_window = admission_window
-        self.params = None               # lazy: loading == model-switch cost
+        self.params = None               # guarded-by: self._cv | engine-loop
         self.stats = EngineStats()
-        self.warm_prefixes = RadixPrefixTree()
+        self.warm_prefixes = RadixPrefixTree()  # guarded-by: self._cv | engine-loop
         self._paged_layout = self.model.paged_kv_layout()
         self._use_paged = bool(self._paged_layout) and paged_decode \
             and hasattr(self.model, "paged_decode_step")
         self.num_pages = num_pages or max(
             64, 2 * max_batch * -(-max_seq_len // page_size))
-        self.kv: Optional[PagedKVCache] = None   # lazy device allocation
+        self.kv: Optional[PagedKVCache] = None   # guarded-by: self._cv | engine-loop
         # jitted steps (cached per input/cache shape signature)
+        # jit-ok: cache/toks shapes ARE the bucketing keys (view pad, _round_t)
         self._decode_jit = jax.jit(
             lambda p, tok, cache: self.model.decode_step(p, tok, cache))
+        # jit-ok: cold prefill; toks already padded to _PF_QUANTUM buckets
         self._prefill_jit = jax.jit(
             lambda p, toks: self.model.prefill(p, toks))
         if self._paged_layout:
+            # jit-ok: suffix chunks arrive _round_t-bucketed; n is traced
             self._chunk_prefill_jit = jax.jit(
                 lambda p, toks, cache, n: self.model.prefill_with_cache(
                     p, toks, cache, valid_len=n))
@@ -270,20 +274,21 @@ class InferenceEngine:
                 lambda p, tok, kp, vp, pt, ln: self.model.paged_decode_step(
                     p, tok, kp, vp, pt, ln),
                 donate_argnums=donate)
-        # scheduler state — owned by the loop thread
-        self._pending: "deque[_Request]" = deque()
-        self._active: List[_Slot] = []
-        self._warm: "OrderedDict[int, tuple]" = OrderedDict()  # seq -> prompt
-        self._view = None                # dense decode batch (device)
-        self._view_pad = 0
-        self._dirty = True
-        self._cv = threading.Condition()
+        # scheduler state — owned by the loop thread ("engine-loop"),
+        # shared with submitters/importers under _cv (DESIGN.md §11)
+        self._cv = named_condition("InferenceEngine._cv")
+        self._pending: "deque[_Request]" = deque()   # guarded-by: self._cv | engine-loop
+        self._active: List[_Slot] = []               # guarded-by: self._cv | engine-loop
+        self._warm: "OrderedDict[int, tuple]" = OrderedDict()  # guarded-by: self._cv | engine-loop
+        self._view = None                # guarded-by: self._cv | engine-loop
+        self._view_pad = 0               # guarded-by: self._cv | engine-loop
+        self._dirty = True               # guarded-by: self._cv | engine-loop
         self._loop_thread: Optional[threading.Thread] = None
-        self._stepping = False           # loop thread is inside _step()
-        self._shutdown = False
-        self._rid = 0
+        self._stepping = False           # guarded-by: self._cv
+        self._shutdown = False           # guarded-by: self._cv
+        self._rid = 0                    # guarded-by: self._cv
         self._zero_key = jax.random.PRNGKey(0)
-        self._last_submit = 0.0
+        self._last_submit = 0.0          # guarded-by: self._cv
 
     # ---------------------------------------------------------------- weights
     def load(self) -> float:
@@ -369,6 +374,7 @@ class InferenceEngine:
         self.stats.batches += 1
         return [h.result() for h in handles]
 
+    # requires: self._cv
     def _wait_idle_locked(self, deadline: float) -> None:
         """Wait (holding _cv) until the loop is quiescent: nothing queued,
         nothing in flight, and the loop thread is not inside _step().
@@ -396,6 +402,7 @@ class InferenceEngine:
             self.stats.peak_batch = len(self._active)
 
     # ------------------------------------------------------- kv migration
+    # requires: self._cv
     def _wait_step_gap_locked(self, deadline: float) -> None:
         """Wait (holding _cv) until the loop thread is between steps.
         While the caller keeps holding _cv, the loop cannot enter the
@@ -407,6 +414,7 @@ class InferenceEngine:
                 if time.monotonic() >= deadline:
                     raise TimeoutError("engine never paused between steps")
 
+    # requires: self._cv | engine-loop
     def _find_warm_donor(self, tokens: Sequence[int],
                          cap: Optional[int] = None):
         """Deepest valid warm donor covering a prefix of ``tokens``:
@@ -557,6 +565,7 @@ class InferenceEngine:
                 name=f"engine-{self.cfg.name}")
             self._loop_thread.start()
 
+    # runs-on: engine-loop
     def _run_loop(self) -> None:
         while True:
             with self._cv:
@@ -715,6 +724,7 @@ class InferenceEngine:
         h = zlib.crc32(np.asarray([req.max_new], np.int64).tobytes(), h)
         return jax.random.fold_in(jax.random.PRNGKey(self.seed), h)
 
+    # requires: self._cv | engine-loop
     def _ensure_kv(self) -> PagedKVCache:
         if self.kv is None:
             layers, kv_heads, head_dim = self._paged_layout
@@ -729,6 +739,7 @@ class InferenceEngine:
             except ValueError:       # already claimed as a duplicate
                 pass
 
+    # requires: self._cv | engine-loop
     def _reserved_pages(self) -> int:
         """Pages the in-flight batch may still allocate: each active slot
         appends one token's KV per remaining step (+1 for page-boundary
@@ -737,6 +748,7 @@ class InferenceEngine:
         ps = self.page_size
         return sum(-(-s.remaining // ps) + 1 for s in self._active)
 
+    # requires: self._cv | engine-loop
     def _ensure_pages(self, needed: int, protect: Optional[int] = None) -> None:
         """Evict warm sequences (LRU, never ``protect``) until ``needed``
         pages are free beyond the active batch's decode reservation;
@@ -1103,6 +1115,7 @@ class InferenceEngine:
         for f in slot.followers:
             f._fulfill(list(out))
 
+    # requires: self._cv | engine-loop
     def _maybe_prune_tree(self) -> None:
         """Rebuild the radix tree from live donors once stale entries
         dominate — evicted sequences leave nodes and stamped payloads

@@ -42,8 +42,13 @@ class SequenceEntry:
     length: int                      # tokens written
 
 
-class PagedKVCache:
-    """Device-resident paged KV store for ONE layer-stacked model."""
+class PagedKVCache:  # requires: InferenceEngine._cv | engine-loop
+    """Device-resident paged KV store for ONE layer-stacked model.
+
+    Thread contract: the cache has no lock of its own — every method
+    runs either on the owning engine's loop thread or under
+    ``InferenceEngine._cv`` (the engine's step-gap protocol serializes
+    the two; DESIGN.md §11)."""
 
     def __init__(self, num_layers: int, num_pages: int, page_size: int,
                  kv_heads: int, head_dim: int, dtype=jnp.float32):

@@ -53,6 +53,7 @@ class RadixPrefixTree:
         node = self.root
         node.count += 1
         for t in tokens:
+            # not-a-sync: tokens is the host-side prompt tuple
             node = node.children.setdefault(int(t), _Node())
             node.count += 1
             if stamp_path:
@@ -92,6 +93,7 @@ class RadixPrefixTree:
         found: List[Tuple[int, List[object]]] = [(0, node_payloads(node))]
         n = 0
         for t in tokens:
+            # not-a-sync: tokens is the host-side prompt tuple
             child = node.children.get(int(t))
             if child is None:
                 break

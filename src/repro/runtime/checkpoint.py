@@ -36,7 +36,9 @@ def load_batch_state(state: BatchState, path: str) -> int:
     """Populate ``state`` from a snapshot. Returns #results restored."""
     with open(path) as f:
         payload = json.load(f)
-    if payload["n_queries"] != state.n:
+    with state.lock:
+        n_queries = state.n
+    if payload["n_queries"] != n_queries:
         raise ValueError("checkpoint was taken with a different batch size")
     n = 0
     for q, node, val in payload["results"]:

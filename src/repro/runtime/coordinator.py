@@ -15,12 +15,12 @@
 """
 from __future__ import annotations
 
-import threading
 from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple)
 
 from repro.core.graphspec import GraphSpec, LLMDag
 from repro.core.plan import Epoch, ExecutionPlan
 from repro.core.state import WorkerContext
+from repro.debugsync import named_condition
 
 
 class BatchState:
@@ -35,29 +35,32 @@ class BatchState:
 
     def __init__(self, graph: GraphSpec, n_queries: int,
                  queries_of: Optional[Dict[str, Sequence[int]]] = None):
-        self.graph = graph
-        self.n = n_queries
-        self.lock = threading.Condition()
-        self.results: Dict[Tuple[int, str], str] = {}
-        self.node_done_count: Dict[str, int] = {v: 0 for v in graph.nodes}
+        self.lock = named_condition("BatchState.lock")
+        self.graph = graph               # guarded-by: self.lock
+        self.n = n_queries               # guarded-by: self.lock
+        self.results: Dict[Tuple[int, str], str] = {}  # guarded-by: self.lock
+        self.node_done_count: Dict[str, int] = {v: 0 for v in graph.nodes}  # guarded-by: self.lock
         if queries_of is None:
-            self.queries_of = {v: list(range(n_queries)) for v in graph.nodes}
+            self.queries_of = {v: list(range(n_queries)) for v in graph.nodes}  # guarded-by: self.lock
         else:
             self.queries_of = {v: sorted(queries_of.get(v, ()))
                                for v in graph.nodes}
-        self._query_sets = {v: set(qs) for v, qs in self.queries_of.items()}
-        self.expected = {v: len(qs) for v, qs in self.queries_of.items()}
+        self._query_sets = {v: set(qs) for v, qs in self.queries_of.items()}  # guarded-by: self.lock
+        self.expected = {v: len(qs) for v, qs in self.queries_of.items()}  # guarded-by: self.lock
         # zero-query nodes (an empty template slice) are done at birth
-        self.macro_done: Set[str] = {v for v, n in self.expected.items()
-                                     if n == 0}
+        self.macro_done: Set[str] = {  # guarded-by: self.lock
+            v for v, n in self.expected.items() if n == 0}
         # per-query SLO priority (DESIGN.md §10.3); absent = 0 = batch
-        self.query_priority: Dict[int, int] = {}
+        self.query_priority: Dict[int, int] = {}  # guarded-by: self.lock
+        # append-only, registered before the workers start; set_result
+        # iterates a snapshot outside the lock by design
         self._listeners: List[Callable[[int, str], None]] = []
 
     # ------------------------------------------------------------------
     def priority_of(self, q: int) -> int:
         """SLO-lane priority of query ``q`` (0 = batch lane)."""
-        return self.query_priority.get(q, 0)
+        with self.lock:
+            return self.query_priority.get(q, 0)
 
     def extend(self, graph: GraphSpec, n_new: int,
                queries_of: Optional[Dict[str, Sequence[int]]] = None,
@@ -118,13 +121,25 @@ class BatchState:
             fn(q, node)
         return macro
 
-    def queries_for(self, node: str) -> List[int]:
-        """Global query indices ``node`` serves (immutable per run)."""
+    # requires: self.lock
+    def queries_for_locked(self, node: str) -> List[int]:
+        """``queries_for`` for callers already inside ``self.lock``."""
         return list(self.queries_of[node])
+
+    def queries_for(self, node: str) -> List[int]:
+        """Global query indices ``node`` serves (grows only by graft)."""
+        with self.lock:
+            return list(self.queries_of[node])
 
     def serves(self, q: int, node: str) -> bool:
         """True when query ``q`` belongs to ``node``'s template slice."""
-        return q in self._query_sets[node]
+        with self.lock:
+            return q in self._query_sets[node]
+
+    def is_macro_done(self, node: str) -> bool:
+        """True once every query of ``node`` has a result."""
+        with self.lock:
+            return node in self.macro_done
 
     def macro_ready(self, node: str) -> bool:
         """All parents complete for ALL queries (LLM barrier readiness)."""
@@ -167,21 +182,24 @@ class PlanBoard:
     """
 
     def __init__(self, plan: ExecutionPlan, dag: LLMDag, num_workers: int):
-        self.lock = threading.Condition()
-        self.dag = dag
+        self.lock = named_condition("PlanBoard.lock")
+        self.dag = dag                   # guarded-by: self.lock
         self.W = num_workers
-        self.seqs: List[List[str]] = plan.worker_sequences(num_workers)
-        self.claimed: List[str] = []                   # global claim order
-        self.claimed_set: Set[str] = set()
-        self.claim_chain: List[List[str]] = [[] for _ in range(num_workers)]
-        self.overflow: List[str] = []                  # from failed workers
-        self.dead: Set[int] = set()                    # abandoned workers
-        self.splices = 0
+        self.seqs: List[List[str]] = plan.worker_sequences(num_workers)  # guarded-by: self.lock
+        self.claimed: List[str] = []     # guarded-by: self.lock
+        self.claimed_set: Set[str] = set()  # guarded-by: self.lock
+        self.claim_chain: List[List[str]] = [  # guarded-by: self.lock
+            [] for _ in range(num_workers)]
+        self.overflow: List[str] = []    # guarded-by: self.lock
+        self.dead: Set[int] = set()      # guarded-by: self.lock
+        self.splices = 0                 # guarded-by: self.lock
 
     # ------------------------------------------------------------------
+    # requires: self.lock
     def _releasable(self, nid: str) -> bool:
         return all(p in self.claimed_set for p in self.dag.parents(nid))
 
+    # requires: self.lock
     def _claim_locked(self, wid: int, nid: str) -> str:
         self.claimed.append(nid)
         self.claimed_set.add(nid)
@@ -237,6 +255,7 @@ class PlanBoard:
                     if n not in self.claimed_set}
 
     # ------------------------------------------------------------------
+    # requires: self.lock
     def contexts_locked(self) -> Tuple[WorkerContext, ...]:
         """Live per-worker contexts implied by each claim chain.
         Caller must hold ``self.lock``."""
@@ -252,6 +271,7 @@ class PlanBoard:
         with self.lock:
             return self.contexts_locked()
 
+    # requires: self.lock
     def claimed_prefix_epochs_locked(self) -> List[Epoch]:
         """The executed prefix as singleton epochs in claim order — valid
         by construction because claims follow DAG topological order.
@@ -266,6 +286,7 @@ class PlanBoard:
         with self.lock:
             return self.claimed_prefix_epochs_locked()
 
+    # requires: self.lock
     def _splice_locked(self, tail: ExecutionPlan) -> None:
         seqs = tail.worker_sequences(self.W)
         self.seqs = [[n for n in seqs[w] if n not in self.claimed_set]

@@ -26,6 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.core.coalesce import CoalesceTable
 from repro.core.graphspec import GraphSpec
 from repro.core.parser import render
+from repro.debugsync import named_lock
 from repro.engine.engine import InferenceEngine, RequestHandle
 from repro.engine.tokenizer import detokenize, tokenize
 from repro.runtime.coordinator import BatchState, PlanBoard
@@ -43,20 +44,23 @@ class EngineHost:
         self.model_configs = model_configs
         self.seed = seed
         self.engine_kwargs = dict(engine_kwargs or {})
-        self._engines: Dict[str, InferenceEngine] = {}
         # guards engine creation: the worker thread (engine_for) and the
         # migrator (engine_for_import, monitor thread) may first-touch
         # the same model concurrently during a mid-run splice
-        self._engines_lock = threading.Lock()
-        self.resident: Optional[str] = None
-        self.switches = 0
-        self.switch_seconds = 0.0
+        self._engines_lock = named_lock("EngineHost._engines_lock")
+        self._engines: Dict[str, InferenceEngine] = {}  # guarded-by: self._engines_lock
+        # resident/switch bookkeeping belongs to the one worker thread
+        # that owns this host's model slot — the migrator and monitor
+        # go through engine_for_import, which never switches residency
+        self.resident: Optional[str] = None             # guarded-by: gpu-worker
+        self.switches = 0                               # guarded-by: gpu-worker
+        self.switch_seconds = 0.0                       # guarded-by: gpu-worker
         # node -> recent prompt token tuples served here; the KVMigrator
         # reads this to know WHICH warm prefixes a replan strands when it
         # moves the node to another worker.  Persists with the host
         # across micro-batch runs (like the engines' warm pages).
-        self._prompt_log: Dict[str, List[tuple]] = {}
-        self._log_lock = threading.Lock()
+        self._log_lock = named_lock("EngineHost._log_lock")
+        self._prompt_log: Dict[str, List[tuple]] = {}   # guarded-by: self._log_lock
 
     def _get_engine(self, model: str) -> InferenceEngine:
         with self._engines_lock:
@@ -66,11 +70,16 @@ class EngineHost:
                     **self.engine_kwargs)
             return self._engines[model]
 
+    # runs-on: gpu-worker
     def engine_for(self, model: str) -> InferenceEngine:
         eng = self._get_engine(model)
         if self.resident != model:
-            if self.resident is not None:
-                self._engines[self.resident].unload()
+            prev = (self.peek_engine(self.resident)
+                    if self.resident is not None else None)
+            if prev is not None:
+                # unload/load run OUTSIDE _engines_lock: they move real
+                # params and must not block the migrator's peek
+                prev.unload()
                 self.switches += 1
             self.switch_seconds += eng.load()
             self.resident = model
@@ -103,6 +112,7 @@ class EngineHost:
         with self._log_lock:
             return list(self._prompt_log.get(nid, ()))
 
+    # runs-on: gpu-worker
     def submit(self, model: str, prompts: Sequence[Sequence[int]], *,
                max_new_tokens: int = 16, temperature: float = 0.0,
                extras: Optional[List[Dict[str, Any]]] = None,
@@ -122,9 +132,14 @@ class EngineHost:
                            temperature=temperature, extra=e, priority=pr)
                 for p, e, pr in zip(prompts, extras, prios)]
 
+    def engines(self) -> List[InferenceEngine]:
+        """Snapshot of every engine ever created on this host."""
+        with self._engines_lock:
+            return list(self._engines.values())
+
     def shutdown(self) -> None:
         """Stop every engine's loop thread (stats stay readable)."""
-        for eng in self._engines.values():
+        for eng in self.engines():
             eng.shutdown()
 
 
@@ -140,12 +155,12 @@ class GPUWorkerThread(threading.Thread):
         super().__init__(daemon=True, name=f"gpu{wid}")
         self.wid = wid
         self.board = board
-        self.graph = graph
+        self.graph = graph                              # swap-only
         self.state = state
         self.bindings = bindings
         self.host = host
-        self.records = records
-        self.records_lock = records_lock
+        self.records = records              # guarded-by: self.records_lock
+        self.records_lock = records_lock    # lock-alias: ProcessorSession._rlock
         self.t0 = t0
         self.die_after = die_after
         self.pipelining = pipelining
@@ -161,17 +176,19 @@ class GPUWorkerThread(threading.Thread):
         # (never exits on exhaustion — a graft may hand it new work) and
         # only returns once the event fires (DESIGN.md §10.1)
         self.stop_event = stop_event
-        self.executed = 0
-        self.error: Optional[BaseException] = None
-        self._outstanding: List[RequestHandle] = []
-        self._my_claims: List[str] = []
+        self.executed = 0                               # guarded-by: gpu-worker
+        self.error: Optional[BaseException] = None      # swap-only
+        self._outstanding: List[RequestHandle] = []     # guarded-by: gpu-worker
+        self._my_claims: List[str] = []                 # guarded-by: gpu-worker
 
+    # runs-on: any
     def rebind(self, graph: GraphSpec) -> None:
         """Adopt a grafted supergraph (atomic reference swap; node specs
         already claimed are identical in the new graph)."""
         self.graph = graph
 
     # ------------------------------------------------------------------
+    # runs-on: any
     def _fail(self, err: BaseException) -> None:
         if self.error is None:
             self.error = err
@@ -186,7 +203,7 @@ class GPUWorkerThread(threading.Thread):
     # ----------------------------------------------------- barrier mode
     def _run_node_barrier(self, nid: str) -> None:
         spec = self.graph.nodes[nid]
-        if nid in self.state.macro_done:
+        if self.state.is_macro_done(nid):
             return                                   # restored from checkpoint
         # the board releases claims on parents-CLAIMED, so this wait is
         # real in barrier mode — give it the same 600s budget as every
@@ -298,6 +315,7 @@ class GPUWorkerThread(threading.Thread):
             ready = grown
         return sorted(ready)
 
+    # runs-on: any
     def _on_request_done(self, nid: str, q: int, node_track: dict,
                          wave_track: dict, tlock: threading.Lock):
         """Per-handle callback: publish this query's result immediately
@@ -309,6 +327,7 @@ class GPUWorkerThread(threading.Thread):
                 self._fail(e)
         return _cb
 
+    # runs-on: any
     def _publish(self, h: RequestHandle, nid: str, q: int,
                  node_track: dict, wave_track: dict,
                  tlock: threading.Lock) -> None:
@@ -359,6 +378,7 @@ class GPUWorkerThread(threading.Thread):
             return self.stop_event.is_set()
         return self.state.all_done()
 
+    # runs-on: gpu-worker
     def run(self) -> None:
         """Claim nodes off the board until nothing is left for us; pick
         up failed peers' overflow work the moment it is claimable.  In
@@ -421,7 +441,7 @@ class ToolDispatcher(threading.Thread):
                  t0: float, cpu_slots: int = 8, coalescing: bool = True,
                  optimizer=None, persistent: bool = False):
         super().__init__(daemon=True, name="tool-dispatcher")
-        self.graph = graph
+        self.graph = graph                              # swap-only
         # session mode: outlive batch completion (a graft may add work);
         # the owner is responsible for stop()
         self.persistent = persistent
@@ -429,26 +449,27 @@ class ToolDispatcher(threading.Thread):
         self.state = state
         self.bindings = bindings
         self.tools = tools
-        self.records = records
-        self.records_lock = records_lock
+        self.records = records              # guarded-by: self.records_lock
+        self.records_lock = records_lock    # lock-alias: ProcessorSession._rlock
         self.t0 = t0
         self.optimizer = optimizer
         self.pool = ThreadPoolExecutor(max_workers=cpu_slots)
         self.table = CoalesceTable(enabled=coalescing)
-        self.dispatched: set = set()
+        self.dispatched: set = set()            # guarded-by: tool-dispatcher
         self.stop_flag = threading.Event()
-        self.error: Optional[BaseException] = None
+        self.error: Optional[BaseException] = None      # swap-only
         self._events: "_q.SimpleQueue" = _q.SimpleQueue()
         self._wake = threading.Event()
-        self._depth = {t: len(graph.ancestors(t))
+        self._depth = {t: len(graph.ancestors(t))       # swap-only
                        for t in graph.tool_nodes()}
-        self._tool_children = {
+        self._tool_children = {                         # swap-only
             nid: [c for c in graph.children(nid)
                   if not graph.nodes[c].is_llm()]
             for nid in graph.nodes}
         state.add_listener(self._on_result)
 
     # ------------------------------------------------------------------
+    # runs-on: any
     def _on_result(self, q: int, node: str) -> None:
         """BatchState listener — runs on the producing thread; enqueue
         and wake only (no dispatch work here)."""
@@ -459,6 +480,7 @@ class ToolDispatcher(threading.Thread):
         self.stop_flag.set()
         self._wake.set()
 
+    # runs-on: any
     def rebind(self, graph: GraphSpec) -> None:
         """Adopt a grafted supergraph and force a full dispatch sweep.
 
@@ -477,6 +499,7 @@ class ToolDispatcher(threading.Thread):
         self._wake.set()
 
     # ------------------------------------------------------------------
+    # runs-on: cpu-pool
     def _execute(self, sig: str, op: str, args: str, origin: str) -> None:
         try:
             ts = time.perf_counter() - self.t0
@@ -554,6 +577,7 @@ class ToolDispatcher(threading.Thread):
                 n += 1
         return n
 
+    # runs-on: tool-dispatcher
     def run(self) -> None:
         try:
             self._scan()

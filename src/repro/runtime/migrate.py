@@ -30,11 +30,11 @@ migration on, off, or forced (asserted in tests).
 """
 from __future__ import annotations
 
-import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel
 from repro.core.graphspec import GraphSpec
+from repro.debugsync import named_lock
 
 
 class KVMigrator:
@@ -44,7 +44,7 @@ class KVMigrator:
     def __init__(self, graph: GraphSpec, hosts: Sequence,
                  cost_model: Optional[CostModel] = None,
                  link_bandwidth: Optional[float] = None):
-        self.graph = graph
+        self.graph = graph                       # swap-only
         self.hosts = list(hosts)
         self.cm = cost_model
         # the wire model pricing migrate_seconds MUST be the same link
@@ -55,16 +55,20 @@ class KVMigrator:
             link_bandwidth = (cost_model.hw.link_bw
                               if cost_model is not None else 16e9)
         self.link_bandwidth = link_bandwidth     # bytes/s
-        self.lock = threading.Lock()
-        # outcomes (RunReport surfacing)
-        self.nodes_moved = 0                     # assignment changes seen
-        self.nodes_migrated = 0                  # moves with >=1 prefix sent
-        self.prefixes_migrated = 0
-        self.pages_migrated = 0
-        self.tokens_migrated = 0
-        self.migrate_seconds = 0.0               # modeled link-transfer time
-        self.skipped_recompute = 0               # transfer lost to re-prefill
-        self.transfer_errors = 0                 # best-effort failures swallowed
+        # serializes the outcome counters: splice-time migration (the
+        # monitor thread) and claim-time pulls (worker threads) overlap
+        self.lock = named_lock("KVMigrator.lock")
+        # outcomes (RunReport surfacing): assignment changes seen, moves
+        # with >=1 prefix sent, modeled link-transfer seconds, transfers
+        # lost to re-prefill, best-effort failures swallowed
+        self.nodes_moved = 0                    # guarded-by: self.lock
+        self.nodes_migrated = 0                 # guarded-by: self.lock
+        self.prefixes_migrated = 0              # guarded-by: self.lock
+        self.pages_migrated = 0                 # guarded-by: self.lock
+        self.tokens_migrated = 0                # guarded-by: self.lock
+        self.migrate_seconds = 0.0              # guarded-by: self.lock
+        self.skipped_recompute = 0              # guarded-by: self.lock
+        self.transfer_errors = 0                # guarded-by: self.lock
 
     # ------------------------------------------------------------------
     def assignment_diff(self, board, tail) -> List[Tuple[str, int, int]]:

@@ -22,13 +22,13 @@ reorder *unclaimed* work, so outputs are untouched (asserted in tests).
 """
 from __future__ import annotations
 
-import threading
 from typing import Dict, List, Optional
 
 from repro.core.cost_model import CostModel, HardwareCalibration
 from repro.core.plan import Epoch, ExecutionPlan
 from repro.core.solver import EpochDPSolver, SolverConfig
 from repro.core.state import SystemState
+from repro.debugsync import named_lock
 from repro.runtime.coordinator import PlanBoard
 
 
@@ -41,29 +41,35 @@ class OnlineOptimizer:
                  calibration_alpha: float = 0.5,
                  max_replans: int = 8):
         self.cm = cost_model
-        self.dag = cost_model.graph.llm_dag()
+        # the live LLM DAG: rebound whole by bind_graph/adopt_graft,
+        # read lock-free by the replan path (one coherent snapshot)
+        self.dag = cost_model.graph.llm_dag()       # swap-only
         self.solver_config = solver_config or SolverConfig()
         self.drift_threshold = drift_threshold
         self.calib = HardwareCalibration(cost_model.hw,
                                          alpha=calibration_alpha)
         self.max_replans = max_replans
-        self.lock = threading.Lock()
+        # serializes calibration/observation state: workers observe from
+        # their own threads while the monitor loop evaluates drift
+        self.lock = named_lock("OnlineOptimizer.lock")
         # plan bookkeeping
-        self.plan: Optional[ExecutionPlan] = None
-        self._epoch_nodes: List[List[str]] = []
-        self._evaluated: set = set()
-        self._llm_obs: Dict[str, tuple] = {}     # nid -> (worker, seconds)
-        self._llm_partial: Dict[str, tuple] = {}  # waves of unfinished nodes
+        self.plan: Optional[ExecutionPlan] = None   # guarded-by: self.lock
+        self._epoch_nodes: List[List[str]] = []     # guarded-by: self.lock
+        self._evaluated: set = set()                # guarded-by: self.lock
+        # nid -> (worker, seconds); waves of unfinished nodes
+        self._llm_obs: Dict[str, tuple] = {}        # guarded-by: self.lock
+        self._llm_partial: Dict[str, tuple] = {}    # guarded-by: self.lock
         # outcomes
-        self.replans = 0
-        self.epoch_drifts: List[Dict[str, float]] = []
-        self.predicted_errors: List[float] = []  # |pred-obs|/obs per LLM node
-        self.spliced_plan: Optional[ExecutionPlan] = None
-        self._queued_tail: Optional[ExecutionPlan] = None
+        self.replans = 0                            # guarded-by: self.lock
+        self.epoch_drifts: List[Dict[str, float]] = []  # guarded-by: self.lock
+        # |pred-obs|/obs per LLM node
+        self.predicted_errors: List[float] = []     # guarded-by: self.lock
+        self.spliced_plan: Optional[ExecutionPlan] = None  # guarded-by: self.lock
+        self._queued_tail: Optional[ExecutionPlan] = None  # guarded-by: self.lock
         # per-node SLO priority mass (session grafts set this); drift
         # replans re-solve with the same weights the graft solve used,
         # so a replan never silently drops the interactive lanes
-        self.node_priorities: Dict[str, float] = {}
+        self.node_priorities: Dict[str, float] = {}  # guarded-by: self.lock
 
     # ------------------------------------------------------------------
     def bind_graph(self, graph) -> None:
@@ -190,6 +196,7 @@ class OnlineOptimizer:
                 self._llm_partial[node_id] = (worker, spans, plain)
 
     # ----------------------------------------------------- replanning
+    # requires: self.lock
     def _observed_epoch_cost(self, nodes: List[str]) -> float:
         """Observed per-worker busy times scored with the SAME blend the
         solver used for the prediction (CostModel.epoch_blend)."""
@@ -252,8 +259,10 @@ class OnlineOptimizer:
             contexts = board.contexts_locked()
         if len(done) == len(self.dag.node_ids):
             return False                          # nothing left to replan
+        with self.lock:                 # a graft may grow these mid-solve
+            prios = dict(self.node_priorities)
         solver = EpochDPSolver(self.dag, self.cm, self.solver_config,
-                               priorities=self.node_priorities)
+                               priorities=prios)
         tail = solver.solve(initial=SystemState(done, contexts))
         return self._apply_tail(board, tail, migrator)
 
@@ -279,7 +288,9 @@ class OnlineOptimizer:
                                     e.predicted_cost))
         tail = ExecutionPlan(epochs, tail.predicted_cost,
                              scheduler_name=tail.scheduler_name)
-        base = (self.plan.scheduler_name if self.plan is not None else "") \
+        with self.lock:                 # attach_plan may swap the plan
+            plan = self.plan
+        base = (plan.scheduler_name if plan is not None else "") \
             or "halo-dp"
         spliced = ExecutionPlan(
             epochs=prefix + tail.epochs,

@@ -36,6 +36,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
 from repro.core import HARDWARE, PAPER_MODELS
+from repro.core.coalesce import CoalesceTable
 from repro.core.consolidate import (ConsolidatedGraph,
                                     MultiConsolidatedGraph,
                                     consolidate_multi)
@@ -44,6 +45,7 @@ from repro.core.graphspec import GraphSpec
 from repro.core.plan import ExecutionPlan
 from repro.core.solver import EpochDPSolver, SolverConfig
 from repro.core.state import SLO_CLASSES, SLOClass, SystemState
+from repro.debugsync import named_lock
 from repro.runtime.checkpoint import load_batch_state
 from repro.runtime.coordinator import BatchState, PlanBoard
 from repro.runtime.events import RunReport, TaskRecord
@@ -109,12 +111,14 @@ class QueryHandle:
         self._state = state
         self._submit_t = submit_t
         self._llm = set(llm_nodes)
-        self._remaining = set(nodes)
-        self._lock = threading.Lock()
+        self._remaining = set(nodes)                # guarded-by: self._lock
+        self._lock = named_lock("QueryHandle._lock")
         self._event = threading.Event()
-        self._first_llm_t: Optional[float] = None
-        self._error: Optional[BaseException] = None
-        self._callbacks: List[Callable[["QueryHandle"], None]] = []
+        self._first_llm_t: Optional[float] = None   # guarded-by: self._lock
+        # error latch: written once under _lock, read freely after the
+        # completion event fires (the event is the publication barrier)
+        self._error: Optional[BaseException] = None     # swap-only
+        self._callbacks: List[Callable[["QueryHandle"], None]] = []  # guarded-by: self._lock
         if not self._remaining:                 # empty template slice
             self._event.set()
 
@@ -208,32 +212,36 @@ class ProcessorSession:
         self._started = False
         self._closed = False
         self._stop = threading.Event()
-        self._graft_lock = threading.Lock()     # serializes submits
-        self._error: Optional[BaseException] = None
+        # serializes submits (bootstrap/graft) against the monitor's
+        # replan heartbeat; also guards the session topology refs below
+        self._graft_lock = named_lock("ProcessorSession._graft_lock")
+        # error latch: swapped in by the monitor/worker side, read by
+        # the submitting side (drain re-raises it)
+        self._error: Optional[BaseException] = None     # swap-only
         # populated by open()/bootstrap
         self.hosts: Optional[List[EngineHost]] = None
         self._own_hosts = False
         self.optimizer = None
-        self._cons: Optional[ConsolidatedGraph] = None
-        self.graph: Optional[GraphSpec] = None
+        self._cons: Optional[ConsolidatedGraph] = None  # guarded-by: self._graft_lock
+        self.graph: Optional[GraphSpec] = None      # guarded-by: self._graft_lock
         self.state: Optional[BatchState] = None
         self.board: Optional[PlanBoard] = None
         self.dispatcher: Optional[ToolDispatcher] = None
         self.workers: List[GPUWorkerThread] = []
         self.migrator: Optional[KVMigrator] = None
         self._monitor: Optional[threading.Thread] = None
-        self._records: List[TaskRecord] = []
-        self._rlock = threading.Lock()
+        self._rlock = named_lock("ProcessorSession._rlock")
+        self._records: List[TaskRecord] = []        # guarded-by: self._rlock
         self._t0 = 0.0
-        self._cm: Optional[CostModel] = None
+        self._cm: Optional[CostModel] = None        # guarded-by: self._graft_lock
         self._solver_config = SolverConfig(num_workers=self.W)
-        self._node_prio: Dict[str, float] = {}
-        self._handles: Dict[int, QueryHandle] = {}
-        self._plan_name = ""
-        self._restored = 0
-        self._base_counters: Dict[str, int] = {}
-        self._base_replans = 0
-        self.grafts = 0
+        self._node_prio: Dict[str, float] = {}      # guarded-by: self._graft_lock
+        self._handles: Dict[int, QueryHandle] = {}  # guarded-by: self._graft_lock
+        self._plan_name = ""                        # guarded-by: self._graft_lock
+        self._restored = 0                          # guarded-by: self._graft_lock
+        self._base_counters: Dict[str, int] = {}    # guarded-by: self._graft_lock
+        self._base_replans = 0                      # guarded-by: self._graft_lock
+        self.grafts = 0                             # guarded-by: self._graft_lock
 
     # --------------------------------------------------------- lifecycle
     def open(self, hosts: Optional[List[EngineHost]] = None,
@@ -333,12 +341,14 @@ class ProcessorSession:
     def _priority(self, slo_cls: SLOClass) -> int:
         return slo_cls.priority if self.config.priority_admission else 0
 
+    # requires: self._graft_lock
     def _build_cm(self) -> CostModel:
         return CostModel(self.graph, HARDWARE["h200"], PAPER_MODELS,
                          batch_sizes=self._cons.batch_sizes(),
                          use_migration=self.config.kv_migration,
                          warm_aliases=self._cons.warm_aliases())
 
+    # requires: self._graft_lock
     def _register_handles(self, queries: Sequence[int],
                           slo_cls: SLOClass) -> List[QueryHandle]:
         now = time.perf_counter()
@@ -359,11 +369,13 @@ class ProcessorSession:
             self._handles[q]._note(node)
         return out
 
+    # runs-on: any
     def _on_result(self, q: int, node: str) -> None:
         h = self._handles.get(q)
         if h is not None:
             h._note(node)
 
+    # requires: self._graft_lock
     def _bootstrap(self, cons: ConsolidatedGraph,
                    plan: Optional[ExecutionPlan], slo: SLOClass,
                    graph: Optional[GraphSpec] = None,
@@ -376,8 +388,9 @@ class ProcessorSession:
         self.state = BatchState(self.graph, cons.n_queries,
                                 queries_of=cons.queries_map())
         prio = self._priority(slo)
-        self.state.query_priority = {q: prio
-                                     for q in range(cons.n_queries)}
+        with self.state.lock:
+            self.state.query_priority = {q: prio
+                                         for q in range(cons.n_queries)}
         if prio:
             self._node_prio = {nid: float(prio)
                                for nid in self.graph.llm_nodes()}
@@ -415,7 +428,7 @@ class ProcessorSession:
 
         self._base_counters = self._engine_totals(self.hosts)
         for h in self.hosts:                    # per-session watermark
-            for e in h._engines.values():
+            for e in h.engines():
                 e.reset_peak_batch()
 
         if cfg.kv_migration:
@@ -455,6 +468,7 @@ class ProcessorSession:
         self._started = True
         return handles
 
+    # runs-on: session-monitor
     def _monitor_loop(self) -> None:
         """Error watch + the replanning heartbeat (drift evaluation runs
         on this thread, exactly like the one-shot monitor loop)."""
@@ -483,6 +497,7 @@ class ProcessorSession:
             self._stop.wait(timeout=0.05)
 
     # ------------------------------------------------------------ graft
+    # requires: self._graft_lock
     def _graft(self, template: GraphSpec,
                bindings: Sequence[Dict[str, str]],
                slo_cls: SLOClass) -> List[QueryHandle]:
@@ -613,15 +628,16 @@ class ProcessorSession:
     # ---------------------------------------------------------- report
     @staticmethod
     def _engine_totals(hosts: List[EngineHost]) -> Dict[str, int]:
-        engines = [e for h in hosts for e in h._engines.values()]
+        engines = [e for h in hosts for e in h.engines()]
         out = {k: sum(getattr(e.stats, k) for e in engines)
                for k in _ENGINE_COUNTERS}
         out["model_switches"] = sum(h.switches for h in hosts)
         return out
 
     @staticmethod
+    # requires: BatchState.lock
     def _cross_template_stats(cons: ConsolidatedGraph,
-                              table) -> Dict[str, int]:
+                              table: CoalesceTable) -> Dict[str, int]:
         """Runtime cross-template coalescing: physical tool executions
         whose logical requesters span >= 2 templates (the merges only a
         multi-template mega-DAG makes possible)."""
@@ -659,16 +675,16 @@ class ProcessorSession:
             name=plan_name, makespan=time.perf_counter() - self._t0,
             records=self._records, num_queries=cons.n_queries,
             num_workers=self.W)
-        report.coalesce_stats = {
-            "tool_logical": dispatcher.table.logical_requests,
-            "tool_physical": dispatcher.table.physical_executions,
-            "tool_dedup_ratio": dispatcher.table.dedup_ratio,
-            "restored_results": self._restored,
-        }
-        if cons.n_templates > 1:
-            report.coalesce_stats.update(
-                self._cross_template_stats(cons, dispatcher.table))
-        with self.state.lock:
+        with self.state.lock:           # the table is guarded by it
+            report.coalesce_stats = {
+                "tool_logical": dispatcher.table.logical_requests,
+                "tool_physical": dispatcher.table.physical_executions,
+                "tool_dedup_ratio": dispatcher.table.dedup_ratio,
+                "restored_results": self._restored,
+            }
+            if cons.n_templates > 1:
+                report.coalesce_stats.update(
+                    self._cross_template_stats(cons, dispatcher.table))
             results = dict(self.state.results)
         report.extra["results"] = {           # type: ignore[assignment]
             f"{q}:{node}": val
@@ -679,14 +695,15 @@ class ProcessorSession:
         for key, cur in totals.items():
             report.extra[key] = max(cur - self._base_counters.get(key, 0),
                                     0)
-        engines = [e for h in self.hosts for e in h._engines.values()]
+        engines = [e for h in self.hosts for e in h.engines()]
         # per-run gauge: watermarks were reset at bootstrap, so the max
         # is THIS session's peak concurrency, not an earlier run's
         report.extra["peak_batch"] = max(
             (e.stats.peak_batch for e in engines), default=0)
         report.extra["cpu_gpu_overlap_s"] = round(
             report.cpu_gpu_overlap(), 6)
-        report.extra["plan_splices"] = self.board.splices
+        with self.board.lock:
+            report.extra["plan_splices"] = self.board.splices
         report.extra["grafts"] = self.grafts
         if self.optimizer is not None:
             report.extra["replans"] = (self.optimizer.replans

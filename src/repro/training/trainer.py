@@ -85,6 +85,7 @@ def train_loop(cfg: ModelConfig, tcfg: TrainerConfig, data_cfg: DataConfig,
             step0, params, opt_state, _ = load_checkpoint(
                 latest, (params, opt_state))
 
+    # jit-ok: the step closure bakes cfg/tcfg in; batches are fixed-shape
     step_fn = jax.jit(make_train_step(cfg, tcfg))
     losses = []
     t0 = time.perf_counter()

@@ -1,0 +1,12 @@
+"""Fixture: the same sync as hostsync_bad, but budgeted through the
+sibling allow.toml — the run must pass (and the entry count as a
+'sync' toward the budget)."""
+
+
+class Engine:
+    def _decode(self):
+        return object()             # stands in for a device array
+
+    def _step(self):
+        x = self._decode()
+        return int(x[0])            # allowlisted in allow.toml

@@ -1,0 +1,11 @@
+"""Fixture: a device->host sync inside the hot path (roots are
+passed as Engine._step by the test)."""
+
+
+class Engine:
+    def _decode(self):
+        return object()             # stands in for a device array
+
+    def _step(self):
+        x = self._decode()
+        return int(x[0])            # <- device sync, must be flagged

@@ -1,0 +1,18 @@
+"""Fixture: a len()-derived batch size flows into a jitted entry's
+input shape without _PF_QUANTUM-class bucketing — every distinct
+batch recompiles."""
+import jax
+import jax.numpy as jnp
+
+
+def _fn(x):
+    return x * 2
+
+
+_step = jax.jit(_fn, static_argnums=())
+
+
+def run(tokens):
+    n = len(tokens)
+    x = jnp.zeros((n, 4))           # <- unbucketed shape, must be flagged
+    return _step(x)

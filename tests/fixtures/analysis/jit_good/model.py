@@ -1,0 +1,23 @@
+"""Fixture: same shape flow as jit_bad, but the batch size passes
+through a bucketing helper first — the checker must stay silent."""
+import jax
+import jax.numpy as jnp
+
+_PF_QUANTUM = 16
+
+
+def _round_b(n):
+    return ((n + _PF_QUANTUM - 1) // _PF_QUANTUM) * _PF_QUANTUM
+
+
+def _fn(x):
+    return x * 2
+
+
+_step = jax.jit(_fn, static_argnums=())
+
+
+def run(tokens):
+    n = _round_b(len(tokens))
+    x = jnp.zeros((n, 4))
+    return _step(x)

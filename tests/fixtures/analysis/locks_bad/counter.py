@@ -1,0 +1,15 @@
+"""Fixture: a guarded attribute written without its lock."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.value = 0              # guarded-by: self.lock
+
+    def bump_locked(self):
+        with self.lock:
+            self.value += 1
+
+    def bump_racy(self):
+        self.value += 1             # <- the checker must flag this

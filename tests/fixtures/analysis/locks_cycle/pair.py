@@ -1,0 +1,19 @@
+"""Fixture: two locks acquired in opposite orders — a lock-order
+cycle the checker must fail on."""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self.a = threading.Lock()
+        self.b = threading.Lock()
+
+    def ab(self):
+        with self.a:
+            with self.b:
+                pass
+
+    def ba(self):
+        with self.b:
+            with self.a:
+                pass

@@ -1,0 +1,22 @@
+"""Fixture: every guarded access is dominated by its lock (or a
+requires contract) — the checker must stay silent."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.value = 0              # guarded-by: self.lock
+        self.label = ""             # swap-only
+
+    def bump(self):
+        with self.lock:
+            self.value += 1
+            self._bump_locked()
+
+    # requires: self.lock
+    def _bump_locked(self):
+        self.value += 1
+
+    def relabel(self, s):
+        self.label = s              # whole-reference swap: allowed

@@ -1,0 +1,248 @@
+"""Static-analysis checkers (tools/analysis) + debugsync runtime verifier.
+
+Covers DESIGN.md §11: the fixture corpus under tests/fixtures/analysis/,
+the tree-is-clean gate the CI ``analysis`` job enforces, a seeded
+in-memory violation smoke, the CLI exit codes, the REPRO_DEBUG_SYNC
+lock-order verifier, and regressions for the concurrency fixes the
+checkers surfaced.
+"""
+import pathlib
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.analysis import DEFAULT_SRC, run  # noqa: E402
+from repro import debugsync  # noqa: E402
+
+FX = REPO / "tests" / "fixtures" / "analysis"
+# intentionally absent -> empty allowlist (run() must NOT fall back to
+# the real one when analyzing a fixture tree)
+NO_ALLOW = FX / "no-allowlist.toml"
+
+
+def _fixture(case, allow=None, roots=("Engine._step",)):
+    return run(root=FX / case,
+               allowlist=allow if allow is not None else NO_ALLOW,
+               roots=roots)
+
+
+# ---------------------------------------------------------------- tree gate
+
+
+def test_tree_is_clean_strict():
+    res = run()
+    assert res.ok(strict=True), "\n".join(
+        [f.render() for f in res.findings + res.config_errors]
+        + res.allow_errors + [f"UNUSED {e.site}" for e in res.unused])
+
+
+def test_tree_counts_are_sane():
+    c = run().counts
+    assert c["named_locks"] >= 10
+    assert c["guarded_attrs"] >= 50
+    assert c["jit_sites"] >= 10
+    assert c["hot_path_functions"] >= 20
+    assert c["findings"] == 0
+
+
+# ---------------------------------------------------------------- fixtures
+
+
+def test_unguarded_write_is_caught():
+    res = _fixture("locks_bad")
+    assert not res.ok()
+    [f] = res.findings
+    assert f.checker == "locks"
+    assert f.qualname == "Counter.bump_racy"
+    assert "guarded-by Counter.lock" in f.message
+
+
+def test_guarded_write_is_clean():
+    res = _fixture("locks_good")
+    assert res.ok(strict=True)
+    assert res.findings == []
+
+
+def test_lock_order_cycle_is_caught():
+    res = _fixture("locks_cycle")
+    assert not res.ok()
+    [f] = res.findings
+    assert f.checker == "locks" and f.symbol == "cycle"
+    assert "Pair.a -> Pair.b" in f.message
+    assert "Pair.b -> Pair.a" in f.message
+
+
+def test_unbucketed_jit_arg_is_caught():
+    res = _fixture("jit_bad")
+    assert not res.ok()
+    [f] = res.findings
+    assert f.checker == "jit" and f.symbol == "_step"
+    assert "bucketing" in f.message
+
+
+def test_bucketed_jit_arg_is_clean():
+    res = _fixture("jit_good")
+    assert res.ok(strict=True)
+    assert res.findings == []
+
+
+def test_hot_path_sync_is_caught():
+    res = _fixture("hostsync_bad")
+    assert not res.ok()
+    [f] = res.findings
+    assert f.checker == "hostsync" and f.symbol == "int"
+    assert f.qualname == "Engine._step"
+
+
+def test_allowlisted_sync_passes_and_counts():
+    res = _fixture("hostsync_allowed",
+                   allow=FX / "hostsync_allowed" / "allow.toml")
+    assert res.ok(strict=True)
+    assert len(res.suppressed) == 1
+    assert res.counts["syncs_allowed"] == 1
+
+
+def test_allowlist_entry_without_reason_is_an_error(tmp_path):
+    bad = tmp_path / "allow.toml"
+    bad.write_text('[[allow]]\nchecker = "hostsync"\n'
+                   'site = "engine.py:Engine._step:int"\n')
+    res = _fixture("hostsync_allowed", allow=bad)
+    assert not res.ok()
+    assert res.allow_errors
+
+
+# ------------------------------------------------------- seeded violation
+
+
+def test_seeded_violation_is_caught():
+    """Break the tree in-memory: a method touching a guarded attr with
+    no lock held must turn the clean run red."""
+    source = (DEFAULT_SRC / "engine" / "engine.py").read_text()
+    # keep the '# runs-on: engine-loop' comment glued to _run_loop —
+    # inserting between them would re-target the annotation
+    needle = "\n    # runs-on: engine-loop\n    def _run_loop"
+    assert needle in source
+    evil = ("\n    def _evil(self):\n"
+            "        return len(self._pending)\n" + needle)
+    res = run(override={"engine/engine.py":
+                        source.replace(needle, evil, 1)})
+    assert not res.ok()
+    assert any(f.checker == "locks" and f.qualname.endswith("._evil")
+               for f in res.findings)
+
+
+# ------------------------------------------------------------------- CLI
+
+
+def test_cli_strict_exits_zero_on_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--strict"],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+def test_cli_exits_nonzero_on_violating_fixture():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--strict",
+         "--root", str(FX / "locks_bad"),
+         "--allowlist", str(NO_ALLOW)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode != 0
+    assert "bump_racy" in proc.stdout
+
+
+# ------------------------------------------------- debugsync runtime layer
+
+
+def test_named_lock_disabled_is_plain_lock(monkeypatch):
+    monkeypatch.delenv("REPRO_DEBUG_SYNC", raising=False)
+    lk = debugsync.named_lock("TestPlain.lk")
+    assert isinstance(lk, type(threading.Lock()))
+    assert isinstance(debugsync.named_condition("TestPlain.cv"),
+                      threading.Condition)
+
+
+def test_lock_order_inversion_raises(monkeypatch):
+    monkeypatch.setenv("REPRO_DEBUG_SYNC", "1")
+    a = debugsync.named_lock("TestInv.a")
+    b = debugsync.named_lock("TestInv.b")
+    with a:
+        with b:
+            pass
+    with pytest.raises(debugsync.LockOrderError):
+        with b:
+            with a:
+                pass
+    assert debugsync.registry().held() == []
+
+
+def test_reentrant_same_name_is_not_an_inversion(monkeypatch):
+    monkeypatch.setenv("REPRO_DEBUG_SYNC", "1")
+    cv = debugsync.named_condition("TestReent.cv")
+    with cv:
+        with cv:
+            pass
+    assert debugsync.registry().held() == []
+
+
+def test_condition_wait_repushes_held_stack(monkeypatch):
+    monkeypatch.setenv("REPRO_DEBUG_SYNC", "1")
+    cv = debugsync.named_condition("TestWait.cv")
+    ready, held_after_wait = [], []
+
+    def waiter():
+        with cv:
+            while not ready:
+                cv.wait(timeout=5)
+            held_after_wait.extend(debugsync.registry().held())
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    with cv:
+        ready.append(1)
+        cv.notify()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert "TestWait.cv" in held_after_wait
+    assert debugsync.registry().held() == []
+
+
+# -------------------------------------------- regressions (checker finds)
+
+
+def test_batch_state_is_macro_done_locked_view():
+    from repro.core import consolidate
+    from repro.runtime.coordinator import BatchState
+    from repro.workloads import build_workload
+
+    g, bindings, _ = build_workload("w+", 4, seed=0)
+    consolidate(g, bindings)
+    st = BatchState(g, 4)
+    assert not st.is_macro_done("draft")
+    for q in range(4):
+        st.set_result(q, "draft", f"r{q}")
+    assert st.is_macro_done("draft")
+
+
+def test_checkpoint_batch_size_mismatch_raises(tmp_path):
+    from repro.runtime.checkpoint import (load_batch_state,
+                                          save_batch_state)
+    from repro.runtime.coordinator import BatchState
+    from repro.workloads import build_workload
+
+    g, _, _ = build_workload("w+", 4, seed=0)
+    st = BatchState(g, 4)
+    st.set_result(0, "draft", "r0")
+    p = str(tmp_path / "ck.json")
+    save_batch_state(st, p)
+    with pytest.raises(ValueError, match="different batch size"):
+        load_batch_state(BatchState(g, 3), p)

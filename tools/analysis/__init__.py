@@ -1,0 +1,88 @@
+"""Repo-specific static analysis (DESIGN.md §11).
+
+Three AST checkers over ``src/repro``:
+
+* ``locks``    — guarded-attribute discipline + lock-order graph
+* ``jit``      — jax.jit declaration/tracer-branch/bucketing hazards
+* ``hostsync`` — device→host syncs reachable from the engine step loop
+
+Run locally from the repo root::
+
+    python -m tools.analysis --strict
+
+``run()`` is the programmatic entry point the tests and the nightly
+BENCH export use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Dict, List, Optional, Tuple
+
+from tools.analysis.common import Allowlist, AllowEntry, Finding, Package
+from tools.analysis.hostsync import (DEFAULT_ROOTS, check_hostsync,
+                                     hot_path_size)
+from tools.analysis.jit import check_jit, count_jit_sites
+from tools.analysis.locks import check_locks
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
+DEFAULT_SRC = REPO_ROOT / "src" / "repro"
+DEFAULT_ALLOWLIST = pathlib.Path(__file__).resolve().parent / \
+    "allowlist.toml"
+
+
+@dataclasses.dataclass
+class Result:
+    """Everything one analysis run produced."""
+
+    findings: List[Finding]
+    suppressed: List[Tuple[Finding, AllowEntry]]
+    config_errors: List[Finding]
+    allow_errors: List[str]
+    unused: List[AllowEntry]
+    counts: Dict[str, int]
+
+    def ok(self, strict: bool = False) -> bool:
+        if self.findings or self.config_errors or self.allow_errors:
+            return False
+        if strict and self.unused:
+            return False
+        return True
+
+
+def run(root: Optional[pathlib.Path] = None,
+        allowlist: Optional[pathlib.Path] = None,
+        override: Optional[Dict[str, str]] = None,
+        roots: Tuple[str, ...] = DEFAULT_ROOTS) -> Result:
+    """Run all three checkers over ``root`` (default: src/repro)."""
+    root = pathlib.Path(root) if root is not None else DEFAULT_SRC
+    allow_path = allowlist if allowlist is not None else \
+        DEFAULT_ALLOWLIST
+    pkg = Package.load(root, override=override)
+    allow = Allowlist.load(allow_path)
+    raw = check_locks(pkg) + check_jit(pkg) \
+        + check_hostsync(pkg, roots=roots)
+    kept: List[Finding] = []
+    suppressed: List[Tuple[Finding, AllowEntry]] = []
+    for f in raw:
+        e = allow.match(f)
+        if e is not None:
+            suppressed.append((f, e))
+        else:
+            kept.append(f)
+    counts = {
+        "named_locks": sum(len(c.locks) for c in pkg.classes.values()),
+        "guarded_attrs": sum(len(c.guarded)
+                             for c in pkg.classes.values()),
+        "jit_sites": count_jit_sites(pkg),
+        "hot_path_functions": hot_path_size(pkg, roots=roots),
+        "syncs_allowed": sum(1 for f, e in suppressed
+                             if f.checker == "hostsync"
+                             and e.kind == "sync"),
+        "suppressions": len(suppressed),
+        "findings": len(kept),
+    }
+    return Result(findings=kept, suppressed=suppressed,
+                  config_errors=list(pkg.config_errors),
+                  allow_errors=list(allow.errors),
+                  unused=allow.unused(), counts=counts)

@@ -1,0 +1,60 @@
+"""CLI driver: ``python -m tools.analysis [--strict] [--json]``."""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from tools.analysis import DEFAULT_ALLOWLIST, DEFAULT_SRC, run
+
+
+def main(argv=None) -> int:
+    """Run the three checkers; exit 0 only on a clean tree."""
+    ap = argparse.ArgumentParser(prog="python -m tools.analysis")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on unused allowlist entries")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable output (counts + findings)")
+    ap.add_argument("--root", type=pathlib.Path, default=DEFAULT_SRC,
+                    help="source tree to analyze")
+    ap.add_argument("--allowlist", type=pathlib.Path,
+                    default=DEFAULT_ALLOWLIST)
+    args = ap.parse_args(argv)
+
+    res = run(root=args.root, allowlist=args.allowlist)
+    if args.as_json:
+        payload = {
+            "counts": res.counts,
+            "findings": [f.render() for f in res.findings],
+            "config_errors": [f.render() for f in res.config_errors],
+            "allow_errors": res.allow_errors,
+            "unused_allowlist": [e.site for e in res.unused],
+            "ok": res.ok(strict=args.strict),
+        }
+        print(json.dumps(payload, indent=1))
+        return 0 if res.ok(strict=args.strict) else 1
+
+    for f in res.config_errors:
+        print(f"CONFIG {f.render()}")
+    for msg in res.allow_errors:
+        print(f"ALLOWLIST {msg}")
+    for f in res.findings:
+        print(f.render())
+    if args.strict:
+        for e in res.unused:
+            print(f"UNUSED allowlist entry: [{e.checker}] {e.site} "
+                  f"— the code it suppressed is gone; delete it")
+    c = res.counts
+    status = "clean" if res.ok(strict=args.strict) else "FAILED"
+    print(f"tools.analysis: {status} — {c['findings']} finding(s), "
+          f"{c['suppressions']} suppressed "
+          f"({c['syncs_allowed']} allowed syncs), "
+          f"{c['named_locks']} locks / {c['guarded_attrs']} guarded "
+          f"attrs / {c['jit_sites']} jit sites / "
+          f"{c['hot_path_functions']} hot-path functions")
+    return 0 if res.ok(strict=args.strict) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,606 @@
+"""Shared plumbing for the repo's static checkers (DESIGN.md §11).
+
+Loads a package of Python sources into a light semantic model the three
+checkers (locks / jit / hostsync) share:
+
+* tokenize-based comment extraction so annotations like
+  ``# guarded-by: self._lock`` attach to the line they sit on (or, for
+  ``def``/``class`` lines, the comment-only line directly above);
+* a class registry with discovered locks (``threading.Lock/RLock/
+  Condition`` and the ``named_lock``/``named_condition`` debug
+  factories), guarded-attribute declarations, and attribute types
+  inferred from annotated ``__init__`` parameters, ``self.x: T``
+  annotations, and direct ``self.x = ClassName(...)`` constructions;
+* an allowlist (``allowlist.toml``) where every suppression must carry
+  a ``reason=`` string.
+
+Everything here is stdlib-only AST work: no JAX, no imports of the
+analyzed code.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import io
+import pathlib
+import re
+import tokenize
+from typing import Dict, List, Optional, Set, Tuple
+
+# Annotation keywords recognized in comments (see DESIGN.md §11).
+_ANNOT = re.compile(
+    r"#\s*(guarded-by|requires|runs-on|lock-alias|swap-only|jit-ok|"
+    r"not-a-sync)\s*:?\s*(.*)$")
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition"}
+_NAMED_FACTORIES = {"named_lock", "named_condition"}
+
+
+@dataclasses.dataclass
+class Finding:
+    """One checker hit, addressable by ``file:qualname:symbol``."""
+
+    checker: str            # locks | jit | hostsync
+    file: str               # path relative to the scan root (posix)
+    line: int
+    qualname: str           # Class.method, function name, or <module>
+    symbol: str             # attr / pattern the finding is about
+    message: str
+
+    @property
+    def site(self) -> str:
+        return f"{self.file}:{self.qualname}:{self.symbol}"
+
+    def render(self) -> str:
+        return (f"{self.file}:{self.line}: [{self.checker}] "
+                f"{self.qualname}: {self.message}")
+
+
+def parse_annotations(source: str) -> Dict[int, Tuple[str, str]]:
+    """Map line -> (keyword, value) for annotation comments."""
+    out: Dict[int, Tuple[str, str]] = {}
+    lines = source.splitlines()
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _ANNOT.match(tok.string)
+            if not m:
+                continue
+            lineno = tok.start[0]
+            text = lines[lineno - 1] if lineno <= len(lines) else ""
+            # comment-only lines annotate the def/class on the NEXT line
+            if text.strip().startswith("#"):
+                out[lineno + 1] = (m.group(1), m.group(2).strip())
+            else:
+                out[lineno] = (m.group(1), m.group(2).strip())
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+def attr_chain(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``self.state.lock`` -> ('self', 'state', 'lock'); None if not a
+    pure Name/Attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """A method or module-level function plus its thread contract."""
+
+    name: str
+    qualname: str
+    node: ast.AST           # FunctionDef / AsyncFunctionDef
+    module: str             # rel path
+    cls: Optional[str]
+    requires_raw: List[str] = dataclasses.field(default_factory=list)
+    runs_on: Optional[str] = None
+    runs_on_explicit: bool = False
+    requires: Set[str] = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    """Locks, guarded attrs, and attribute types of one class."""
+
+    name: str
+    module: str
+    node: ast.ClassDef
+    locks: Dict[str, str] = dataclasses.field(default_factory=dict)
+    guarded_raw: Dict[str, List[str]] = dataclasses.field(
+        default_factory=dict)
+    guarded: Dict[str, Set[str]] = dataclasses.field(default_factory=dict)
+    swap_only: Set[str] = dataclasses.field(default_factory=set)
+    attr_types: Dict[str, str] = dataclasses.field(default_factory=dict)
+    methods: Dict[str, FunctionInfo] = dataclasses.field(
+        default_factory=dict)
+    class_requires_raw: List[str] = dataclasses.field(default_factory=list)
+    class_requires: Set[str] = dataclasses.field(default_factory=set)
+    jit_attrs: Set[str] = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """One parsed source file."""
+
+    rel: str
+    tree: ast.Module
+    annotations: Dict[int, Tuple[str, str]]
+    import_alias: Dict[str, str] = dataclasses.field(default_factory=dict)
+    from_imports: Dict[str, Tuple[str, str]] = dataclasses.field(
+        default_factory=dict)   # local name -> (module, original)
+    functions: Dict[str, FunctionInfo] = dataclasses.field(
+        default_factory=dict)
+    classes: List[str] = dataclasses.field(default_factory=list)
+
+
+def _split_alts(value: str) -> List[str]:
+    return [a.strip() for a in value.split("|") if a.strip()]
+
+
+def _annotation_names(node: ast.AST, known: Set[str]) -> Optional[str]:
+    """First known class name mentioned in a type annotation."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in known:
+            return sub.id
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str) \
+                and sub.value in known:
+            return sub.value
+    return None
+
+
+class Package:
+    """All modules under a root directory, as one semantic model."""
+
+    def __init__(self) -> None:
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.classes: Dict[str, ClassInfo] = {}
+        self.config_errors: List[Finding] = []
+
+    # -- loading ---------------------------------------------------
+    @classmethod
+    def load(cls, root: pathlib.Path,
+             override: Optional[Dict[str, str]] = None) -> "Package":
+        """Parse every ``*.py`` under ``root``.
+
+        ``override`` maps rel paths to replacement source text — used
+        by the seeded-violation smoke test to break an annotation
+        in-memory without touching the tree.
+        """
+        pkg = cls()
+        root = pathlib.Path(root)
+        for path in sorted(root.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if "__pycache__" in rel:
+                continue
+            source = (override or {}).get(rel)
+            if source is None:
+                source = path.read_text(encoding="utf-8")
+            try:
+                tree = ast.parse(source)
+            except SyntaxError as e:
+                pkg.config_errors.append(Finding(
+                    "common", rel, e.lineno or 1, "<module>", "syntax",
+                    f"cannot parse: {e.msg}"))
+                continue
+            mod = ModuleInfo(rel=rel, tree=tree,
+                             annotations=parse_annotations(source))
+            pkg.modules[rel] = mod
+        pkg._collect()
+        pkg._resolve()
+        return pkg
+
+    # -- pass 1: collect classes / locks / annotations -------------
+    def _collect(self) -> None:
+        for mod in self.modules.values():
+            for node in mod.tree.body:
+                if isinstance(node, (ast.Import,)):
+                    for al in node.names:
+                        mod.import_alias[al.asname or al.name] = al.name
+                elif isinstance(node, ast.ImportFrom):
+                    src = node.module or ""
+                    for al in node.names:
+                        mod.from_imports[al.asname or al.name] = (
+                            src, al.name)
+                elif isinstance(node, ast.ClassDef):
+                    self._collect_class(mod, node)
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    fi = self._make_function(mod, node, None)
+                    mod.functions[node.name] = fi
+        # attr types need the full class registry; second sweep
+        known = set(self.classes)
+        for mod in self.modules.values():
+            for cname in mod.classes:
+                self._infer_attr_types(mod, self.classes[cname], known)
+
+    def _make_function(self, mod: ModuleInfo, node, cname) -> FunctionInfo:
+        qual = f"{cname}.{node.name}" if cname else node.name
+        fi = FunctionInfo(name=node.name, qualname=qual, node=node,
+                          module=mod.rel, cls=cname)
+        ann = mod.annotations.get(node.lineno)
+        if ann:
+            kw, val = ann
+            if kw == "requires":
+                fi.requires_raw = _split_alts(val)
+            elif kw == "runs-on":
+                fi.runs_on = val
+                fi.runs_on_explicit = True
+        return fi
+
+    def _collect_class(self, mod: ModuleInfo, node: ast.ClassDef) -> None:
+        ci = ClassInfo(name=node.name, module=mod.rel, node=node)
+        self.classes[node.name] = ci
+        mod.classes.append(node.name)
+        ann = mod.annotations.get(node.lineno)
+        if ann and ann[0] == "requires":
+            ci.class_requires_raw = _split_alts(ann[1])
+        for item in node.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                ci.methods[item.name] = self._make_function(
+                    mod, item, node.name)
+                for stmt in ast.walk(item):
+                    self._note_self_assign(mod, ci, stmt)
+            elif isinstance(item, (ast.Assign, ast.AnnAssign)):
+                self._note_self_assign(mod, ci, item, class_level=True)
+
+    def _note_self_assign(self, mod: ModuleInfo, ci: ClassInfo,
+                          stmt: ast.AST, class_level: bool = False) -> None:
+        """Record locks / guarded-by / swap-only on ``self.X = ...``."""
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign):
+            targets, value = [stmt.target], stmt.value
+        else:
+            return
+        for tgt in targets:
+            if class_level and isinstance(tgt, ast.Name):
+                attr = tgt.id
+            else:
+                chain = attr_chain(tgt)
+                if chain is None or len(chain) != 2 or chain[0] != "self":
+                    continue
+                attr = chain[1]
+            ann = mod.annotations.get(stmt.lineno)
+            if ann:
+                kw, val = ann
+                if kw == "guarded-by":
+                    ci.guarded_raw.setdefault(attr, _split_alts(val))
+                elif kw == "swap-only":
+                    ci.swap_only.add(attr)
+                elif kw == "lock-alias":
+                    ci.locks[attr] = val
+            self._note_lock_ctor(mod, ci, attr, value, stmt.lineno)
+
+    def _note_lock_ctor(self, mod: ModuleInfo, ci: ClassInfo, attr: str,
+                        value, lineno: int) -> None:
+        if not isinstance(value, ast.Call):
+            return
+        fchain = attr_chain(value.func)
+        if not fchain:
+            return
+        tail = fchain[-1]
+        canonical = f"{ci.name}.{attr}"
+        if tail in _NAMED_FACTORIES:
+            ci.locks.setdefault(attr, canonical)
+            arg = value.args[0] if value.args else None
+            name = arg.value if isinstance(arg, ast.Constant) else None
+            if name != canonical:
+                self.config_errors.append(Finding(
+                    "locks", mod.rel, lineno, canonical, attr,
+                    f"{tail}() name {name!r} must be the canonical lock "
+                    f"id {canonical!r} (static/runtime identity sync)"))
+        elif tail in _LOCK_CTORS and (
+                len(fchain) == 1 or fchain[0] in ("threading",)):
+            ci.locks.setdefault(attr, canonical)
+        elif tail == "jit" or (tail == "partial" and value.args
+                               and attr_chain(value.args[0])
+                               and attr_chain(value.args[0])[-1] == "jit"):
+            ci.jit_attrs.add(attr)
+
+    def _infer_attr_types(self, mod: ModuleInfo, ci: ClassInfo,
+                          known: Set[str]) -> None:
+        for meth in ci.methods.values():
+            node = meth.node
+            param_types: Dict[str, str] = {}
+            args = node.args
+            for a in list(args.posonlyargs) + list(args.args) \
+                    + list(args.kwonlyargs):
+                if a.annotation is not None:
+                    t = _annotation_names(a.annotation, known)
+                    if t:
+                        param_types[a.arg] = t
+            for stmt in ast.walk(node):
+                tgt = value = annot = None
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                    tgt, value = stmt.targets[0], stmt.value
+                elif isinstance(stmt, ast.AnnAssign):
+                    tgt, value, annot = stmt.target, stmt.value, \
+                        stmt.annotation
+                else:
+                    continue
+                chain = attr_chain(tgt)
+                if chain is None or len(chain) != 2 or chain[0] != "self":
+                    continue
+                attr = chain[1]
+                if annot is not None:
+                    t = _annotation_names(annot, known)
+                    if t:
+                        ci.attr_types.setdefault(attr, t)
+                if isinstance(value, ast.Name) \
+                        and value.id in param_types:
+                    ci.attr_types.setdefault(attr, param_types[value.id])
+                elif isinstance(value, ast.Call):
+                    fchain = attr_chain(value.func)
+                    if fchain and fchain[-1] in known:
+                        ci.attr_types.setdefault(attr, fchain[-1])
+
+    # -- pass 2: resolve annotation alternatives -------------------
+    def _resolve_alt(self, ci: ClassInfo, alt: str, lineno: int) -> \
+            Optional[str]:
+        """``self.X`` -> lock id via the declaring class; dotted names
+        pass through as canonical lock ids; bare tokens are threads."""
+        if alt.startswith("self."):
+            attr = alt[len("self."):]
+            lock = ci.locks.get(attr)
+            if lock is None:
+                self.config_errors.append(Finding(
+                    "locks", ci.module, lineno, ci.name, attr,
+                    f"annotation names {alt!r} but {ci.name}.{attr} is "
+                    f"not a discovered lock"))
+                return None
+            return lock
+        return alt  # "Class.attr" lock id or bare thread token
+
+    def _resolve(self) -> None:
+        for ci in self.classes.values():
+            ln = ci.node.lineno
+            ci.class_requires = {
+                r for a in ci.class_requires_raw
+                if (r := self._resolve_alt(ci, a, ln)) is not None}
+            for attr, alts in ci.guarded_raw.items():
+                ci.guarded[attr] = {
+                    r for a in alts
+                    if (r := self._resolve_alt(ci, a, ln)) is not None}
+            for meth in ci.methods.values():
+                meth.requires = {
+                    r for a in meth.requires_raw
+                    if (r := self._resolve_alt(
+                        ci, a, meth.node.lineno)) is not None}
+                if not meth.requires and ci.class_requires \
+                        and meth.name not in ("__init__", "__post_init__"):
+                    meth.requires = set(ci.class_requires)
+        self._propagate_runs_on()
+
+    # -- runs-on propagation through intra-class private calls -----
+    def _propagate_runs_on(self) -> None:
+        for ci in self.classes.values():
+            callers: Dict[str, Set[str]] = {m: set() for m in ci.methods}
+            for name, meth in ci.methods.items():
+                for sub in ast.walk(meth.node):
+                    if isinstance(sub, ast.Call):
+                        chain = attr_chain(sub.func)
+                        if chain and len(chain) == 2 \
+                                and chain[0] == "self" \
+                                and chain[1] in ci.methods:
+                            callers[chain[1]].add(name)
+            changed = True
+            while changed:
+                changed = False
+                for name, meth in ci.methods.items():
+                    if meth.runs_on is not None or meth.requires:
+                        continue
+                    if not name.startswith("_") or name.startswith("__"):
+                        continue
+                    cs = callers[name] - {name}
+                    if not cs:
+                        continue
+                    tokens = {ci.methods[c].runs_on for c in cs}
+                    if len(tokens) == 1 and None not in tokens:
+                        tok = tokens.pop()
+                        if tok != "any":
+                            meth.runs_on = tok
+                            changed = True
+
+    # -- shared resolution helpers ---------------------------------
+    def lock_of_chain(self, ci: Optional[ClassInfo],
+                      chain: Tuple[str, ...],
+                      local_types: Dict[str, str]) -> Optional[str]:
+        """Resolve an expression chain to a canonical lock id."""
+        if not chain:
+            return None
+        if chain[0] == "self" and ci is not None:
+            if len(chain) == 2:
+                return ci.locks.get(chain[1])
+            if len(chain) == 3:
+                t = ci.attr_types.get(chain[1])
+                if t and t in self.classes:
+                    return self.classes[t].locks.get(chain[2])
+            return None
+        t = local_types.get(chain[0])
+        if t and t in self.classes:
+            if len(chain) == 2:
+                return self.classes[t].locks.get(chain[1])
+        return None
+
+    def class_of_chain(self, ci: Optional[ClassInfo],
+                       chain: Tuple[str, ...],
+                       local_types: Dict[str, str]) -> \
+            Optional[Tuple[str, str]]:
+        """Resolve ``<obj>.attr`` to (ClassName, attr) when typed."""
+        if len(chain) < 2:
+            return None
+        if chain[0] == "self" and ci is not None:
+            if len(chain) == 2:
+                return (ci.name, chain[1])
+            if len(chain) == 3:
+                t = ci.attr_types.get(chain[1])
+                if t:
+                    return (t, chain[2])
+            return None
+        t = local_types.get(chain[0])
+        if t and len(chain) == 2:
+            return (t, chain[1])
+        return None
+
+    def local_types_for(self, fi: FunctionInfo) -> Dict[str, str]:
+        """Param annotations + simple ``x = self.attr`` aliases."""
+        known = set(self.classes)
+        out: Dict[str, str] = {}
+        node = fi.node
+        args = node.args
+        for a in list(args.posonlyargs) + list(args.args) \
+                + list(args.kwonlyargs):
+            if a.annotation is not None:
+                t = _annotation_names(a.annotation, known)
+                if t:
+                    out[a.arg] = t
+        ci = self.classes.get(fi.cls) if fi.cls else None
+        for stmt in ast.walk(node):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                chain = attr_chain(stmt.value)
+                if chain and chain[0] == "self" and len(chain) == 2 \
+                        and ci is not None:
+                    t = ci.attr_types.get(chain[1])
+                    if t:
+                        out[stmt.targets[0].id] = t
+        return out
+
+    def resolve_callee(self, mod: ModuleInfo, fi: FunctionInfo,
+                       call: ast.Call,
+                       local_types: Dict[str, str]) -> \
+            Optional[FunctionInfo]:
+        """Resolve a call to a FunctionInfo inside this package."""
+        chain = attr_chain(call.func)
+        if chain is None:
+            return None
+        if len(chain) == 1:
+            name = chain[0]
+            if name in mod.functions:
+                return mod.functions[name]
+            imp = mod.from_imports.get(name)
+            if imp:
+                for m in self.modules.values():
+                    if imp[1] in m.functions and (
+                            m.rel.endswith(imp[0].lstrip(".")
+                                           .replace(".", "/") + ".py")
+                            or imp[0].lstrip(".") == ""):
+                        return m.functions[imp[1]]
+            return None
+        owner = self.class_of_chain(
+            self.classes.get(fi.cls) if fi.cls else None,
+            chain, local_types)
+        if owner is None:
+            return None
+        cname, meth = owner
+        ci = self.classes.get(cname)
+        if ci and meth in ci.methods:
+            return ci.methods[meth]
+        return None
+
+    def all_functions(self) -> List[FunctionInfo]:
+        out: List[FunctionInfo] = []
+        for mod in self.modules.values():
+            out.extend(mod.functions.values())
+            for cname in mod.classes:
+                out.extend(self.classes[cname].methods.values())
+        return out
+
+
+# ---------------------------------------------------------------------
+# Allowlist
+# ---------------------------------------------------------------------
+
+_TOML_KV = re.compile(r'^(\w+)\s*=\s*"((?:[^"\\]|\\.)*)"\s*$')
+
+
+def _parse_toml_subset(text: str) -> List[Dict[str, str]]:
+    """``[[allow]]`` tables with string values — the only TOML this
+    repo's allowlist needs, parsed without tomllib (py3.10 support)."""
+    entries: List[Dict[str, str]] = []
+    current: Optional[Dict[str, str]] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line == "[[allow]]":
+            current = {}
+            entries.append(current)
+            continue
+        m = _TOML_KV.match(line)
+        if m and current is not None:
+            current[m.group(1)] = m.group(2).replace('\\"', '"')
+    return entries
+
+
+@dataclasses.dataclass
+class AllowEntry:
+    """One suppression; ``site`` may be an fnmatch glob."""
+
+    checker: str
+    site: str
+    reason: str
+    kind: str = ""
+    used: int = 0
+
+
+class Allowlist:
+    """Suppressions that must each carry a reason string."""
+
+    def __init__(self, entries: List[AllowEntry],
+                 errors: List[str]) -> None:
+        self.entries = entries
+        self.errors = errors
+
+    @classmethod
+    def load(cls, path: Optional[pathlib.Path]) -> "Allowlist":
+        if path is None or not pathlib.Path(path).is_file():
+            return cls([], [])
+        text = pathlib.Path(path).read_text(encoding="utf-8")
+        try:
+            import tomllib
+            raw = tomllib.loads(text).get("allow", [])
+        except ModuleNotFoundError:
+            raw = _parse_toml_subset(text)
+        entries, errors = [], []
+        for i, e in enumerate(raw):
+            if not e.get("reason", "").strip():
+                errors.append(
+                    f"allowlist entry #{i + 1} ({e.get('site', '?')}) "
+                    f"has no reason= — every suppression must say why")
+                continue
+            entries.append(AllowEntry(
+                checker=e.get("checker", "*"), site=e.get("site", ""),
+                reason=e["reason"], kind=e.get("kind", "")))
+        return cls(entries, errors)
+
+    def match(self, f: Finding) -> Optional[AllowEntry]:
+        for e in self.entries:
+            if e.checker not in ("*", f.checker):
+                continue
+            if fnmatch.fnmatchcase(f.site, e.site):
+                e.used += 1
+                return e
+        return None
+
+    def apply(self, findings: List[Finding]) -> \
+            Tuple[List[Finding], List[Finding]]:
+        """Split into (surviving, suppressed)."""
+        kept, suppressed = [], []
+        for f in findings:
+            (suppressed if self.match(f) else kept).append(f)
+        return kept, suppressed
+
+    def unused(self) -> List[AllowEntry]:
+        return [e for e in self.entries if e.used == 0]

@@ -1,0 +1,183 @@
+"""Host-sync auditor (DESIGN.md §11).
+
+Finds device→host synchronization points inside the engine's decode
+hot path: ``.item()``, ``int()/float()`` on values of unknown (possibly
+device) origin, ``np.asarray``/``np.array``, ``jax.device_get`` and
+``block_until_ready`` — in any function reachable from the
+``InferenceEngine`` step loop through the intra-package call graph
+(self-methods, typed attributes, module functions, from-imports).
+
+Every hit must either be intentional (an ``allowlist.toml`` entry with
+``kind = "sync"`` or ``kind = "host-data"`` and a reason) or go away;
+the allowlist is how the per-step sync budget only ever goes DOWN.
+``# not-a-sync: <reason>`` suppresses inline for the host-data cases
+that are obvious at the call site.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analysis.common import (Finding, FunctionInfo, Package,
+                                   attr_chain)
+
+DEFAULT_ROOTS = ("InferenceEngine._run_loop", "InferenceEngine._step")
+
+# calls whose results are host-side ints/floats/arrays — int()/float()
+# on these is data shuffling, not a device sync
+_HOST_PRODUCERS = {"len", "sorted", "range", "min", "max", "sum",
+                   "enumerate", "list", "tuple", "dict", "set",
+                   "monotonic", "perf_counter", "time"}
+
+
+def build_call_graph(pkg: Package) -> Dict[str, Set[str]]:
+    """qualname -> callee qualnames, via the shared resolvers."""
+    graph: Dict[str, Set[str]] = {}
+    for fi in pkg.all_functions():
+        mod = pkg.modules[fi.module]
+        local_types = pkg.local_types_for(fi)
+        out = graph.setdefault(fi.qualname, set())
+        for sub in ast.walk(fi.node):
+            if not isinstance(sub, ast.Call):
+                continue
+            callee = pkg.resolve_callee(mod, fi, sub, local_types)
+            if callee is not None:
+                out.add(callee.qualname)
+    return graph
+
+
+def reachable_from(graph: Dict[str, Set[str]],
+                   roots: Tuple[str, ...]) -> Set[str]:
+    """Transitive closure of the call graph from the hot-path roots."""
+    seen: Set[str] = set()
+    frontier = [r for r in roots if r in graph or True]
+    while frontier:
+        node = frontier.pop()
+        if node in seen:
+            continue
+        seen.add(node)
+        frontier.extend(graph.get(node, ()))
+    return seen
+
+
+class _SyncScan:
+    """Scan one hot-path function for sync patterns."""
+
+    def __init__(self, pkg: Package, fi: FunctionInfo,
+                 findings: List[Finding]) -> None:
+        self.pkg = pkg
+        self.fi = fi
+        self.mod = pkg.modules[fi.module]
+        self.findings = findings
+        self.host_locals: Set[str] = set()
+        self.np_aliases = {a for a, full in
+                           self.mod.import_alias.items()
+                           if full == "numpy"}
+        self.jax_aliases = {a for a, full in
+                            self.mod.import_alias.items()
+                            if full == "jax"}
+
+    def _flag(self, node: ast.AST, symbol: str, what: str) -> None:
+        ann = self.mod.annotations.get(node.lineno)
+        if ann is not None and ann[0] == "not-a-sync" \
+                and ann[1].strip():
+            return
+        self.findings.append(Finding(
+            "hostsync", self.fi.module, node.lineno, self.fi.qualname,
+            symbol,
+            f"{what} in hot-path function {self.fi.qualname} "
+            f"(reachable from the engine step loop)"))
+
+    def _value_is_host(self, e: ast.AST) -> bool:
+        if isinstance(e, ast.Constant):
+            return True
+        if isinstance(e, ast.Name):
+            return e.id in self.host_locals
+        if isinstance(e, ast.Subscript):
+            return self._value_is_host(e.value)
+        if isinstance(e, ast.Attribute):
+            # attribute reads (config ints, lengths) are host state;
+            # only locals assigned from device computations are suspect
+            return True
+        if isinstance(e, ast.BinOp):
+            return self._value_is_host(e.left) \
+                and self._value_is_host(e.right)
+        if isinstance(e, ast.Call):
+            chain = attr_chain(e.func)
+            if chain and (chain[-1] in _HOST_PRODUCERS
+                          or chain[0] in self.np_aliases):
+                return True
+            return False
+        return False
+
+    def _note_host_local(self, stmt: ast.Assign) -> None:
+        v = stmt.value
+        is_host = False
+        if isinstance(v, (ast.List, ast.Tuple, ast.Dict, ast.Set,
+                          ast.ListComp, ast.DictComp, ast.Constant)):
+            is_host = True
+        elif isinstance(v, ast.Call):
+            chain = attr_chain(v.func)
+            if chain and (chain[0] in self.np_aliases
+                          or chain[-1] in _HOST_PRODUCERS):
+                is_host = True
+        if is_host:
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name):
+                    self.host_locals.add(tgt.id)
+
+    def run(self) -> None:
+        # pass 1: which locals are host-side data
+        for stmt in ast.walk(self.fi.node):
+            if isinstance(stmt, ast.Assign):
+                self._note_host_local(stmt)
+        # pass 2: sync patterns
+        for sub in ast.walk(self.fi.node):
+            if not isinstance(sub, ast.Call):
+                continue
+            chain = attr_chain(sub.func)
+            if chain is None:
+                continue
+            tail = chain[-1]
+            if tail == "item" and len(chain) > 1:
+                self._flag(sub, ".item", "device scalar .item() sync")
+            elif tail == "block_until_ready":
+                self._flag(sub, "block_until_ready",
+                           "explicit device barrier")
+            elif tail == "device_get" and (
+                    len(chain) == 1 or chain[0] in self.jax_aliases):
+                self._flag(sub, "device_get", "jax.device_get D2H copy")
+            elif tail in ("asarray", "array") and len(chain) > 1 \
+                    and chain[0] in self.np_aliases:
+                self._flag(sub, f"np.{tail}",
+                           f"np.{tail} D2H materialization")
+            elif tail in ("int", "float") and len(chain) == 1 \
+                    and sub.args:
+                if not self._value_is_host(sub.args[0]):
+                    self._flag(sub, tail,
+                               f"{tail}() on a value of device origin")
+
+
+def check_hostsync(pkg: Package,
+                   roots: Tuple[str, ...] = DEFAULT_ROOTS) -> \
+        List[Finding]:
+    """Entry point: all host-sync findings in hot-path functions."""
+    findings: List[Finding] = []
+    graph = build_call_graph(pkg)
+    hot = reachable_from(graph, roots)
+    by_qual = {fi.qualname: fi for fi in pkg.all_functions()}
+    for qual in sorted(hot):
+        fi = by_qual.get(qual)
+        if fi is None:
+            continue
+        _SyncScan(pkg, fi, findings).run()
+    return findings
+
+
+def hot_path_size(pkg: Package,
+                  roots: Tuple[str, ...] = DEFAULT_ROOTS) -> int:
+    """Number of functions reachable from the step loop (BENCH
+    export)."""
+    graph = build_call_graph(pkg)
+    by_qual = {fi.qualname for fi in pkg.all_functions()}
+    return len(reachable_from(graph, roots) & by_qual)

@@ -1,0 +1,354 @@
+"""JIT-hazard checker (DESIGN.md §11).
+
+Three hazards around ``jax.jit``:
+
+1. **Undeclared argnums** — every jit site must say what it means:
+   at least one of ``static_argnums/static_argnames/donate_argnums/
+   donate_argnames/in_shardings/out_shardings``, or an inline
+   ``# jit-ok: <reason>`` (or allowlist entry) acknowledging the bare
+   wrap is intentional.
+
+2. **Tracer branching** — Python ``if``/``while`` tests inside a
+   jitted function may not reference traced parameters directly
+   (``.shape``/``.ndim``/``.dtype`` reads and declared static args are
+   fine); such branches bake one trace-time path silently.
+
+3. **Unbucketed dynamic shapes** — the ``_PF_QUANTUM`` storm class:
+   an int derived from ``len(...)`` that flows into an array
+   constructor's shape tuple and then into a jitted entry point
+   recompiles per distinct length.  The taint is cleared by the
+   declared bucketing helpers (``_round_*`` calls or arithmetic
+   against a ``*_QUANTUM`` constant).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analysis.common import (Finding, FunctionInfo, Package,
+                                   attr_chain)
+
+_DECLARED_KWARGS = {"static_argnums", "static_argnames",
+                    "donate_argnums", "donate_argnames",
+                    "in_shardings", "out_shardings"}
+_ARRAY_CTORS = {"zeros", "ones", "full", "empty", "zeros_like"}
+_SANITIZER_SUFFIXES = ("_round_t", "_round_b")
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def _is_jit_func(expr: ast.AST) -> bool:
+    chain = attr_chain(expr)
+    return bool(chain) and chain[-1] == "jit" and (
+        len(chain) == 1 or chain[0] in ("jax",))
+
+
+def _jit_call_info(call: ast.Call) -> Optional[Dict]:
+    """If ``call`` is ``jax.jit(...)`` or ``partial(jax.jit, ...)``,
+    return its keyword set + static names."""
+    if _is_jit_func(call.func):
+        kws = call.keywords
+    elif attr_chain(call.func) and attr_chain(call.func)[-1] == \
+            "partial" and call.args and _is_jit_func(call.args[0]):
+        kws = call.keywords
+    else:
+        return None
+    declared = {k.arg for k in kws if k.arg in _DECLARED_KWARGS}
+    static: Set[str] = set()
+    for k in kws:
+        if k.arg == "static_argnames":
+            for sub in ast.walk(k.value):
+                if isinstance(sub, ast.Constant) \
+                        and isinstance(sub.value, str):
+                    static.add(sub.value)
+    return {"declared": declared, "static": static,
+            "lineno": call.lineno}
+
+
+def _iter_jit_sites(pkg: Package):
+    """Yield (module, enclosing_qualname, call_info, decorated_def)."""
+    for mod in pkg.modules.values():
+        seen: Set[int] = set()
+
+        # walk with enclosing-scope tracking
+        def visit(node, qual):
+            for child in ast.iter_child_nodes(node):
+                q = qual
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef,
+                                      ast.ClassDef)):
+                    q = f"{qual}.{child.name}" if qual else child.name
+                    if isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                        for dec in child.decorator_list:
+                            info = None
+                            if isinstance(dec, ast.Call):
+                                info = _jit_call_info(dec)
+                            elif _is_jit_func(dec):
+                                info = {"declared": set(),
+                                        "static": set(),
+                                        "lineno": dec.lineno}
+                            if info is not None:
+                                seen.add(id(dec))
+                                yield (mod, q, info, child)
+                if isinstance(child, ast.Assign) \
+                        and isinstance(child.value, ast.Call) \
+                        and id(child.value) not in seen:
+                    info = _jit_call_info(child.value)
+                    if info is not None:
+                        seen.add(id(child.value))
+                        fn = None
+                        if child.value.args:
+                            tgt = child.value.args[0]
+                            if isinstance(tgt, ast.Name) \
+                                    and tgt.id in mod.functions:
+                                fn = mod.functions[tgt.id].node
+                        # `_step = jax.jit(fn, ...)`: calls through the
+                        # assigned name are jit entries too
+                        info["aliases"] = [
+                            t.id for t in child.targets
+                            if isinstance(t, ast.Name)]
+                        yield (mod, qual or "<module>", info, fn)
+                if isinstance(child, ast.Call) and id(child) not in seen:
+                    info = _jit_call_info(child)
+                    if info is not None:
+                        fn = None
+                        # jax.jit(local_fn, ...) — resolve for branch
+                        # checks on the wrapped function
+                        if child.args:
+                            tgt = child.args[0]
+                            if isinstance(tgt, ast.Name) \
+                                    and tgt.id in mod.functions:
+                                fn = mod.functions[tgt.id].node
+                        yield (mod, qual or "<module>", info, fn)
+                        continue  # don't re-yield partial's inner jit
+                yield from visit(child, q)
+        yield from visit(mod.tree, "")
+
+
+def _check_tracer_branches(mod, qual: str, node, static: Set[str],
+                           findings: List[Finding]) -> None:
+    if node is None or not isinstance(node, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+        return
+    args = node.args
+    params = [a.arg for a in list(args.posonlyargs) + list(args.args)
+              + list(args.kwonlyargs)]
+    dynamic = {p for p in params if p not in static and p != "self"}
+
+    def tracer_refs(expr) -> List[str]:
+        hits: List[str] = []
+
+        def rec(e):
+            if isinstance(e, ast.Attribute):
+                if e.attr in _STATIC_ATTRS:
+                    return  # x.shape[...] is trace-time static
+                rec(e.value)
+            elif isinstance(e, ast.Call):
+                fc = attr_chain(e.func)
+                if fc and fc[-1] == "len":
+                    return  # len(x) of a traced array is static
+                for a in e.args:
+                    rec(a)
+                for k in e.keywords:
+                    rec(k.value)
+            elif isinstance(e, ast.Name):
+                if e.id in dynamic:
+                    hits.append(e.id)
+            else:
+                for c in ast.iter_child_nodes(e):
+                    rec(c)
+        rec(expr)
+        return hits
+
+    for sub in ast.walk(node):
+        test = None
+        if isinstance(sub, (ast.If, ast.While)):
+            test = sub.test
+        elif isinstance(sub, ast.IfExp):
+            test = sub.test
+        if test is None:
+            continue
+        refs = tracer_refs(test)
+        if refs:
+            findings.append(Finding(
+                "jit", mod.rel, sub.lineno, qual, refs[0],
+                f"Python branch on traced value(s) "
+                f"{', '.join(sorted(set(refs)))} inside jitted "
+                f"{node.name} — the condition is baked at trace time"))
+
+
+class _TaintWalk:
+    """Per-function forward taint: len()-derived ints reaching array
+    ctor shapes that flow into jitted entry points."""
+
+    def __init__(self, pkg: Package, fi: FunctionInfo,
+                 entries: Dict[str, Set[str]],
+                 jit_funcs: Dict[Tuple[str, str], Set[str]],
+                 findings: List[Finding]) -> None:
+        self.pkg = pkg
+        self.fi = fi
+        self.ci = pkg.classes.get(fi.cls) if fi.cls else None
+        self.entries = entries          # ClassName -> jit attr names
+        self.jit_funcs = jit_funcs      # (module, fn) -> static names
+        self.findings = findings
+        self.tainted: Set[str] = set()
+        self.ctor_tainted: Set[str] = set()
+        self.mod = pkg.modules[fi.module]
+
+    # -- expression taint -----------------------------------------
+    def _is_quantum_ref(self, e: ast.AST) -> bool:
+        chain = attr_chain(e)
+        return bool(chain) and chain[-1].upper().endswith("_QUANTUM")
+
+    def _is_sanitizer(self, call: ast.Call) -> bool:
+        chain = attr_chain(call.func)
+        if not chain:
+            return False
+        tail = chain[-1]
+        return tail.endswith(_SANITIZER_SUFFIXES) \
+            or tail.startswith(("round_to", "_round"))
+
+    def expr_taint(self, e: ast.AST) -> bool:
+        if e is None:
+            return False
+        if isinstance(e, ast.Call):
+            if self._is_sanitizer(e):
+                return False
+            chain = attr_chain(e.func)
+            if chain and chain[-1] == "len":
+                return True
+            return False
+        if isinstance(e, ast.BinOp):
+            if self._is_quantum_ref(e.left) \
+                    or self._is_quantum_ref(e.right):
+                return False
+            return self.expr_taint(e.left) or self.expr_taint(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.expr_taint(e.operand)
+        if isinstance(e, ast.IfExp):
+            return self.expr_taint(e.body) or self.expr_taint(e.orelse)
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        return False
+
+    def _ctor_shape_taint(self, e: ast.AST) -> Optional[int]:
+        """Line no of a tainted-shape array ctor inside ``e``."""
+        for sub in ast.walk(e):
+            if isinstance(sub, ast.Name) and sub.id in self.ctor_tainted:
+                return sub.lineno
+            if not isinstance(sub, ast.Call):
+                continue
+            chain = attr_chain(sub.func)
+            if not chain or chain[-1] not in _ARRAY_CTORS:
+                continue
+            if not sub.args or not isinstance(sub.args[0], ast.Tuple):
+                continue
+            for elt in sub.args[0].elts:
+                if self.expr_taint(elt):
+                    return sub.lineno
+        return None
+
+    # -- linear statement pass ------------------------------------
+    def run(self) -> None:
+        for stmt in ast.walk(self.fi.node):
+            if isinstance(stmt, ast.Assign):
+                t = self.expr_taint(stmt.value)
+                ct = self._ctor_shape_taint(stmt.value) is not None
+                for tgt in stmt.targets:
+                    for name in self._target_names(tgt):
+                        if t:
+                            self.tainted.add(name)
+                        if ct:
+                            self.ctor_tainted.add(name)
+            elif isinstance(stmt, ast.AugAssign) \
+                    and isinstance(stmt.target, ast.Name):
+                if self.expr_taint(stmt.value):
+                    self.tainted.add(stmt.target.id)
+        for stmt in ast.walk(self.fi.node):
+            if isinstance(stmt, ast.Call):
+                self._check_entry_call(stmt)
+
+    @staticmethod
+    def _target_names(tgt: ast.AST) -> List[str]:
+        if isinstance(tgt, ast.Name):
+            return [tgt.id]
+        if isinstance(tgt, (ast.Tuple, ast.List)):
+            return [n.id for n in tgt.elts if isinstance(n, ast.Name)]
+        return []
+
+    def _entry_of(self, call: ast.Call) -> Optional[Tuple[str, Set[str]]]:
+        chain = attr_chain(call.func)
+        if not chain:
+            return None
+        if chain[0] == "self" and len(chain) == 2 and self.ci \
+                and chain[1] in self.ci.jit_attrs:
+            return (f"{self.ci.name}.{chain[1]}", set())
+        if len(chain) == 1:
+            key = (self.fi.module, chain[0])
+            if key in self.jit_funcs:
+                return (chain[0], self.jit_funcs[key])
+            imp = self.mod.from_imports.get(chain[0])
+            if imp:
+                for (m, fn), static in self.jit_funcs.items():
+                    if fn == imp[1]:
+                        return (chain[0], static)
+        return None
+
+    def _check_entry_call(self, call: ast.Call) -> None:
+        entry = self._entry_of(call)
+        if entry is None:
+            return
+        name, static = entry
+        for arg in call.args:
+            ln = self._ctor_shape_taint(arg)
+            if ln is not None:
+                self.findings.append(Finding(
+                    "jit", self.fi.module, call.lineno,
+                    self.fi.qualname, name,
+                    f"arg to jitted entry {name} carries a len()-"
+                    f"derived array shape (ctor at line {ln}) that "
+                    f"never passed a bucketing helper — recompile "
+                    f"storm (_PF_QUANTUM class)"))
+        for kw in call.keywords:
+            if kw.arg in static and self.expr_taint(kw.value):
+                self.findings.append(Finding(
+                    "jit", self.fi.module, call.lineno,
+                    self.fi.qualname, name,
+                    f"static arg {kw.arg}= of jitted entry {name} is "
+                    f"len()-derived and unbucketed — every distinct "
+                    f"value recompiles"))
+
+
+def check_jit(pkg: Package) -> List[Finding]:
+    """Entry point: all JIT-hazard findings for a package."""
+    findings: List[Finding] = []
+    jit_funcs: Dict[Tuple[str, str], Set[str]] = {}
+    n_sites = 0
+    for mod, qual, info, fn in _iter_jit_sites(pkg):
+        n_sites += 1
+        ann = mod.annotations.get(info["lineno"])
+        ok_comment = ann is not None and ann[0] == "jit-ok" \
+            and ann[1].strip()
+        if not info["declared"] and not ok_comment:
+            findings.append(Finding(
+                "jit", mod.rel, info["lineno"], qual, "jax.jit",
+                "jit site declares no static/donate argnums or "
+                "shardings — say what you mean, or annotate "
+                "'# jit-ok: <reason>'"))
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _check_tracer_branches(mod, qual, fn, info["static"],
+                                   findings)
+            jit_funcs[(mod.rel, fn.name)] = set(info["static"])
+        for alias in info.get("aliases", ()):
+            jit_funcs[(mod.rel, alias)] = set(info["static"])
+    for fi in pkg.all_functions():
+        _TaintWalk(pkg, fi, {c.name: c.jit_attrs
+                             for c in pkg.classes.values()},
+                   jit_funcs, findings).run()
+    return findings
+
+
+def count_jit_sites(pkg: Package) -> int:
+    """Number of jax.jit call sites in the package (for the nightly
+    BENCH export)."""
+    return sum(1 for _ in _iter_jit_sites(pkg))

@@ -1,0 +1,420 @@
+"""Lock-discipline checker (DESIGN.md §11).
+
+Two obligations, both driven by the annotation grammar in ``common``:
+
+1. **Guarded access** — every read/write of an attribute declared
+   ``# guarded-by: <lock> | <thread>`` must happen while one of the
+   alternatives holds: lexically inside ``with <lock>:`` (or after a
+   tracked ``.acquire()``), in a method annotated/propagated
+   ``# runs-on: <thread>``, or in a method whose ``# requires:``
+   contract is a subset of the attribute's alternatives (the caller
+   already guaranteed one of them).  ``# swap-only`` attributes are
+   exempt from locking but may only be rebound whole — in-place
+   mutation (augmented assignment, subscript store, ``.append``-class
+   methods) is flagged.
+
+2. **Acquisition order** — every "acquire B while holding A" site adds
+   an A→B edge, including transitively through resolvable callees; a
+   cycle in the resulting cross-module graph (or a self-edge on a
+   non-reentrant lock) is a deadlock the runtime verifier
+   (``repro.debugsync``) would eventually hit under the right timing,
+   so it fails the build now.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from tools.analysis.common import (Finding, FunctionInfo, Package,
+                                   attr_chain)
+
+_MUTATORS = {"append", "add", "update", "pop", "clear", "extend",
+             "remove", "discard", "setdefault", "insert", "popitem"}
+_EXEMPT_METHODS = {"__init__", "__post_init__"}
+
+
+def _satisfied(alts: Set[str], held: Set[str],
+               fi: FunctionInfo) -> bool:
+    if held & alts:
+        return True
+    if fi.runs_on is not None and fi.runs_on in alts:
+        return True
+    if fi.requires and fi.requires <= alts:
+        return True
+    return False
+
+
+class _FunctionWalk:
+    """Walks one function body tracking lexically-held locks."""
+
+    def __init__(self, checker: "LockChecker", fi: FunctionInfo) -> None:
+        self.c = checker
+        self.pkg = checker.pkg
+        self.fi = fi
+        self.ci = self.pkg.classes.get(fi.cls) if fi.cls else None
+        self.local_types = self.pkg.local_types_for(fi)
+        self.local_locks = self._find_local_locks(fi.node)
+        self.init_held = frozenset(
+            a for a in fi.requires if "." in a)
+
+    def _find_local_locks(self, node) -> Dict[str, str]:
+        out: Dict[str, str] = {}
+        for stmt in ast.walk(node):
+            if not (isinstance(stmt, ast.Assign)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and isinstance(stmt.value, ast.Call)):
+                continue
+            chain = attr_chain(stmt.value.func)
+            if not chain:
+                continue
+            name = stmt.targets[0].id
+            if chain[-1] in ("named_lock", "named_condition"):
+                arg = stmt.value.args[0] if stmt.value.args else None
+                if isinstance(arg, ast.Constant):
+                    out[name] = str(arg.value)
+            elif chain[-1] in ("Lock", "RLock", "Condition") and (
+                    len(chain) == 1 or chain[0] == "threading"):
+                out[name] = f"{self.fi.qualname}.{name}"
+        return out
+
+    def lock_of(self, expr: ast.AST) -> Optional[str]:
+        chain = attr_chain(expr)
+        if chain is None:
+            return None
+        if len(chain) == 1 and chain[0] in self.local_locks:
+            return self.local_locks[chain[0]]
+        return self.pkg.lock_of_chain(self.ci, chain, self.local_types)
+
+    # -- statement walking ----------------------------------------
+    def run(self) -> None:
+        self.walk_block(self.fi.node.body, set(self.init_held))
+
+    def walk_block(self, stmts: List[ast.stmt],
+                   held: Set[str]) -> Set[str]:
+        held = set(held)
+        for stmt in stmts:
+            held = self.walk_stmt(stmt, held)
+        return held
+
+    def _acquire(self, lock: str, held: Set[str], lineno: int) -> None:
+        self.c.note_acquire(self.fi, lock, frozenset(held), lineno)
+
+    def _acq_rel_calls(self, stmt: ast.stmt) -> Tuple[List, List]:
+        """(acquire, release) lock-call sites inside a statement's
+        expressions (``X.acquire(...)`` / ``X.release()``)."""
+        acq, rel = [], []
+        for e in self._stmt_exprs(stmt):
+            for sub in ast.walk(e):
+                if isinstance(sub, ast.Call) \
+                        and isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr in ("acquire", "release"):
+                    lock = self.lock_of(sub.func.value)
+                    if lock is not None:
+                        (acq if sub.func.attr == "acquire"
+                         else rel).append((lock, sub.lineno))
+        return acq, rel
+
+    @staticmethod
+    def _stmt_exprs(stmt: ast.stmt):
+        for _field, value in ast.iter_fields(stmt):
+            vals = value if isinstance(value, list) else [value]
+            for v in vals:
+                if isinstance(v, ast.expr):
+                    yield v
+
+    def walk_stmt(self, stmt: ast.stmt, held: Set[str]) -> Set[str]:
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            acquired: List[str] = []
+            for item in stmt.items:
+                lock = self.lock_of(item.context_expr)
+                if lock is not None:
+                    self._acquire(lock, held | set(acquired),
+                                  stmt.lineno)
+                    acquired.append(lock)
+                else:
+                    self.scan_expr(item.context_expr, held)
+            self.walk_block(stmt.body, held | set(acquired))
+            return held
+        if isinstance(stmt, ast.Try):
+            after = self.walk_block(stmt.body, held)
+            for handler in stmt.handlers:
+                self.walk_block(handler.body, held)
+            after = self.walk_block(stmt.orelse, after)
+            _acq, rel = [], []
+            for s in stmt.finalbody:
+                a, r = self._acq_rel_calls(s)
+                rel.extend(r)
+            self.walk_block(stmt.finalbody, after)
+            for lock, _ln in rel:
+                after.discard(lock)
+            return after
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # closures run later but share the lexical lock scope often
+            # enough (wait_for predicates, nested publish helpers) that
+            # the enclosing held-set is the useful approximation.
+            self.walk_block(stmt.body, held)
+            return held
+        if isinstance(stmt, ast.ClassDef):
+            return held
+
+        acq, rel = self._acq_rel_calls(stmt)
+        for e in self._stmt_exprs(stmt):
+            self.scan_expr(e, held)
+        if isinstance(stmt, (ast.If, ast.While)):
+            body_held = set(held)
+            if isinstance(stmt, ast.While):
+                for lock, ln in acq:   # `while not X.acquire():` spin
+                    self._acquire(lock, held, ln)
+            self.walk_block(stmt.body, body_held)
+            self.walk_block(stmt.orelse, set(held))
+        elif isinstance(stmt, ast.For):
+            self.walk_block(stmt.body, set(held))
+            self.walk_block(stmt.orelse, set(held))
+        elif isinstance(stmt, ast.Match):
+            for case in stmt.cases:
+                self.walk_block(case.body, set(held))
+        after = set(held)
+        if isinstance(stmt, ast.If) and acq and stmt.body \
+                and isinstance(stmt.body[-1],
+                               (ast.Continue, ast.Return, ast.Raise,
+                                ast.Break)):
+            # `if not lock.acquire(blocking=False): <bail>` — after the
+            # If, the lock is held on the fall-through path.
+            for lock, ln in acq:
+                self._acquire(lock, held, ln)
+                after.add(lock)
+        elif acq and not isinstance(stmt, (ast.If, ast.While)):
+            for lock, ln in acq:
+                self._acquire(lock, held, ln)
+                after.add(lock)
+        for lock, _ln in rel:
+            after.discard(lock)
+        return after
+
+    # -- expression scanning --------------------------------------
+    def scan_expr(self, expr: ast.expr, held: Set[str]) -> None:
+        if expr is None:
+            return
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Attribute):
+                self._check_attr(sub, held)
+            elif isinstance(sub, ast.Call):
+                self._check_call(sub, held)
+        # in-place mutation of swap-only attrs via statements is
+        # handled here too: the Attribute check sees ctx flags.
+
+    def _resolve_owner(self, node: ast.Attribute) -> \
+            Optional[Tuple[str, str]]:
+        chain = attr_chain(node)
+        if chain is None:
+            return None
+        return self.pkg.class_of_chain(self.ci, chain, self.local_types)
+
+    def _check_attr(self, node: ast.Attribute, held: Set[str]) -> None:
+        owner = self._resolve_owner(node)
+        if owner is None:
+            return
+        cname, attr = owner
+        oci = self.pkg.classes.get(cname)
+        if oci is None:
+            return
+        if attr in oci.swap_only:
+            return  # stores checked via _check_swap_stmt
+        alts = oci.guarded.get(attr)
+        if not alts:
+            return
+        if self.fi.name in _EXEMPT_METHODS:
+            return
+        if _satisfied(alts, held, self.fi):
+            return
+        self.c.findings.append(Finding(
+            "locks", self.fi.module, node.lineno, self.fi.qualname, attr,
+            f"access to {cname}.{attr} (guarded-by "
+            f"{' | '.join(sorted(alts))}) outside any alternative "
+            f"(held: {sorted(held) or 'nothing'}, "
+            f"runs-on: {self.fi.runs_on or '?'})"))
+
+    def _check_call(self, call: ast.Call, held: Set[str]) -> None:
+        # swap-only in-place mutators: obj.attr.append(...)
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in _MUTATORS \
+                and isinstance(call.func.value, ast.Attribute):
+            owner = self._resolve_owner(call.func.value)
+            if owner is not None:
+                cname, attr = owner
+                oci = self.pkg.classes.get(cname)
+                if oci is not None and attr in oci.swap_only:
+                    self.c.findings.append(Finding(
+                        "locks", self.fi.module, call.lineno,
+                        self.fi.qualname, attr,
+                        f"{cname}.{attr} is swap-only but "
+                        f".{call.func.attr}() mutates it in place"))
+        mod = self.pkg.modules.get(self.fi.module)
+        callee = self.pkg.resolve_callee(mod, self.fi, call,
+                                         self.local_types)
+        if callee is None:
+            return
+        self.c.note_call(self.fi, callee, frozenset(held), call.lineno)
+        if callee.requires and callee.name not in _EXEMPT_METHODS:
+            if not _satisfied(callee.requires, held, self.fi):
+                self.c.findings.append(Finding(
+                    "locks", self.fi.module, call.lineno,
+                    self.fi.qualname, callee.name,
+                    f"call to {callee.qualname} (requires "
+                    f"{' | '.join(sorted(callee.requires))}) without "
+                    f"satisfying the contract (held: "
+                    f"{sorted(held) or 'nothing'})"))
+
+    def check_swap_stores(self) -> None:
+        """AugAssign / subscript-store on swap-only attrs."""
+        for stmt in ast.walk(self.fi.node):
+            if isinstance(stmt, ast.AugAssign):
+                tgt = stmt.target
+                node = tgt.value if isinstance(
+                    tgt, ast.Subscript) else tgt
+                if isinstance(node, ast.Attribute):
+                    self._flag_swap(node, stmt.lineno, "augmented-assign")
+            elif isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Subscript) \
+                            and isinstance(tgt.value, ast.Attribute):
+                        self._flag_swap(tgt.value, stmt.lineno,
+                                        "subscript-store")
+
+    def _flag_swap(self, node: ast.Attribute, lineno: int,
+                   how: str) -> None:
+        owner = self._resolve_owner(node)
+        if owner is None:
+            return
+        cname, attr = owner
+        oci = self.pkg.classes.get(cname)
+        if oci is not None and attr in oci.swap_only:
+            self.c.findings.append(Finding(
+                "locks", self.fi.module, lineno, self.fi.qualname, attr,
+                f"{cname}.{attr} is swap-only but {how} mutates it "
+                f"in place (rebind a fresh object instead)"))
+
+
+class LockChecker:
+    """Runs the discipline walk over every function, then the order
+    graph."""
+
+    def __init__(self, pkg: Package) -> None:
+        self.pkg = pkg
+        self.findings: List[Finding] = []
+        # (a, b) -> example "file:line in qualname"
+        self.edges: Dict[Tuple[str, str], str] = {}
+        self.direct_acquires: Dict[str, Set[str]] = {}
+        self.calls: List[Tuple[FunctionInfo, FunctionInfo,
+                               FrozenSet[str], int]] = []
+
+    def note_acquire(self, fi: FunctionInfo, lock: str,
+                     held: FrozenSet[str], lineno: int) -> None:
+        self.direct_acquires.setdefault(fi.qualname, set()).add(lock)
+        site = f"{fi.module}:{lineno} in {fi.qualname}"
+        for h in held:
+            if h == lock:
+                self.findings.append(Finding(
+                    "locks", fi.module, lineno, fi.qualname, lock,
+                    f"re-acquisition of {lock} while already held "
+                    f"(self-deadlock on a non-reentrant lock)"))
+            else:
+                self.edges.setdefault((h, lock), site)
+
+    def note_call(self, caller: FunctionInfo, callee: FunctionInfo,
+                  held: FrozenSet[str], lineno: int) -> None:
+        self.calls.append((caller, callee, held, lineno))
+
+    # -- transitive acquisition closure ---------------------------
+    def _acquires_star(self) -> Dict[str, Set[str]]:
+        star = {q: set(s) for q, s in self.direct_acquires.items()}
+        callees: Dict[str, Set[str]] = {}
+        for caller, callee, _held, _ln in self.calls:
+            callees.setdefault(caller.qualname, set()).add(
+                callee.qualname)
+        changed = True
+        while changed:
+            changed = False
+            for q, cs in callees.items():
+                cur = star.setdefault(q, set())
+                for c in cs:
+                    extra = star.get(c, set()) - cur
+                    if extra:
+                        cur |= extra
+                        changed = True
+        return star
+
+    def run(self) -> List[Finding]:
+        for fi in self.pkg.all_functions():
+            walk = _FunctionWalk(self, fi)
+            walk.run()
+            walk.check_swap_stores()
+        star = self._acquires_star()
+        for caller, callee, held, lineno in self.calls:
+            if not held:
+                continue
+            site = f"{caller.module}:{lineno} in {caller.qualname} " \
+                   f"-> {callee.qualname}"
+            for lock in star.get(callee.qualname, ()):  # noqa: B007
+                for h in held:
+                    if h != lock:
+                        self.edges.setdefault((h, lock), site)
+                    # held-reentry through a callee is caught at the
+                    # callee's own acquire site; no self-edge here —
+                    # requires-annotated callees legitimately re-state
+                    # the already-held lock.
+        self._check_cycles()
+        return self.findings
+
+    def _check_cycles(self) -> None:
+        succ: Dict[str, Set[str]] = {}
+        for (a, b) in self.edges:
+            succ.setdefault(a, set()).add(b)
+        # DFS with path reconstruction
+        WHITE, GRAY, BLACK = 0, 1, 2
+        color = {n: WHITE for n in
+                 set(succ) | {b for bs in succ.values() for b in bs}}
+        path: List[str] = []
+
+        def dfs(n: str) -> Optional[List[str]]:
+            color[n] = GRAY
+            path.append(n)
+            for m in sorted(succ.get(n, ())):
+                if color[m] == GRAY:
+                    return path[path.index(m):] + [m]
+                if color[m] == WHITE:
+                    cyc = dfs(m)
+                    if cyc:
+                        return cyc
+            color[n] = BLACK
+            path.pop()
+            return None
+
+        for n in sorted(color):
+            if color[n] == WHITE:
+                path.clear()
+                cyc = dfs(n)
+                if cyc:
+                    hops = []
+                    for a, b in zip(cyc, cyc[1:]):
+                        hops.append(f"{a} -> {b} "
+                                    f"[{self.edges.get((a, b), '?')}]")
+                    self.findings.append(Finding(
+                        "locks", "<graph>", 0, "lock-order",
+                        "cycle",
+                        "lock acquisition-order cycle: "
+                        + "; ".join(hops)))
+                    return
+
+
+def check_locks(pkg: Package) -> List[Finding]:
+    """Entry point: all lock-discipline findings for a package."""
+    return LockChecker(pkg).run()
+
+
+def order_edges(pkg: Package) -> Dict[Tuple[str, str], str]:
+    """The static acquisition-order edge set (for diagnostics/tests)."""
+    c = LockChecker(pkg)
+    c.run()
+    return dict(c.edges)
