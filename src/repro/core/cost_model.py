@@ -36,14 +36,14 @@ class HardwareProfile:
     """Roofline description of one GPU/TPU worker class."""
 
     name: str
-    flops: float                 # peak bf16 FLOP/s per worker
-    hbm_bw: float                # bytes/s
-    hbm_bytes: float
-    host_bw: float               # host->device weight-loading path, bytes/s
-    mfu: float = 0.45            # achieved fraction of peak in prefill
-    bw_eff: float = 0.75         # achieved fraction of peak HBM bw in decode
-    dispatch_overhead: float = 0.030   # fixed per-epoch coordination cost (s)
-    link_bw: float = 450e9       # worker↔worker KV-migration link, bytes/s
+    flops: float                 # unit: flops/s (peak bf16 per worker)
+    hbm_bw: float                # unit: bytes/s @hbm
+    hbm_bytes: float             # unit: bytes
+    host_bw: float               # unit: bytes/s @host (weight-loading path)
+    mfu: float = 0.45            # unit: 1 (achieved fraction of peak, prefill)
+    bw_eff: float = 0.75         # unit: 1 (achieved fraction of HBM bw, decode)
+    dispatch_overhead: float = 0.030   # unit: s (per-epoch coordination)
+    link_bw: float = 450e9       # unit: bytes/s @link (worker↔worker KV link)
 
 
 H200 = HardwareProfile("h200", 989e12, 4.8e12, 141e9, 55e9, link_bw=900e9)
@@ -65,9 +65,11 @@ class LLMProfile:
     """Served-model size/bandwidth profile the roofline terms price."""
 
     name: str
-    param_bytes: float           # resident weight bytes (bf16)
-    active_param_count: float    # params touched per token (MoE-aware)
-    kv_bytes_per_token: float    # 2 * L * Hkv * Dh * 2 bytes
+    param_bytes: float           # unit: bytes @weights (resident, bf16)
+    active_param_count: float    # unit: flops/token (2 FLOPs per param-token)
+    # dimensionally params ARE flops/token up to the roofline's pure-number
+    # 2.0 scalar, which is why t_prefill's algebra closes without a cast
+    kv_bytes_per_token: float    # unit: bytes/token @kv (2*L*Hkv*Dh*2)
     supports_partial_prefix: bool = True
 
     @staticmethod
@@ -123,6 +125,7 @@ class OperatorProfiler:
         self._ewma: Dict[str, float] = {}
         self._count: Dict[str, int] = {}
 
+    # unit: -> s
     def estimate(self, node: NodeSpec, rendered_args: str = "") -> float:
         """Expected seconds for one physical execution of ``node``."""
         key = f"{node.op}|{node.id}"
@@ -220,8 +223,8 @@ class HardwareCalibration:
 class EpochWeights:
     """The epoch-blend weights (makespan-vs-load mix, overhead weight)."""
 
-    mu: float = 0.7              # makespan vs aggregate-load blend
-    lam: float = 1.0             # per-epoch overhead regularizer weight
+    mu: float = 0.7              # unit: 1 (makespan vs aggregate-load blend)
+    lam: float = 1.0             # unit: 1 (per-epoch overhead weight)
 
 
 class CostModel:
@@ -247,7 +250,7 @@ class CostModel:
         self.weights = weights if weights is not None else EpochWeights()
         # physical batch size per LLM node (after coalescing); default 1
         self.batch_sizes = dict(batch_sizes or {})
-        self.avg_context_tokens = avg_context_tokens
+        self.avg_context_tokens = avg_context_tokens  # unit: tokens
         self.use_profiling = use_profiling   # ablation: naive dep-count scoring
         self.use_prep_guidance = use_prep_guidance  # ablation: no T_prep term
         self.cpu_parallelism = cpu_parallelism
@@ -262,6 +265,7 @@ class CostModel:
         self.warm_aliases = dict(warm_aliases or {})
 
     # ------------------------------------------------------------- T_model
+    # unit: -> s
     def t_model(self, v: NodeSpec, ctx: WorkerContext) -> float:
         """Model-switch cost: load ``v``'s weights unless resident."""
         if ctx.model == v.model:
@@ -285,6 +289,7 @@ class CostModel:
             out.extend(self.warm_aliases.get(p, ()))
         return out
 
+    # unit: -> tokens
     def _warm_shared_tokens(self, v: NodeSpec, ctx: WorkerContext,
                             parents: Sequence[str]) -> float:
         """Prompt tokens a warm parent lineage in ``ctx`` would cover."""
@@ -304,6 +309,7 @@ class CostModel:
             return p if self.avg_context_tokens >= p else 0.0
         return min(self.avg_context_tokens, 0.75 * p)
 
+    # unit: tokens=tokens -> s
     def t_migrate(self, v: NodeSpec, tokens: float) -> float:
         """Modeled cost of shipping ``tokens`` worth of one sequence's KV
         over the worker↔worker link (paper §5: Processor "KV-cache …
@@ -313,6 +319,7 @@ class CostModel:
         prof = self.models[v.model]
         return tokens * prof.kv_bytes_per_token / self.hw.link_bw
 
+    # unit: -> tokens s
     def prefill_plan(self, v: NodeSpec, ctx: WorkerContext,
                      parents: Sequence[str],
                      peer_ctxs: Sequence[WorkerContext] = ()
@@ -345,6 +352,7 @@ class CostModel:
                 return p - remote, t_mig
         return p, 0.0
 
+    # unit: -> tokens
     def effective_prefill_tokens(self, v: NodeSpec, ctx: WorkerContext,
                                  parents: Sequence[str],
                                  peer_ctxs: Sequence[WorkerContext] = ()
@@ -352,6 +360,7 @@ class CostModel:
         """Prompt tokens left to prefill after every warm-KV discount."""
         return self.prefill_plan(v, ctx, parents, peer_ctxs)[0]
 
+    # unit: tokens=tokens -> 1
     def migration_wins(self, v: NodeSpec, tokens: float,
                        batch: Optional[int] = None) -> bool:
         """True when migrating ``tokens`` of warm KV beats re-prefilling
@@ -368,6 +377,7 @@ class CostModel:
         t_saved = self._roofline_times(v, tokens, max(n, 1))[0]
         return self.t_migrate(v, tokens) < t_saved
 
+    # unit: eff_p=tokens n=1 -> s s
     def _roofline_times(self, v: NodeSpec, eff_p: float, n: int
                         ) -> Tuple[float, float]:
         """(t_prefill, t_decode): the single source of the roofline
@@ -380,10 +390,13 @@ class CostModel:
         # decode: each step reads the weights once + the batch's KV
         ctx_len = self.avg_context_tokens + v.est_prompt_tokens
         kv_read = n * prof.kv_bytes_per_token * ctx_len
-        t_step = (prof.param_bytes + kv_read) / (self.hw.hbm_bw
-                                                 * self.hw.bw_eff)
+        # the bytes above are read once per step, and a step emits one
+        # token — so the quotient is a per-token time, not a total
+        t_step = ((prof.param_bytes + kv_read)
+                  / (self.hw.hbm_bw * self.hw.bw_eff))  # unit: s/token
         return t_prefill, v.max_new_tokens * t_step
 
+    # unit: -> s s
     def infer_breakdown(self, v: NodeSpec,
                         batch: Optional[int] = None
                         ) -> Tuple[float, float]:
@@ -392,6 +405,7 @@ class CostModel:
         n = batch if batch is not None else self._batch(v)
         return self._roofline_times(v, float(v.est_prompt_tokens), n)
 
+    # unit: -> s
     def t_infer(self, v: NodeSpec, ctx: WorkerContext,
                 parents: Sequence[str],
                 peer_ctxs: Sequence[WorkerContext] = ()) -> float:
@@ -405,6 +419,7 @@ class CostModel:
         return t_prefill + t_decode + t_mig
 
     # -------------------------------------------------------------- T_prep
+    # unit: -> s
     def t_prep(self, v: NodeSpec, done: frozenset) -> float:
         """Critical path of unmaterialized tool ancestors feeding v.
 
@@ -425,6 +440,7 @@ class CostModel:
         return t_total
 
     # ------------------------------------------------------------- T total
+    # unit: -> s -
     def t_node(self, v_id: str, ctx: WorkerContext, done: frozenset,
                peer_ctxs: Sequence[WorkerContext] = ()
                ) -> Tuple[float, WorkerContext]:
@@ -441,6 +457,7 @@ class CostModel:
         return t, ctx.after(v_id, v.model)
 
     # ---------------------------------------------------------- epoch cost
+    # unit: busy_values=s -> s
     def epoch_blend(self, busy_values: Sequence[float]) -> float:
         """The epoch scoring blend over per-worker busy times — shared by
         the solver's predictions AND the online drift monitor's observed
@@ -449,6 +466,7 @@ class CostModel:
         return (mu * max(busy_values) + (1 - mu) * sum(busy_values)
                 + lam * self.hw.dispatch_overhead)
 
+    # unit: -> s - -
     def epoch_cost(self, components: Sequence[Sequence[str]],
                    workers: Sequence[int], state: SystemState
                    ) -> Tuple[float, Tuple[WorkerContext, ...], Dict[int, float]]:

@@ -29,15 +29,15 @@ class NodeSpec:
     # --- LLM nodes -----------------------------------------------------
     model: str = ""                    # model id, e.g. "qwen3-14b"
     prompt: str = ""                   # template; $param / ${upstream_id}
-    max_new_tokens: int = 32
+    max_new_tokens: int = 32           # unit: tokens
     temperature: float = 0.0
     # --- tool nodes ------------------------------------------------------
     op: str = ""                       # "sql" | "http" | "pyfn"
     args: str = ""                     # template; $param / ${upstream_id}
     # ---------------------------------------------------------------------
     # static estimate hints (overridden by the online profiler)
-    est_prompt_tokens: int = 64
-    est_seconds: float = 0.0
+    est_prompt_tokens: int = 64        # unit: tokens
+    est_seconds: float = 0.0           # unit: s
 
     def is_llm(self) -> bool:
         """True for GPU-resident LLM nodes, False for CPU tool nodes."""

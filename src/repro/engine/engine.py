@@ -75,7 +75,7 @@ def _batched_sample(logits, keys, temps, *, vocab_size: int):
     int32, advanced keys (B, 2))."""
     lg = logits.astype(jnp.float32)
     if vocab_size and vocab_size < lg.shape[-1]:
-        mask = jnp.arange(lg.shape[-1]) < vocab_size
+        mask = jnp.arange(lg.shape[-1], dtype=jnp.int32) < vocab_size
         lg = jnp.where(mask, lg, -1e30)
     greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
     stoch = temps > 0.0
@@ -245,7 +245,7 @@ class InferenceEngine:
         # instead of fragmenting into per-arrival recompiles.  Applied
         # only while the engine is idle — a running batch is never stalled.
         self.admission_window = admission_window
-        self.params = None               # guarded-by: self._cv | engine-loop
+        self.params = None   # guarded-by: self._cv | engine-loop ;; memspace: device
         self.stats = EngineStats()
         self.warm_prefixes = RadixPrefixTree()  # guarded-by: self._cv | engine-loop
         self._paged_layout = self.model.paged_kv_layout()
@@ -280,7 +280,7 @@ class InferenceEngine:
         self._pending: "deque[_Request]" = deque()   # guarded-by: self._cv | engine-loop
         self._active: List[_Slot] = []               # guarded-by: self._cv | engine-loop
         self._warm: "OrderedDict[int, tuple]" = OrderedDict()  # guarded-by: self._cv | engine-loop
-        self._view = None                # guarded-by: self._cv | engine-loop
+        self._view = None    # guarded-by: self._cv | engine-loop ;; memspace: device
         self._view_pad = 0               # guarded-by: self._cv | engine-loop
         self._dirty = True               # guarded-by: self._cv | engine-loop
         self._loop_thread: Optional[threading.Thread] = None

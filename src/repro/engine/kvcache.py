@@ -60,9 +60,9 @@ class PagedKVCache:  # requires: InferenceEngine._cv | engine-loop
         self.dtype = jnp.dtype(dtype)
         # (L, P, page, Hkv, Dh) — jnp on DEVICE; host never holds the KV
         shape = (num_layers, num_pages, page_size, kv_heads, head_dim)
-        self.k = jnp.zeros(shape, self.dtype)
-        self.v = jnp.zeros(shape, self.dtype)
-        self.refcount = np.zeros((num_pages,), np.int64)
+        self.k = jnp.zeros(shape, self.dtype)   # memspace: device
+        self.v = jnp.zeros(shape, self.dtype)   # memspace: device
+        self.refcount = np.zeros((num_pages,), np.int64)  # memspace: host
         self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
         self.sequences: Dict[int, SequenceEntry] = {}
         self._next_seq = 0
@@ -261,6 +261,7 @@ class PagedKVCache:  # requires: InferenceEngine._cv | engine-loop
         return list(self.sequences[seq_id].page_ids)
 
     # --------------------------------------------------------- migration
+    # memspace: staging (the allowlisted D2H boundary for migration)
     def export_sequence(self, seq_id: int,
                         length: Optional[int] = None
                         ) -> Tuple[np.ndarray, np.ndarray]:
@@ -282,6 +283,7 @@ class PagedKVCache:  # requires: InferenceEngine._cv | engine-loop
                            np.float32)
         return out_k, out_v
 
+    # memspace: staging (the allowlisted H2D boundary for migration)
     def import_sequence(self, k: np.ndarray, v: np.ndarray) -> int:
         """Adopt a migrated contiguous KV block: allocate pages, scatter
         the tokens in (the host->device staging point), refcount them,
@@ -302,6 +304,11 @@ class PagedKVCache:  # requires: InferenceEngine._cv | engine-loop
             self._unref_page(p)
 
     # --------------------------------------------------------------- sizing
-    def hbm_bytes(self, dtype_bytes: int = 2) -> int:
+    def hbm_bytes(self, dtype_bytes: Optional[int] = None) -> int:
+        """Pool footprint in bytes.  Defaults to the POOL's element
+        width — the old ``=2`` default silently assumed bf16 while the
+        pool allocates f32, undercounting by 2x."""
+        if dtype_bytes is None:
+            dtype_bytes = self.dtype.itemsize
         return 2 * self.num_layers * self.num_pages * self.page_size \
             * self.kv_heads * self.head_dim * dtype_bytes

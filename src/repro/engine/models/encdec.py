@@ -19,6 +19,8 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.engine.models import layers as L
 
+# memspace: device (model arrays are device-resident jnp values)
+
 Params = Dict[str, Any]
 
 
@@ -271,7 +273,7 @@ class EncDecLM:
         enc_positions = jnp.where(
             jnp.arange(T_enc, dtype=jnp.int32)[None, :] < cache["enc_len"][:, None],
             jnp.arange(T_enc, dtype=jnp.int32)[None, :], -1)
-        batch_ix = jnp.arange(B)
+        batch_ix = jnp.arange(B, dtype=jnp.int32)
 
         def body(x, xs):
             p, k_c, v_c, xk, xv = xs

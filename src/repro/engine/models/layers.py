@@ -157,6 +157,8 @@ _CHUNK_TARGET_ELEMS = 4 * 1024 * 1024
 # ---------------------------------------------------------------------------
 import os as _os
 
+# memspace: device (model arrays are device-resident jnp values)
+
 _ACT_CTX: dict = {"mesh": None}
 
 
@@ -398,7 +400,7 @@ def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int,
     vpad = logits.shape[-1]
     logits32 = logits.astype(jnp.float32)
     if vpad > vocab_size:
-        pad_mask = jnp.arange(vpad) < vocab_size
+        pad_mask = jnp.arange(vpad, dtype=jnp.int32) < vocab_size
         logits32 = jnp.where(pad_mask, logits32, NEG_INF)
     logz = jax.nn.logsumexp(logits32, axis=-1)
     gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]

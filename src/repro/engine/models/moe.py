@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from repro.configs.base import MoEConfig
 from repro.engine.models.layers import dense_init
 
+# memspace: device (model arrays are device-resident jnp values)
+
 
 def moe_init(rng, d_model: int, cfg: MoEConfig, dtype):
     ks = jax.random.split(rng, 5)
@@ -87,7 +89,10 @@ def _group_moe(x_g, p, cfg: MoEConfig, capacity: int):
 
     # ---- combine ----------------------------------------------------------
     gathered = out_buf[e_idx, c_idx]                             # (N*K, D)
-    w = (top_w.reshape(-1, 1) * keep.reshape(-1, 1)).astype(out_buf.dtype)
+    # keep is bool: cast before the multiply (f32*bool has no promotion
+    # path under jax_numpy_dtype_promotion=strict, the CI dtype leg)
+    w = (top_w.reshape(-1, 1)
+         * keep.reshape(-1, 1).astype(top_w.dtype)).astype(out_buf.dtype)
     out = (gathered * w).reshape(N, K, D).sum(axis=1)
 
     # ---- load-balancing stats (Switch aux loss terms) ---------------------

@@ -24,6 +24,8 @@ from repro.configs.base import ModelConfig
 from repro.engine.models import layers as L
 from repro.engine.models.xlstm import causal_conv1d, causal_conv1d_step
 
+# memspace: device (model arrays are device-resident jnp values)
+
 Params = Dict[str, Any]
 RG_C = 8.0
 
@@ -345,7 +347,7 @@ class GriffinLM:
         B = token.shape[0]
         pos = cache["length"]
         x = params["embed"][token]                             # (B,D)
-        batch_ix = jnp.arange(B)
+        batch_ix = jnp.arange(B, dtype=jnp.int32)
 
         def rblock_step(p, x, lru, conv_buf):
             h = L.rms_norm(x[:, None], p["ln"], cfg.norm_eps)[:, 0]

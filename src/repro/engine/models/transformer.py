@@ -21,6 +21,8 @@ from repro.configs.base import ModelConfig
 from repro.engine.models import layers as L
 from repro.engine.models import moe as M
 
+# memspace: device (model arrays are device-resident jnp values)
+
 Params = Dict[str, Any]
 
 
@@ -356,7 +358,7 @@ class TransformerLM:
         T = cache["k"].shape[2]
         arange_t = jnp.arange(T, dtype=jnp.int32)[None, :]
         kv_pos = jnp.where(arange_t < (pos0 + Ssuf)[:, None], arange_t, -1)
-        batch_ix = jnp.arange(B)[:, None]
+        batch_ix = jnp.arange(B, dtype=jnp.int32)[:, None]
 
         def run_block(p, x, k_cache, v_cache):
             if cfg.family == "dense":      # sequence-parallel residual (SP)
@@ -423,7 +425,7 @@ class TransformerLM:
         T = cache["k"].shape[2]
         slot = (pos % T).astype(jnp.int32)
         kv_pos = self._kv_slot_positions(pos, T)               # (B,T)
-        batch_ix = jnp.arange(B)
+        batch_ix = jnp.arange(B, dtype=jnp.int32)
 
         def step_block(p, x, k_cache, v_cache):
             h = L.rms_norm(x, p["ln1"], cfg.norm_eps)

@@ -27,6 +27,8 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.engine.models import layers as L
 
+# memspace: device (model arrays are device-resident jnp values)
+
 Params = Dict[str, Any]
 
 

@@ -69,6 +69,7 @@ def _decode_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref,
         m_out_ref[0, 0, :, 0] = m_ref[:, 0]
         l_out_ref[0, 0, :, 0] = l
 
+# vmem-budget: 1.5 MiB @ block_t=1024 T=4096 Dh=128 H=32 Hkv=8
 def decode_attention_kernel(q, k, v, q_positions, kv_positions, *,
                             window: int, block_t: int,
                             interpret: bool = False):

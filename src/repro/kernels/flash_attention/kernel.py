@@ -72,6 +72,7 @@ def _flash_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
 
 
+# vmem-budget: 2.0 MiB @ block_q=512 block_kv=512 Sq=4096 Skv=4096 Dh=128
 def flash_attention_kernel(q, k, v, q_positions, kv_positions, *,
                            causal: bool, window: int,
                            block_q: int, block_kv: int,

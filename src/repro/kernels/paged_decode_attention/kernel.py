@@ -83,6 +83,7 @@ def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
         l_out_ref[0, 0, :, 0] = l
 
 
+# vmem-budget: 0.25 MiB @ page_size=64 Dh=128 H=32 Hkv=8
 def paged_decode_attention_kernel(q, k_pages, v_pages, page_table, lengths,
                                   *, interpret: bool = False):
     """q: (B,H,Dh); k_pages/v_pages: (P, page, Hkv, Dh) — the pool;

@@ -38,6 +38,7 @@ def _scan_kernel(a_ref, b_ref, o_ref, h_ref, *, bs: int):
     h_ref[...] = h
 
 
+# vmem-budget: 1.0 MiB @ block_b=8 block_s=16 block_d=512 B=8 S=4096 D=1024
 def linear_scan_kernel(a, b, *, block_b: int, block_s: int, block_d: int,
                        interpret: bool = False):
     """a, b: (B,S,D) f32 -> h (B,S,D) f32 from zero initial state."""

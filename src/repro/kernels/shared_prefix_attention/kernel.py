@@ -69,6 +69,7 @@ def _prefix_kernel(kp_ref, q_ref, k_ref, v_ref,
         l_out_ref[:, 0] = l_ref[:, 0]
 
 
+# vmem-budget: 1.5 MiB @ block_p=1024 P=32768 B=8 H=32 Hkv=8 Dh=128
 def prefix_attention_kernel(q, prefix_k, prefix_v, prefix_positions, *,
                             block_p: int, interpret: bool = False):
     """q: (B,H,Dh); prefix_k/v: (P,Hkv,Dh) shared across the batch.

@@ -1,0 +1,40 @@
+"""devmem fixture: every rule violated once."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Pool:
+    def __init__(self, n):
+        self.k = jnp.zeros((n, 4))       # memspace: device
+        self.v = jnp.zeros((n, 4))       # memspace: device
+        self.meta = np.zeros((n,))       # memspace: host
+
+    def adopt(self, k, v):
+        self.k = k
+        self.v = v
+
+
+class Engine:
+    def __init__(self, pool: Pool):
+        self.pool = pool
+        donate = (1, 2)
+        self._step = jax.jit(lambda p, k, v: (p, k, v),
+                             donate_argnums=donate)
+        self.params = jnp.zeros((4,))    # memspace: device
+
+    def hot_step(self, pool: Pool):
+        # implicit D2H in the hot path (no staging annotation)
+        snapshot = np.asarray(self.params)
+        logits, new_k, new_v = self._step(self.params, pool.k, pool.v)
+        checksum = pool.k.sum()          # use-after-donate: not rebound
+        pool.adopt(new_k, new_v)
+        return snapshot, checksum
+
+    def upload_rows(self, rows):
+        out = []
+        for row in rows:
+            host_row = [float(x) for x in row]
+            out.append(jnp.asarray(host_row))   # H2D inside the loop
+        ix = jnp.arange(len(out))               # unpinned index dtype
+        return out, ix

@@ -1,0 +1,40 @@
+"""devmem fixture: the same shapes, disciplined."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Pool:
+    def __init__(self, n):
+        self.k = jnp.zeros((n, 4))       # memspace: device
+        self.v = jnp.zeros((n, 4))       # memspace: device
+        self.meta = np.zeros((n,))       # memspace: host
+
+    def adopt(self, k, v):
+        self.k = k
+        self.v = v
+
+    # memspace: staging (the one sanctioned D2H boundary)
+    def export(self):
+        return np.asarray(self.k), np.asarray(self.v)
+
+
+class Engine:
+    def __init__(self, pool: Pool):
+        self.pool = pool
+        donate = (1, 2)
+        self._step = jax.jit(lambda p, k, v: (p, k, v),
+                             donate_argnums=donate)
+        self.params = jnp.zeros((4,))    # memspace: device
+
+    def hot_step(self, pool: Pool):
+        logits, new_k, new_v = self._step(self.params, pool.k, pool.v)
+        pool.adopt(new_k, new_v)         # rebinds k/v: donation is legal
+        checksum = pool.k.sum()          # read AFTER the rebind
+        return checksum
+
+    def upload_rows(self, rows):
+        host = [[float(x) for x in row] for row in rows]
+        batch = jnp.asarray(host, jnp.float32)   # one hoisted upload
+        ix = jnp.arange(batch.shape[0], dtype=jnp.int32)
+        return batch, ix

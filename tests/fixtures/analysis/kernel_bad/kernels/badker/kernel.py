@@ -1,0 +1,34 @@
+"""kernelcheck fixture: triple, divisibility, arity, and budget all
+violated (never imported — AST only)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _body(x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+# vmem-budget: 0.5 MiB @ block_s=1024 S=4096 D=512
+def bad_kernel(x, *, block_s: int, interpret: bool = False):
+    """x: (B, S, D)."""
+    B, S, D = x.shape
+    bs = min(block_s, S)
+    # NOTE: no `assert S % bs == 0` — the tiling is unproven
+    grid = (B, S // bs)
+
+    return pl.pallas_call(
+        _body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, D), lambda b, it: (b, it, 0)),
+        ],
+        # index lambda takes 3 args for a 2-dim grid
+        out_specs=pl.BlockSpec((1, bs, D), lambda b, it, ix: (b, it, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bs, D), jnp.float32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,32 @@
+"""kernelcheck fixture: a contract-clean wrapper (never imported)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _body(x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+# vmem-budget: 2.0 MiB @ block_s=256 S=4096 D=512
+def good_kernel(x, *, block_s: int, interpret: bool = False):
+    """x: (B, S, D); S % block_s == 0."""
+    B, S, D = x.shape
+    bs = min(block_s, S)
+    assert S % bs == 0
+    grid = (B, S // bs)
+
+    return pl.pallas_call(
+        _body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, D), lambda b, it: (b, it, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, D), lambda b, it: (b, it, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bs, D), jnp.float32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,6 @@
+"""Public entry for the goodker fixture package."""
+from .kernel import good_kernel
+
+
+def apply(x, block_s=256, interpret=False):
+    return good_kernel(x, block_s=block_s, interpret=interpret)

@@ -1,0 +1,5 @@
+"""Reference implementation for the goodker fixture package."""
+
+
+def apply_ref(x):
+    return x

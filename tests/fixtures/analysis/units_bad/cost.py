@@ -1,0 +1,34 @@
+"""units fixture: a cost term priced over the wrong channel, and a
+seconds/bytes mix-up."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Hw:
+    hbm_bw: float = 1e12        # unit: bytes/s @hbm
+    link_bw: float = 1e10       # unit: bytes/s @link
+    host_bw: float = 1e9        # unit: bytes/s @host
+    dispatch: float = 1e-4      # unit: s
+
+
+@dataclass
+class Llm:
+    param_bytes: float = 1e9    # unit: bytes @weights
+    kv_per_tok: float = 1e5     # unit: bytes/token @kv
+
+
+class Cost:
+    def __init__(self, hw: Hw, llm: Llm):
+        self.hw = hw
+        self.llm = llm
+
+    # unit: tokens=tokens -> s
+    def t_migrate(self, tokens):
+        kv = self.llm.kv_per_tok * tokens
+        # KV bytes move over the LINK, but are priced at host_bw
+        return kv / self.hw.host_bw + self.hw.dispatch
+
+    # unit: -> s
+    def t_step(self):
+        # bytes + seconds: a dimensional mix-up
+        return self.llm.param_bytes + self.hw.dispatch

@@ -1,0 +1,31 @@
+"""units fixture: the same cost terms, dimensionally sound."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Hw:
+    hbm_bw: float = 1e12        # unit: bytes/s @hbm
+    link_bw: float = 1e10       # unit: bytes/s @link
+    host_bw: float = 1e9        # unit: bytes/s @host
+    dispatch: float = 1e-4      # unit: s
+
+
+@dataclass
+class Llm:
+    param_bytes: float = 1e9    # unit: bytes @weights
+    kv_per_tok: float = 1e5     # unit: bytes/token @kv
+
+
+class Cost:
+    def __init__(self, hw: Hw, llm: Llm):
+        self.hw = hw
+        self.llm = llm
+
+    # unit: tokens=tokens -> s
+    def t_migrate(self, tokens):
+        kv = self.llm.kv_per_tok * tokens
+        return kv / self.hw.link_bw + self.hw.dispatch
+
+    # unit: -> s
+    def t_step(self):
+        return self.llm.param_bytes / self.hw.hbm_bw + self.hw.dispatch

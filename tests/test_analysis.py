@@ -109,6 +109,62 @@ def test_allowlisted_sync_passes_and_counts():
     assert res.counts["syncs_allowed"] == 1
 
 
+def test_devmem_violations_are_caught():
+    res = _fixture("devmem_bad")
+    assert not res.ok()
+    symbols = sorted(f.symbol for f in res.findings
+                     if f.checker == "devmem")
+    assert symbols == ["d2h", "dtype", "h2d-loop", "use-after-donate"]
+    uad = next(f for f in res.findings if f.symbol == "use-after-donate")
+    assert "pool.k" in uad.message and "rebound" in uad.message
+
+
+def test_devmem_disciplined_tree_is_clean():
+    res = _fixture("devmem_good")
+    assert res.ok(strict=True)
+    assert res.findings == []
+    assert res.counts["memspace_attrs"] == 4
+    assert res.counts["donate_sites"] == 1
+
+
+def test_kernel_contract_violations_are_caught():
+    res = _fixture("kernel_bad")
+    assert not res.ok()
+    symbols = [f.symbol for f in res.findings if f.checker == "kernel"]
+    assert symbols.count("triple") == 2          # ops.py + ref.py missing
+    assert "blockspec-divide" in symbols
+    assert "grid-arity" in symbols
+    assert "vmem-budget" in symbols
+    vb = next(f for f in res.findings if f.symbol == "vmem-budget")
+    # the static estimate is exact at the annotated bindings
+    assert "6.00 MiB" in vb.message and "0.50 MiB" in vb.message
+
+
+def test_kernel_contract_clean_package_passes():
+    res = _fixture("kernel_good")
+    assert res.ok(strict=True)
+    assert res.findings == []
+    assert res.counts["kernels_checked"] == 1
+    assert res.counts["vmem_budgets"] == 1
+
+
+def test_units_mismatches_are_caught():
+    res = _fixture("units_bad")
+    assert not res.ok()
+    msgs = [f.message for f in res.findings if f.checker == "units"]
+    assert any("@kv bytes priced over the @host path" in m
+               for m in msgs)
+    assert any("incompatible terms" in m for m in msgs)
+
+
+def test_units_sound_tree_is_clean():
+    res = _fixture("units_good")
+    assert res.ok(strict=True)
+    assert res.findings == []
+    assert res.counts["unit_fields"] >= 6
+    assert res.counts["unit_functions"] >= 2
+
+
 def test_allowlist_entry_without_reason_is_an_error(tmp_path):
     bad = tmp_path / "allow.toml"
     bad.write_text('[[allow]]\nchecker = "hostsync"\n'
@@ -138,6 +194,63 @@ def test_seeded_violation_is_caught():
                for f in res.findings)
 
 
+def test_seeded_use_after_donate_is_caught():
+    """Read the donated pool between the step and the rebind — the
+    exact hazard adopt_pages exists to prevent."""
+    source = (DEFAULT_SRC / "engine" / "engine.py").read_text()
+    needle = "        kv.adopt_pages(new_k, new_v)"
+    assert needle in source
+    evil = ("        checksum = kv.k.sum()\n" + needle)
+    res = run(override={"engine/engine.py":
+                        source.replace(needle, evil, 1)})
+    assert any(f.checker == "devmem" and f.symbol == "use-after-donate"
+               and f.qualname.endswith("._decode_paged")
+               for f in res.findings)
+
+
+def test_seeded_d2h_in_hot_path_is_caught():
+    """An un-annotated np.asarray on the donated pool's device arrays
+    must be flagged as an implicit transfer."""
+    source = (DEFAULT_SRC / "engine" / "kvcache.py").read_text()
+    needle = "    def adopt_pages(self, k, v) -> None:"
+    assert needle in source
+    evil = needle + "\n        shadow = np.asarray(self.k)"
+    res = run(override={"engine/kvcache.py":
+                        source.replace(needle, evil, 1)})
+    assert any(f.checker == "devmem" and f.symbol == "d2h"
+               and f.qualname.endswith(".adopt_pages")
+               for f in res.findings)
+
+
+def test_seeded_vmem_overflow_is_caught():
+    """Shrinking a kernel's declared budget below its static footprint
+    must turn the run red."""
+    rel = "kernels/flash_attention/kernel.py"
+    source = (DEFAULT_SRC / rel).read_text()
+    needle = "# vmem-budget: 2.0 MiB"
+    assert needle in source
+    res = run(override={rel: source.replace(
+        needle, "# vmem-budget: 0.5 MiB", 1)})
+    assert any(f.checker == "kernel" and f.symbol == "vmem-budget"
+               and "exceeds the declared budget" in f.message
+               for f in res.findings)
+
+
+def test_seeded_unit_mismatch_is_caught():
+    """Pricing KV migration at host_bw instead of link_bw is the §11.6
+    channel confusion the units checker exists for."""
+    rel = "core/cost_model.py"
+    source = (DEFAULT_SRC / rel).read_text()
+    needle = "tokens * prof.kv_bytes_per_token / self.hw.link_bw"
+    assert needle in source
+    res = run(override={rel: source.replace(
+        needle,
+        "tokens * prof.kv_bytes_per_token / self.hw.host_bw", 1)})
+    assert any(f.checker == "units"
+               and "priced over the @host path" in f.message
+               for f in res.findings)
+
+
 # ------------------------------------------------------------------- CLI
 
 
@@ -157,6 +270,54 @@ def test_cli_exits_nonzero_on_violating_fixture():
         cwd=REPO, capture_output=True, text=True)
     assert proc.returncode != 0
     assert "bump_racy" in proc.stdout
+
+
+def test_cli_only_restricts_checkers():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--strict",
+         "--only", "units", "--json"],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    import json
+    payload = json.loads(proc.stdout)
+    assert payload["ok"]
+    # locks/hostsync allowlist entries are waived under --only units
+    assert payload["unused_allowlist"] == []
+
+
+def test_cli_sarif_output(tmp_path):
+    sarif_path = tmp_path / "analysis.sarif"
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analysis",
+         "--root", str(FX / "units_bad"),
+         "--allowlist", str(NO_ALLOW),
+         "--sarif", str(sarif_path)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode != 0          # fixture violates on purpose
+    import json
+    doc = json.loads(sarif_path.read_text())
+    assert doc["version"] == "2.1.0"
+    run_ = doc["runs"][0]
+    assert run_["tool"]["driver"]["name"] == "tools.analysis"
+    results = run_["results"]
+    assert results, "violating fixture must produce SARIF results"
+    for r in results:
+        loc = r["locations"][0]["physicalLocation"]
+        assert loc["region"]["startLine"] >= 1
+        assert loc["artifactLocation"]["uri"].endswith("cost.py")
+    assert any(r["ruleId"].startswith("units/") for r in results)
+
+
+def test_cli_sarif_on_clean_tree_is_empty(tmp_path):
+    sarif_path = tmp_path / "clean.sarif"
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--strict",
+         "--sarif", str(sarif_path)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    import json
+    doc = json.loads(sarif_path.read_text())
+    assert doc["runs"][0]["results"] == []
 
 
 # ------------------------------------------------- debugsync runtime layer
@@ -231,6 +392,57 @@ def test_batch_state_is_macro_done_locked_view():
     for q in range(4):
         st.set_result(q, "draft", f"r{q}")
     assert st.is_macro_done("draft")
+
+
+def test_moe_router_combine_survives_strict_promotion():
+    """devmem/CI-dtype-leg find: the router combine multiplied f32
+    weights by a raw bool keep-mask — f32*bool has no promotion path
+    under jax_numpy_dtype_promotion=strict.  Pin the .astype fix."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import MoEConfig
+    from repro.engine.models.moe import moe_ffn, moe_init
+
+    cfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=8)
+    p = moe_init(jax.random.PRNGKey(0), 16, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 16), jnp.float32)
+    with jax.numpy_dtype_promotion("strict"):
+        out, aux = moe_ffn(x, p, cfg)
+    assert out.shape == x.shape
+    assert out.dtype == jnp.float32
+
+
+def test_kvcache_hbm_bytes_uses_pool_dtype():
+    """devmem find: hbm_bytes() defaulted to 2 bytes/elem (bf16) while
+    the pool allocates float32 — a silent 2x undercount."""
+    import jax.numpy as jnp
+    from repro.engine.kvcache import PagedKVCache
+
+    kv = PagedKVCache(num_layers=1, num_pages=2, page_size=4,
+                      kv_heads=2, head_dim=8)      # default f32 pool
+    elems = 2 * 1 * 2 * 4 * 2 * 8
+    assert kv.dtype == jnp.float32
+    assert kv.hbm_bytes() == elems * 4             # pool's own width
+    assert kv.hbm_bytes(dtype_bytes=2) == elems * 2  # explicit override
+    bf16 = PagedKVCache(num_layers=1, num_pages=2, page_size=4,
+                        kv_heads=2, head_dim=8, dtype=jnp.bfloat16)
+    assert bf16.hbm_bytes() == elems * 2
+
+
+def test_batched_sample_index_mask_is_int32_pinned():
+    """devmem dtype find: the vocab mask built its arange without a
+    dtype (platform-int width).  Pin the jnp.int32 fix end to end."""
+    import jax
+    import jax.numpy as jnp
+    from repro.engine.engine import _batched_sample
+
+    logits = jnp.zeros((2, 8), jnp.float32).at[:, 3].set(5.0)
+    keys = jnp.zeros((2, 2), jnp.uint32)
+    temps = jnp.zeros((2,), jnp.float32)
+    with jax.numpy_dtype_promotion("strict"):
+        toks, _ = _batched_sample(logits, keys, temps, vocab_size=6)
+    assert toks.dtype == jnp.int32
+    assert list(toks) == [3, 3]
 
 
 def test_checkpoint_batch_size_mismatch_raises(tmp_path):

@@ -1,10 +1,14 @@
 """Repo-specific static analysis (DESIGN.md §11).
 
-Three AST checkers over ``src/repro``:
+Six AST checkers over ``src/repro``:
 
 * ``locks``    — guarded-attribute discipline + lock-order graph
 * ``jit``      — jax.jit declaration/tracer-branch/bucketing hazards
 * ``hostsync`` — device→host syncs reachable from the engine step loop
+* ``devmem``   — device/host memory-space discipline (§11.4)
+* ``kernel``   — Pallas kernel contracts: triples, BlockSpec
+  divisibility, grid arity, VMEM budgets (§11.5)
+* ``units``    — dimensional analysis over the cost model (§11.6)
 
 Run locally from the repo root::
 
@@ -20,15 +24,21 @@ import pathlib
 from typing import Dict, List, Optional, Tuple
 
 from tools.analysis.common import Allowlist, AllowEntry, Finding, Package
+from tools.analysis.devmem import check_devmem, count_devmem
 from tools.analysis.hostsync import (DEFAULT_ROOTS, check_hostsync,
                                      hot_path_size)
 from tools.analysis.jit import check_jit, count_jit_sites
+from tools.analysis.kernelcheck import check_kernels, count_kernels
 from tools.analysis.locks import check_locks
+from tools.analysis.units import check_units, count_units
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
 DEFAULT_SRC = REPO_ROOT / "src" / "repro"
 DEFAULT_ALLOWLIST = pathlib.Path(__file__).resolve().parent / \
     "allowlist.toml"
+DEFAULT_KERNEL_TESTS = REPO_ROOT / "tests" / "test_kernels.py"
+
+CHECKERS = ("locks", "jit", "hostsync", "devmem", "kernel", "units")
 
 
 @dataclasses.dataclass
@@ -53,15 +63,38 @@ class Result:
 def run(root: Optional[pathlib.Path] = None,
         allowlist: Optional[pathlib.Path] = None,
         override: Optional[Dict[str, str]] = None,
-        roots: Tuple[str, ...] = DEFAULT_ROOTS) -> Result:
-    """Run all three checkers over ``root`` (default: src/repro)."""
+        roots: Tuple[str, ...] = DEFAULT_ROOTS,
+        only: Optional[Tuple[str, ...]] = None) -> Result:
+    """Run the checkers over ``root`` (default: src/repro).
+
+    ``only`` restricts to a subset of :data:`CHECKERS` — the allowlist
+    and counts still cover every checker, but unused-entry strictness
+    is waived for the checkers that did not run.
+    """
     root = pathlib.Path(root) if root is not None else DEFAULT_SRC
     allow_path = allowlist if allowlist is not None else \
         DEFAULT_ALLOWLIST
+    active = tuple(only) if only else CHECKERS
     pkg = Package.load(root, override=override)
     allow = Allowlist.load(allow_path)
-    raw = check_locks(pkg) + check_jit(pkg) \
-        + check_hostsync(pkg, roots=roots)
+    # the parity-test cross-reference only makes sense for the real
+    # tree; fixture packages are not expected in tests/test_kernels.py
+    tests_source: Optional[str] = None
+    if root == DEFAULT_SRC and DEFAULT_KERNEL_TESTS.is_file():
+        tests_source = DEFAULT_KERNEL_TESTS.read_text(encoding="utf-8")
+    raw: List[Finding] = []
+    if "locks" in active:
+        raw += check_locks(pkg)
+    if "jit" in active:
+        raw += check_jit(pkg)
+    if "hostsync" in active:
+        raw += check_hostsync(pkg, roots=roots)
+    if "devmem" in active:
+        raw += check_devmem(pkg)
+    if "kernel" in active:
+        raw += check_kernels(pkg, tests_source)
+    if "units" in active:
+        raw += check_units(pkg)
     kept: List[Finding] = []
     suppressed: List[Tuple[Finding, AllowEntry]] = []
     for f in raw:
@@ -70,6 +103,9 @@ def run(root: Optional[pathlib.Path] = None,
             suppressed.append((f, e))
         else:
             kept.append(f)
+    n_memspace, n_donate = count_devmem(pkg)
+    n_kernels, n_blockspecs, n_budgets = count_kernels(pkg)
+    n_unit_fields, n_unit_fns = count_units(pkg)
     counts = {
         "named_locks": sum(len(c.locks) for c in pkg.classes.values()),
         "guarded_attrs": sum(len(c.guarded)
@@ -79,10 +115,25 @@ def run(root: Optional[pathlib.Path] = None,
         "syncs_allowed": sum(1 for f, e in suppressed
                              if f.checker == "hostsync"
                              and e.kind == "sync"),
+        "memspace_attrs": n_memspace,
+        "donate_sites": n_donate,
+        "budgeted_transfers": sum(1 for f, e in suppressed
+                                  if f.checker == "devmem"
+                                  and e.kind == "transfer"),
+        "kernels_checked": n_kernels,
+        "blockspecs_checked": n_blockspecs,
+        "vmem_budgets": n_budgets,
+        "unit_fields": n_unit_fields,
+        "unit_functions": n_unit_fns,
         "suppressions": len(suppressed),
         "findings": len(kept),
     }
+    # an allowlist entry for a checker that did not run can't be used —
+    # don't let a partial run fail strict mode over it
+    unused = [e for e in allow.unused()
+              if e.checker in ("*",) + active] if only else \
+        allow.unused()
     return Result(findings=kept, suppressed=suppressed,
                   config_errors=list(pkg.config_errors),
                   allow_errors=list(allow.errors),
-                  unused=allow.unused(), counts=counts)
+                  unused=unused, counts=counts)

@@ -1,4 +1,5 @@
-"""CLI driver: ``python -m tools.analysis [--strict] [--json]``."""
+"""CLI driver: ``python -m tools.analysis [--strict] [--json]
+[--only CHECKER] [--sarif PATH]``."""
 from __future__ import annotations
 
 import argparse
@@ -6,23 +7,80 @@ import json
 import pathlib
 import sys
 
-from tools.analysis import DEFAULT_ALLOWLIST, DEFAULT_SRC, run
+from tools.analysis import (CHECKERS, DEFAULT_ALLOWLIST, DEFAULT_SRC,
+                            Result, run)
+
+_SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/"
+                 "sarif-spec/master/Schemata/sarif-schema-2.1.0.json")
+
+
+def to_sarif(res: Result, src_prefix: str = "src/repro") -> dict:
+    """Render a run as minimal SARIF 2.1.0 for GitHub code scanning."""
+    rules = {}
+    results = []
+    for f in list(res.findings) + list(res.config_errors):
+        rule_id = f"{f.checker}/{f.symbol}" if f.symbol else f.checker
+        rules.setdefault(rule_id, {
+            "id": rule_id,
+            "shortDescription": {"text": f"{f.checker}: {f.symbol}"},
+        })
+        results.append({
+            "ruleId": rule_id,
+            "level": "error",
+            "message": {"text": f"{f.qualname}: {f.message}"},
+            "locations": [{
+                "physicalLocation": {
+                    "artifactLocation": {
+                        "uri": f"{src_prefix}/{f.file}",
+                        "uriBaseId": "ROOT",
+                    },
+                    "region": {"startLine": max(1, f.line)},
+                },
+            }],
+        })
+    return {
+        "$schema": _SARIF_SCHEMA,
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {
+                "driver": {
+                    "name": "tools.analysis",
+                    "informationUri":
+                        "https://example.invalid/tools/analysis",
+                    "rules": sorted(rules.values(),
+                                    key=lambda r: r["id"]),
+                },
+            },
+            "results": results,
+        }],
+    }
 
 
 def main(argv=None) -> int:
-    """Run the three checkers; exit 0 only on a clean tree."""
+    """Run the checkers; exit 0 only on a clean tree."""
     ap = argparse.ArgumentParser(prog="python -m tools.analysis")
     ap.add_argument("--strict", action="store_true",
                     help="also fail on unused allowlist entries")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="machine-readable output (counts + findings)")
+    ap.add_argument("--only", action="append", choices=CHECKERS,
+                    metavar="CHECKER",
+                    help="run only this checker (repeatable); unused-"
+                         "allowlist strictness applies to it alone")
+    ap.add_argument("--sarif", type=pathlib.Path, metavar="PATH",
+                    help="also write findings as SARIF 2.1.0 to PATH")
     ap.add_argument("--root", type=pathlib.Path, default=DEFAULT_SRC,
                     help="source tree to analyze")
     ap.add_argument("--allowlist", type=pathlib.Path,
                     default=DEFAULT_ALLOWLIST)
     args = ap.parse_args(argv)
 
-    res = run(root=args.root, allowlist=args.allowlist)
+    res = run(root=args.root, allowlist=args.allowlist,
+              only=tuple(args.only) if args.only else None)
+    if args.sarif is not None:
+        args.sarif.parent.mkdir(parents=True, exist_ok=True)
+        args.sarif.write_text(json.dumps(to_sarif(res), indent=1),
+                              encoding="utf-8")
     if args.as_json:
         payload = {
             "counts": res.counts,
@@ -49,10 +107,15 @@ def main(argv=None) -> int:
     status = "clean" if res.ok(strict=args.strict) else "FAILED"
     print(f"tools.analysis: {status} — {c['findings']} finding(s), "
           f"{c['suppressions']} suppressed "
-          f"({c['syncs_allowed']} allowed syncs), "
+          f"({c['syncs_allowed']} allowed syncs, "
+          f"{c['budgeted_transfers']} budgeted transfers), "
           f"{c['named_locks']} locks / {c['guarded_attrs']} guarded "
           f"attrs / {c['jit_sites']} jit sites / "
-          f"{c['hot_path_functions']} hot-path functions")
+          f"{c['hot_path_functions']} hot-path functions / "
+          f"{c['memspace_attrs']} memspace attrs / "
+          f"{c['kernels_checked']} kernels ({c['vmem_budgets']} "
+          f"budgeted) / {c['unit_fields']}+{c['unit_functions']} "
+          f"unit-annotated fields+functions")
     return 0 if res.ok(strict=args.strict) else 1
 
 

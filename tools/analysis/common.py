@@ -28,10 +28,13 @@ import re
 import tokenize
 from typing import Dict, List, Optional, Set, Tuple
 
-# Annotation keywords recognized in comments (see DESIGN.md §11).
+# Annotation keywords recognized in comments (see DESIGN.md §11).  One
+# comment may carry several annotations separated by ``;;`` (a line can
+# only hold one ``#`` comment, so composition happens inside it).
 _ANNOT = re.compile(
-    r"#\s*(guarded-by|requires|runs-on|lock-alias|swap-only|jit-ok|"
-    r"not-a-sync)\s*:?\s*(.*)$")
+    r"#?\s*(guarded-by|requires|runs-on|lock-alias|swap-only|jit-ok|"
+    r"not-a-sync|memspace|masked|vmem-budget|unit|not-a-transfer)"
+    r"\s*:\s*(.*)$")
 
 _LOCK_CTORS = {"Lock", "RLock", "Condition"}
 _NAMED_FACTORIES = {"named_lock", "named_condition"}
@@ -57,28 +60,52 @@ class Finding:
                 f"{self.qualname}: {self.message}")
 
 
-def parse_annotations(source: str) -> Dict[int, Tuple[str, str]]:
-    """Map line -> (keyword, value) for annotation comments."""
-    out: Dict[int, Tuple[str, str]] = {}
+def parse_annotations(source: str) -> Dict[int, List[Tuple[str, str]]]:
+    """Map line -> [(keyword, value), ...] for annotation comments."""
+    out: Dict[int, List[Tuple[str, str]]] = {}
     lines = source.splitlines()
     try:
         toks = tokenize.generate_tokens(io.StringIO(source).readline)
         for tok in toks:
             if tok.type != tokenize.COMMENT:
                 continue
-            m = _ANNOT.match(tok.string)
-            if not m:
+            pairs = []
+            for part in tok.string.split(";;"):
+                m = _ANNOT.match(part.strip())
+                if m:
+                    pairs.append((m.group(1), m.group(2).strip()))
+            if not pairs:
                 continue
             lineno = tok.start[0]
             text = lines[lineno - 1] if lineno <= len(lines) else ""
             # comment-only lines annotate the def/class on the NEXT line
             if text.strip().startswith("#"):
-                out[lineno + 1] = (m.group(1), m.group(2).strip())
+                out.setdefault(lineno + 1, []).extend(pairs)
             else:
-                out[lineno] = (m.group(1), m.group(2).strip())
+                out.setdefault(lineno, []).extend(pairs)
     except tokenize.TokenError:
         pass
     return out
+
+
+def annotation(mod: "ModuleInfo", line: int, kw: str) -> Optional[str]:
+    """Value of annotation ``kw`` on ``line``, or None."""
+    for k, v in mod.annotations.get(line, ()):
+        if k == kw:
+            return v
+    return None
+
+
+def annotation_span(mod: "ModuleInfo", node: ast.AST,
+                    kw: str) -> Optional[str]:
+    """Like :func:`annotation`, over every line a (multi-line
+    statement) node spans."""
+    end = getattr(node, "end_lineno", None) or node.lineno
+    for line in range(node.lineno, end + 1):
+        val = annotation(mod, line, kw)
+        if val is not None:
+            return val
+    return None
 
 
 def attr_chain(node: ast.AST) -> Optional[Tuple[str, ...]]:
@@ -135,7 +162,7 @@ class ModuleInfo:
 
     rel: str
     tree: ast.Module
-    annotations: Dict[int, Tuple[str, str]]
+    annotations: Dict[int, List[Tuple[str, str]]]
     import_alias: Dict[str, str] = dataclasses.field(default_factory=dict)
     from_imports: Dict[str, Tuple[str, str]] = dataclasses.field(
         default_factory=dict)   # local name -> (module, original)
@@ -228,9 +255,7 @@ class Package:
         qual = f"{cname}.{node.name}" if cname else node.name
         fi = FunctionInfo(name=node.name, qualname=qual, node=node,
                           module=mod.rel, cls=cname)
-        ann = mod.annotations.get(node.lineno)
-        if ann:
-            kw, val = ann
+        for kw, val in mod.annotations.get(node.lineno, ()):
             if kw == "requires":
                 fi.requires_raw = _split_alts(val)
             elif kw == "runs-on":
@@ -242,9 +267,9 @@ class Package:
         ci = ClassInfo(name=node.name, module=mod.rel, node=node)
         self.classes[node.name] = ci
         mod.classes.append(node.name)
-        ann = mod.annotations.get(node.lineno)
-        if ann and ann[0] == "requires":
-            ci.class_requires_raw = _split_alts(ann[1])
+        req = annotation(mod, node.lineno, "requires")
+        if req is not None:
+            ci.class_requires_raw = _split_alts(req)
         for item in node.body:
             if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 ci.methods[item.name] = self._make_function(
@@ -271,9 +296,7 @@ class Package:
                 if chain is None or len(chain) != 2 or chain[0] != "self":
                     continue
                 attr = chain[1]
-            ann = mod.annotations.get(stmt.lineno)
-            if ann:
-                kw, val = ann
+            for kw, val in mod.annotations.get(stmt.lineno, ()):
                 if kw == "guarded-by":
                     ci.guarded_raw.setdefault(attr, _split_alts(val))
                 elif kw == "swap-only":

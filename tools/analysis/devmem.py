@@ -1,0 +1,491 @@
+"""Device/host memory-space discipline (DESIGN.md §11.4).
+
+Modules opt in by carrying at least one ``# memspace:`` annotation
+(``device`` / ``host`` on attribute assignments, ``staging`` on the
+functions that are *allowed* to cross the boundary).  Within an opted-in
+module the checker taint-tracks array provenance and flags:
+
+* **d2h** — ``np.asarray`` / ``np.array`` / ``jax.device_get`` applied
+  to a device-tainted value outside a ``# memspace: staging`` function.
+  Each implicit download is a blocking sync in the hot path; deliberate
+  ones carry ``# not-a-transfer: <reason>`` inline or an allowlist
+  entry with ``kind = "transfer"`` (those are the *budgeted* syncs the
+  engine already accounts in ``stats.d2h_bytes``).
+* **h2d-loop** — ``jnp.asarray`` / ``jnp.array`` of a host-tainted
+  value lexically inside a loop: a per-iteration upload that belongs
+  hoisted above the loop (or batched).
+* **use-after-donate** — reading an array that was passed in a donated
+  position of a ``donate_argnums`` jit.  After donation the buffer is
+  invalid; the read is only legal once the name is rebound (directly,
+  or by a callee method known to rebind the attr, e.g.
+  ``kv.adopt_pages`` rebinding ``kv.k``/``kv.v``).
+* **dtype** — unpinned index dtypes: ``jnp.arange`` without an explicit
+  ``dtype`` (platform-dependent width; page-table indices must be
+  ``jnp.int32``), ``jnp.asarray``/``jnp.array`` of a list literal
+  without a dtype, and any explicit ``float64`` (promotion creep).
+* **memspace-conflict** — assigning a host-tainted value to a
+  device-annotated attribute (or vice versa).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.analysis.common import (Finding, FunctionInfo, ModuleInfo,
+                                   Package, annotation, annotation_span,
+                                   attr_chain)
+
+_NP_ROOTS = {"np", "numpy"}
+_JNP_ROOTS = {"jnp", "jax"}
+_D2H_CALLS = {("np", "asarray"), ("np", "array"), ("numpy", "asarray"),
+              ("numpy", "array"), ("jax", "device_get")}
+_H2D_CALLS = {("jnp", "asarray"), ("jnp", "array")}
+_HOST_METHODS = {"tolist", "item"}
+
+
+def _is_jit_value(value: ast.AST) -> bool:
+    """``jax.jit(...)`` or ``functools.partial(jax.jit, ...)``."""
+    if not isinstance(value, ast.Call):
+        return False
+    chain = attr_chain(value.func)
+    if chain and chain[-1] == "jit":
+        return True
+    if chain and chain[-1] == "partial" and value.args:
+        inner = attr_chain(value.args[0])
+        return bool(inner) and inner[-1] == "jit"
+    return False
+
+
+def _donated_positions(value: ast.Call,
+                       local_assigns: Optional[Dict[str, ast.AST]] = None
+                       ) -> Optional[Set[int]]:
+    """Positions named by ``donate_argnums`` (ints collected from the
+    whole expression, so ``(2, 3) if gpu else ()`` resolves to {2, 3};
+    a bare name resolves through the enclosing function's assigns)."""
+    kws = {k.arg: k.value for k in value.keywords}
+    if _is_jit_value(value) and "donate_argnums" not in kws \
+            and value.args and isinstance(value.args[0], ast.Call):
+        kws = {k.arg: k.value for k in value.args[0].keywords} | kws
+    expr = kws.get("donate_argnums")
+    if isinstance(expr, ast.Name) and local_assigns:
+        expr = local_assigns.get(expr.id, expr)
+    if expr is None:
+        return None
+    return {n.value for n in ast.walk(expr)
+            if isinstance(n, ast.Constant) and isinstance(n.value, int)}
+
+
+class _Scope:
+    """Per-module registries shared by every function check."""
+
+    def __init__(self, pkg: Package, mod: ModuleInfo):
+        self.pkg = pkg
+        self.mod = mod
+        # (ClassName|None, attr/fn name) -> "device"|"host"
+        self.attr_space: Dict[Tuple[Optional[str], str], str] = {}
+        # (ClassName|None, name) -> donated positions
+        self.donate: Dict[Tuple[Optional[str], str], Set[int]] = {}
+        self.jitted: Set[Tuple[Optional[str], str]] = set()
+        self._collect()
+
+    def _collect(self) -> None:
+        mod = self.mod
+        for node in mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._note_function(None, node)
+            elif isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        self._note_function(node.name, item)
+                        local = {
+                            s.targets[0].id: s.value
+                            for s in ast.walk(item)
+                            if isinstance(s, ast.Assign)
+                            and len(s.targets) == 1
+                            and isinstance(s.targets[0], ast.Name)}
+                        for stmt in ast.walk(item):
+                            self._note_assign(node.name, stmt, local)
+                    elif isinstance(item, ast.Assign):
+                        self._note_assign(node.name, item)
+
+    def _note_function(self, cname, node) -> None:
+        for deco in node.decorator_list:
+            if _is_jit_value(deco) or (
+                    attr_chain(deco) or ("",))[-1] == "jit":
+                self.jitted.add((cname, node.name))
+                if isinstance(deco, ast.Call):
+                    pos = _donated_positions(deco)
+                    if pos:
+                        self.donate[(cname, node.name)] = pos
+
+    def _note_assign(self, cname, stmt, local_assigns=None) -> None:
+        if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+            return
+        chain = attr_chain(stmt.targets[0])
+        if chain is None or len(chain) != 2 or chain[0] != "self":
+            return
+        attr = chain[1]
+        space = annotation_span(self.mod, stmt, "memspace")
+        if space is not None:
+            word = space.split()[0] if space.split() else ""
+            if word in ("device", "host"):
+                self.attr_space[(cname, attr)] = word
+        if isinstance(stmt.value, ast.Call):
+            if _is_jit_value(stmt.value):
+                self.jitted.add((cname, attr))
+                pos = _donated_positions(stmt.value, local_assigns)
+                if pos:
+                    self.donate[(cname, attr)] = pos
+
+    # class methods that rebind ``self.<attr>`` — used to clear
+    # use-after-donate poison at ``obj.method(...)`` call sites
+    def rebinds(self, cls: str, method: str) -> Set[str]:
+        ci = self.pkg.classes.get(cls)
+        if ci is None or method not in ci.methods:
+            return set()
+        out: Set[str] = set()
+        for stmt in ast.walk(ci.methods[method].node):
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    ch = attr_chain(tgt)
+                    if ch and len(ch) == 2 and ch[0] == "self":
+                        out.add(ch[1])
+        return out
+
+
+class _FnCheck:
+    """Taint walk of one function, in statement order."""
+
+    def __init__(self, scope: _Scope, fi: FunctionInfo,
+                 findings: List[Finding]):
+        self.scope = scope
+        self.mod = scope.mod
+        self.fi = fi
+        self.findings = findings
+        self.env: Dict[str, str] = {}
+        self.poison: Dict[str, int] = {}      # donated expr -> donate line
+        self.loop_depth = 0
+        self.stmt: Optional[ast.stmt] = None
+        self.local_types = scope.pkg.local_types_for(fi)
+        note = annotation(self.mod, fi.node.lineno, "memspace")
+        self.staging = note is not None and note.split()[:1] == ["staging"]
+
+    def flag(self, node, symbol, msg) -> None:
+        if annotation_span(self.mod, self.stmt or node,
+                           "not-a-transfer"):
+            return
+        self.findings.append(Finding(
+            "devmem", self.mod.rel, node.lineno, self.fi.qualname,
+            symbol, msg))
+
+    # ------------------------------------------------------------ taint
+    def taint(self, e: ast.AST) -> Optional[str]:
+        if isinstance(e, (ast.List, ast.ListComp)):
+            return "host"            # dicts may hold device arrays
+        if isinstance(e, ast.Name):
+            return self.env.get(e.id)
+        if isinstance(e, ast.Attribute):
+            chain = attr_chain(e)
+            if chain:
+                owner = self._owner(chain)
+                if owner:
+                    return self.scope.attr_space.get(owner)
+            return None
+        if isinstance(e, ast.Subscript):
+            return self.taint(e.value)
+        if isinstance(e, ast.BinOp):
+            l, r = self.taint(e.left), self.taint(e.right)
+            if "device" in (l, r):
+                return "device"
+            if "host" in (l, r):
+                return "host"
+            return None
+        if isinstance(e, ast.UnaryOp):
+            return self.taint(e.operand)
+        if isinstance(e, ast.IfExp):
+            a, b = self.taint(e.body), self.taint(e.orelse)
+            return a if a == b else None
+        if isinstance(e, ast.Call):
+            return self._call_taint(e)
+        return None
+
+    def _owner(self, chain) -> Optional[Tuple[Optional[str], str]]:
+        ci = self.scope.pkg.classes.get(self.fi.cls) if self.fi.cls \
+            else None
+        got = self.scope.pkg.class_of_chain(ci, chain, self.local_types)
+        if got:
+            return got
+        if len(chain) == 1:
+            return (None, chain[0])
+        return None
+
+    def _call_taint(self, e: ast.Call) -> Optional[str]:
+        chain = attr_chain(e.func)
+        if chain is None:
+            if isinstance(e.func, ast.Attribute) \
+                    and e.func.attr in _HOST_METHODS:
+                return "host"
+            return None
+        if chain[-1] in _HOST_METHODS or chain[-1] in ("int", "float") \
+                and len(chain) == 1:
+            return "host"
+        if tuple(chain[-2:]) == ("jax", "device_get"):
+            return "host"
+        if chain[0] in _NP_ROOTS:
+            return "host"
+        if chain[0] in _JNP_ROOTS:
+            return "device"
+        key = self._callee_key(chain)
+        if key in self.scope.jitted:
+            return "device"
+        return None
+
+    def _callee_key(self, chain) -> Tuple[Optional[str], str]:
+        if len(chain) == 1:
+            return (None, chain[0])
+        if chain[0] == "self" and len(chain) == 2:
+            return (self.fi.cls, chain[1])
+        return (None, "")
+
+    # ------------------------------------------------------- statements
+    def run(self) -> None:
+        self._stmts(self.fi.node.body)
+
+    def _stmts(self, body) -> None:
+        for stmt in body:
+            self.stmt = stmt
+            self._stmt(stmt)
+
+    def _stmt(self, s: ast.stmt) -> None:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            return                       # nested defs: out of scope
+        if isinstance(s, ast.Assign):
+            self._check_expr(s.value)
+            taint = self.taint(s.value)
+            self._apply_call_effects(s.value)
+            for tgt in s.targets:
+                self._bind(tgt, s.value, taint)
+            return
+        if isinstance(s, ast.AugAssign):
+            self._check_expr(s.value)
+            self._check_load(s.target)
+            return
+        if isinstance(s, ast.AnnAssign):
+            if s.value is not None:
+                self._check_expr(s.value)
+                self._bind(s.target, s.value, self.taint(s.value))
+            return
+        if isinstance(s, ast.Expr):
+            self._check_expr(s.value)
+            self._apply_call_effects(s.value)
+            return
+        if isinstance(s, ast.Return):
+            if s.value is not None:
+                self._check_expr(s.value)
+            return
+        if isinstance(s, (ast.For, ast.AsyncFor)):
+            self._check_expr(s.iter)
+            self.loop_depth += 1
+            self._stmts(s.body)
+            self.loop_depth -= 1
+            self._stmts(s.orelse)
+            return
+        if isinstance(s, ast.While):
+            self._check_expr(s.test)
+            self.loop_depth += 1
+            self._stmts(s.body)
+            self.loop_depth -= 1
+            self._stmts(s.orelse)
+            return
+        if isinstance(s, ast.If):
+            self._check_expr(s.test)
+            self._stmts(s.body)
+            self._stmts(s.orelse)
+            return
+        if isinstance(s, (ast.With, ast.AsyncWith)):
+            for item in s.items:
+                self._check_expr(item.context_expr)
+            self._stmts(s.body)
+            return
+        if isinstance(s, ast.Try):
+            self._stmts(s.body)
+            for h in s.handlers:
+                self._stmts(h.body)
+            self._stmts(s.orelse)
+            self._stmts(s.finalbody)
+            return
+        for child in ast.iter_child_nodes(s):
+            if isinstance(child, ast.expr):
+                self._check_expr(child)
+
+    def _bind(self, tgt, value, taint) -> None:
+        if isinstance(tgt, ast.Name):
+            if taint:
+                self.env[tgt.id] = taint
+            else:
+                self.env.pop(tgt.id, None)
+        elif isinstance(tgt, ast.Tuple):
+            for el in tgt.elts:
+                self._bind(el, value, taint)
+        elif isinstance(tgt, (ast.Attribute, ast.Subscript)):
+            self._check_space_conflict(tgt, taint)
+        # any rebinding clears use-after-donate poison for that expr
+        try:
+            self.poison.pop(ast.unparse(tgt), None)
+        except Exception:
+            pass
+
+    def _check_space_conflict(self, tgt, taint) -> None:
+        chain = attr_chain(tgt)
+        if chain is None or taint is None:
+            return
+        owner = self._owner(chain)
+        if owner is None:
+            return
+        declared = self.scope.attr_space.get(owner)
+        if declared and declared != taint:
+            self.flag(tgt, "memspace-conflict",
+                      f"{'.'.join(chain)} is annotated "
+                      f"'# memspace: {declared}' but is assigned a "
+                      f"{taint}-tainted value")
+
+    # ------------------------------------------------- expression rules
+    def _check_expr(self, e: ast.AST) -> None:
+        for node in ast.walk(e):
+            if isinstance(node, ast.Call):
+                self._check_call(node)
+            elif isinstance(node, (ast.Name, ast.Attribute)) \
+                    and isinstance(getattr(node, "ctx", None), ast.Load):
+                self._check_poisoned(node)
+
+    def _check_load(self, e: ast.AST) -> None:
+        for node in ast.walk(e):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                self._check_poisoned(node)
+
+    def _check_poisoned(self, node) -> None:
+        try:
+            key = ast.unparse(node)
+        except Exception:
+            return
+        line = self.poison.get(key)
+        if line is not None:
+            self.flag(node, "use-after-donate",
+                      f"{key} was donated to a donate_argnums jit on "
+                      f"line {line} and read before being rebound — "
+                      "the donated buffer is invalid")
+
+    def _check_call(self, call: ast.Call) -> None:
+        chain = attr_chain(call.func)
+        if not chain:
+            return
+        tail2 = tuple(chain[-2:]) if len(chain) >= 2 else ()
+        if tail2 in _D2H_CALLS and call.args \
+                and self.taint(call.args[0]) == "device" \
+                and not self.staging:
+            self.flag(call, "d2h",
+                      f"implicit device->host transfer: "
+                      f"{'.'.join(chain)}() on a device-resident value "
+                      "outside a '# memspace: staging' function — each "
+                      "one is a blocking sync; hoist it to a staging "
+                      "boundary or note '# not-a-transfer: <reason>'")
+        if tail2 in _H2D_CALLS and self.loop_depth > 0 and call.args \
+                and self.taint(call.args[0]) == "host":
+            self.flag(call, "h2d-loop",
+                      "host->device upload inside a loop: "
+                      f"{'.'.join(chain)}() re-uploads per iteration — "
+                      "hoist or batch the transfer")
+        self._check_dtype(call, chain, tail2)
+
+    def _check_dtype(self, call, chain, tail2) -> None:
+        kws = {k.arg for k in call.keywords}
+        if tail2 == ("jnp", "arange") and "dtype" not in kws \
+                and len(call.args) < 4:
+            self.flag(call, "dtype",
+                      "jnp.arange without an explicit dtype: index "
+                      "width is platform-dependent — pin index/page "
+                      "arithmetic to jnp.int32")
+        if tail2 in _H2D_CALLS and call.args \
+                and isinstance(call.args[0], (ast.List, ast.ListComp)) \
+                and "dtype" not in kws and len(call.args) < 2:
+            self.flag(call, "dtype",
+                      f"{'.'.join(chain)}() of a Python list without an "
+                      "explicit dtype — the inferred width is "
+                      "platform-dependent; pin it")
+        for node in ast.walk(call):
+            ch = attr_chain(node) if isinstance(node, ast.Attribute) \
+                else None
+            if ch and ch[-1] == "float64" \
+                    and ch[0] in _NP_ROOTS | _JNP_ROOTS:
+                self.flag(node, "dtype",
+                          "explicit float64: f64 promotion creep — the "
+                          "engine is pinned to f32/bf16 arithmetic")
+
+    # ------------------------------------------------------ call effects
+    def _apply_call_effects(self, e: ast.AST) -> None:
+        for call in [n for n in ast.walk(e) if isinstance(n, ast.Call)]:
+            chain = attr_chain(call.func)
+            if not chain:
+                continue
+            key = self._callee_key(chain)
+            donated = self.scope.donate.get(key)
+            if donated:
+                for pos in sorted(donated):
+                    if pos < len(call.args):
+                        arg = call.args[pos]
+                        if isinstance(arg, (ast.Name, ast.Attribute)):
+                            self.poison[ast.unparse(arg)] = call.lineno
+                continue
+            # obj.method(...) where the method rebinds self.<attr>
+            # clears poison for obj.<attr>
+            if len(chain) >= 2 and self.poison:
+                recv = ".".join(chain[:-1])
+                cls = self._receiver_class(chain[:-1])
+                if cls:
+                    for attr in self.scope.rebinds(cls, chain[-1]):
+                        self.poison.pop(f"{recv}.{attr}", None)
+
+    def _receiver_class(self, chain) -> Optional[str]:
+        if len(chain) == 1:
+            return self.local_types.get(chain[0])
+        if chain[0] == "self" and len(chain) == 2 and self.fi.cls:
+            ci = self.scope.pkg.classes.get(self.fi.cls)
+            if ci:
+                return ci.attr_types.get(chain[1])
+        return None
+
+
+def _in_scope(mod: ModuleInfo) -> bool:
+    return any(kw == "memspace"
+               for pairs in mod.annotations.values()
+               for kw, _ in pairs)
+
+
+def check_devmem(pkg: Package) -> List[Finding]:
+    """Entry point: all memory-discipline findings for a package."""
+    findings: List[Finding] = []
+    for mod in pkg.modules.values():
+        if not _in_scope(mod):
+            continue
+        scope = _Scope(pkg, mod)
+        fns: List[FunctionInfo] = list(mod.functions.values())
+        for cname in mod.classes:
+            fns.extend(pkg.classes[cname].methods.values())
+        for fi in fns:
+            _FnCheck(scope, fi, findings).run()
+    return findings
+
+
+def count_devmem(pkg: Package) -> Tuple[int, int]:
+    """(memspace-annotated attrs/modules, donate-jit sites)."""
+    n_attrs = 0
+    n_donate = 0
+    for mod in pkg.modules.values():
+        if not _in_scope(mod):
+            continue
+        scope = _Scope(pkg, mod)
+        n_attrs += len(scope.attr_space)
+        n_donate += len(scope.donate)
+    return n_attrs, n_donate

@@ -19,7 +19,7 @@ import ast
 from typing import Dict, List, Optional, Set, Tuple
 
 from tools.analysis.common import (Finding, FunctionInfo, Package,
-                                   attr_chain)
+                                   annotation, attr_chain)
 
 DEFAULT_ROOTS = ("InferenceEngine._run_loop", "InferenceEngine._step")
 
@@ -78,9 +78,8 @@ class _SyncScan:
                             if full == "jax"}
 
     def _flag(self, node: ast.AST, symbol: str, what: str) -> None:
-        ann = self.mod.annotations.get(node.lineno)
-        if ann is not None and ann[0] == "not-a-sync" \
-                and ann[1].strip():
+        note = annotation(self.mod, node.lineno, "not-a-sync")
+        if note is not None and note.strip():
             return
         self.findings.append(Finding(
             "hostsync", self.fi.module, node.lineno, self.fi.qualname,

@@ -26,7 +26,7 @@ import ast
 from typing import Dict, List, Optional, Set, Tuple
 
 from tools.analysis.common import (Finding, FunctionInfo, Package,
-                                   attr_chain)
+                                   annotation, attr_chain)
 
 _DECLARED_KWARGS = {"static_argnums", "static_argnames",
                     "donate_argnums", "donate_argnames",
@@ -326,9 +326,8 @@ def check_jit(pkg: Package) -> List[Finding]:
     n_sites = 0
     for mod, qual, info, fn in _iter_jit_sites(pkg):
         n_sites += 1
-        ann = mod.annotations.get(info["lineno"])
-        ok_comment = ann is not None and ann[0] == "jit-ok" \
-            and ann[1].strip()
+        note = annotation(mod, info["lineno"], "jit-ok")
+        ok_comment = note is not None and note.strip()
         if not info["declared"] and not ok_comment:
             findings.append(Finding(
                 "jit", mod.rel, info["lineno"], qual, "jax.jit",

@@ -1,0 +1,547 @@
+"""Pallas kernel contracts over ``src/repro/kernels/*`` (DESIGN.md §11.5).
+
+Four statically-checkable contracts per kernel package:
+
+* **triple** — every package keeps its ``kernel.py`` / ``ops.py`` /
+  ``ref.py`` triple, and the package is cross-referenced by the
+  interpret-mode parity tests (``tests/test_kernels.py``), so a kernel
+  can't land without a reference implementation and an A/B test.
+* **grid-arity** — every BlockSpec index lambda takes exactly
+  ``len(grid)`` arguments (plus ``num_scalar_prefetch`` refs under a
+  ``PrefetchScalarGridSpec``); a silent arity mismatch is a tracing
+  error only at call time, on hardware.
+* **blockspec-divide** — block shapes must divide the operand shapes
+  they tile.  Shapes are tracked symbolically (``B, S, H, D = x.shape``
+  unpacks, ``reshape``/``transpose``/``swapaxes`` chains) and
+  divisibility is discharged by ``assert X % b == 0`` facts in the
+  wrapper; a ``# masked: <reason>`` note on the BlockSpec line opts a
+  deliberately ragged tiling out.
+* **vmem-budget** — a static footprint estimate (sum of block + scratch
+  tiles at the production point named by the annotation's bindings)
+  must fit the wrapper's ``# vmem-budget: <MiB> MiB @ sym=val ...``
+  declaration, so future multi-page / double-buffered blocks can't
+  silently blow VMEM.  Operand tiles are costed at 4 bytes/element
+  (f32 upper bound); scratch uses its declared dtype.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, List, Optional, Tuple
+
+from tools.analysis.common import (Finding, ModuleInfo, Package,
+                                   annotation_span, attr_chain)
+
+_DTYPE_BYTES = {"float32": 4, "int32": 4, "uint32": 4, "bfloat16": 2,
+                "float16": 2, "int8": 1, "uint8": 1, "float64": 8,
+                "int64": 8, "bool_": 1}
+_OPERAND_BYTES = 4          # f32 upper bound for in/out tiles
+_SHAPE_METHODS_PASS = {"astype"}
+
+
+def _norm(e: ast.AST) -> str:
+    """Normalized source text of an expression (symbolic dim identity)."""
+    return ast.unparse(e)
+
+
+class _BudgetSyntax(ValueError):
+    pass
+
+
+def parse_budget(text: str) -> Tuple[float, Dict[str, int]]:
+    """``2.0 MiB @ bq=512 Dh=128`` -> (MiB, symbol bindings)."""
+    text = text.strip()
+    m = re.match(r"^([0-9.]+)\s*MiB\s*(?:@\s*(.*))?$", text)
+    if not m:
+        raise _BudgetSyntax(
+            f"vmem-budget must be '<MiB> MiB @ sym=val ...', got {text!r}")
+    binds: Dict[str, int] = {}
+    for tok in (m.group(2) or "").split():
+        if "=" not in tok:
+            raise _BudgetSyntax(f"bad binding {tok!r} in vmem-budget")
+        name, _, val = tok.partition("=")
+        binds[name] = int(val)
+    return float(m.group(1)), binds
+
+
+class _Wrapper:
+    """Shape/divisibility context of one kernel wrapper function."""
+
+    def __init__(self, fn: ast.AST):
+        self.fn = fn
+        # var name -> {axis: normalized dim expr}; full unpacks fill all
+        self.shapes: Dict[str, Dict[int, str]] = {}
+        self.ranks: Dict[str, int] = {}
+        self.dim_syms: set = set()           # names known to be dims
+        self.facts: set = set()              # (dim_norm, block_norm)
+        self.fact_blocks: set = set()        # block_norm with any fact
+        self.assigns: Dict[str, ast.AST] = {}
+        self.defaults: Dict[str, ast.AST] = {}
+        self._collect()
+
+    def _collect(self) -> None:
+        a = self.fn.args
+        pos = list(a.args) + list(a.kwonlyargs)
+        defs = list(a.defaults) + list(a.kw_defaults)
+        for arg, d in zip(reversed(pos), reversed(defs)):
+            if d is not None:
+                self.defaults[arg.arg] = d
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Assign):
+                self._note_assign(node)
+            elif isinstance(node, ast.Assert):
+                self._note_assert(node.test)
+
+    def _note_assign(self, node: ast.Assign) -> None:
+        if len(node.targets) != 1:
+            return
+        tgt, val = node.targets[0], node.value
+        if isinstance(tgt, ast.Name):
+            self.assigns[tgt.id] = val
+            shp = self.shape_of(val)
+            if shp is not None:
+                self.shapes[tgt.id] = shp
+                self.ranks[tgt.id] = len(shp)
+        elif isinstance(tgt, ast.Tuple) and all(
+                isinstance(el, ast.Name) for el in tgt.elts):
+            names = [el.id for el in tgt.elts]
+            # B, S, H, D = x.shape  — full unpack defines dim symbols
+            if isinstance(val, ast.Attribute) and val.attr == "shape":
+                chain = attr_chain(val.value)
+                if chain and len(chain) == 1:
+                    var = chain[0]
+                    self.shapes[var] = {i: n for i, n in enumerate(names)
+                                        if n != "_"}
+                    self.ranks[var] = len(names)
+                self.dim_syms.update(n for n in names if n != "_")
+                return
+            if isinstance(val, ast.Tuple) and \
+                    len(val.elts) == len(names):
+                for name, el in zip(names, val.elts):
+                    self.assigns[name] = el
+                    # T, Hkv = k.shape[1], k.shape[2]
+                    dim = self._shape_subscript(el)
+                    if dim is not None:
+                        var, axis = dim
+                        self.shapes.setdefault(var, {})[axis] = name
+                        self.dim_syms.add(name)
+
+    @staticmethod
+    def _shape_subscript(e: ast.AST) -> Optional[Tuple[str, int]]:
+        if isinstance(e, ast.Subscript) \
+                and isinstance(e.value, ast.Attribute) \
+                and e.value.attr == "shape" \
+                and isinstance(e.slice, ast.Constant) \
+                and isinstance(e.slice.value, int):
+            chain = attr_chain(e.value.value)
+            if chain and len(chain) == 1:
+                return chain[0], e.slice.value
+        return None
+
+    def _note_assert(self, test: ast.AST) -> None:
+        if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.And):
+            for v in test.values:
+                self._note_assert(v)
+            return
+        # X % b == 0
+        if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+                and isinstance(test.ops[0], ast.Eq) \
+                and isinstance(test.comparators[0], ast.Constant) \
+                and test.comparators[0].value == 0 \
+                and isinstance(test.left, ast.BinOp) \
+                and isinstance(test.left.op, ast.Mod):
+            dim, blk = _norm(test.left.left), _norm(test.left.right)
+            self.facts.add((dim, blk))
+            self.fact_blocks.add(blk)
+
+    # --------------------------------------------------- symbolic shapes
+    def shape_of(self, e: ast.AST) -> Optional[Dict[int, str]]:
+        """Full symbolic shape of an expression, or None."""
+        if isinstance(e, ast.Name):
+            # partial dicts are fine: unknown axes fall back to the
+            # dim-symbol / divisibility-fact path per axis
+            return self.shapes.get(e.id)
+        if isinstance(e, ast.Call) and isinstance(e.func, ast.Attribute):
+            recv, meth = e.func.value, e.func.attr
+            if meth == "reshape":
+                args = e.args
+                if len(args) == 1 and isinstance(args[0], ast.Tuple):
+                    args = args[0].elts
+                dims = {}
+                for i, a in enumerate(args):
+                    if isinstance(a, ast.Constant) and a.value == -1:
+                        return None
+                    dims[i] = _norm(a)
+                return dims
+            base = self.shape_of(recv)
+            if base is None:
+                return None
+            if meth in _SHAPE_METHODS_PASS:
+                return base
+            if meth == "transpose":
+                perm = [a.value for a in e.args
+                        if isinstance(a, ast.Constant)]
+                if len(perm) == len(base):
+                    return {i: base[p] for i, p in enumerate(perm)}
+                return None
+            if meth == "swapaxes" and len(e.args) == 2 \
+                    and all(isinstance(a, ast.Constant) for a in e.args):
+                i, j = e.args[0].value, e.args[1].value
+                out = dict(base)
+                out[i], out[j] = base.get(j), base.get(i)
+                return out
+        return None
+
+    # ------------------------------------------------ numeric evaluation
+    def eval_num(self, e: ast.AST,
+                 binds: Dict[str, int]) -> Optional[float]:
+        if isinstance(e, ast.Constant) and isinstance(
+                e.value, (int, float)):
+            return e.value
+        if isinstance(e, ast.Name):
+            if e.id in binds:
+                return binds[e.id]
+            src = self.assigns.get(e.id)
+            if src is not None:
+                return self.eval_num(src, binds)
+            d = self.defaults.get(e.id)
+            if d is not None:
+                return self.eval_num(d, binds)
+            return None
+        if isinstance(e, ast.BinOp):
+            a = self.eval_num(e.left, binds)
+            b = self.eval_num(e.right, binds)
+            if a is None or b is None:
+                return None
+            if isinstance(e.op, ast.Add):
+                return a + b
+            if isinstance(e.op, ast.Sub):
+                return a - b
+            if isinstance(e.op, ast.Mult):
+                return a * b
+            if isinstance(e.op, ast.FloorDiv):
+                return a // b if b else None
+            if isinstance(e.op, ast.Div):
+                return a / b if b else None
+            if isinstance(e.op, ast.Mod):
+                return a % b if b else None
+            return None
+        if isinstance(e, ast.Call):
+            chain = attr_chain(e.func)
+            if chain and chain[-1] in ("min", "max"):
+                vals = [self.eval_num(a, binds) for a in e.args]
+                if any(v is None for v in vals) or not vals:
+                    return None
+                return min(vals) if chain[-1] == "min" else max(vals)
+            return None
+        if isinstance(e, ast.UnaryOp) and isinstance(e.op, ast.USub):
+            v = self.eval_num(e.operand, binds)
+            return -v if v is not None else None
+        return None
+
+
+class KernelChecker:
+    """All kernel-contract findings for one package tree."""
+
+    def __init__(self, pkg: Package, tests_source: Optional[str] = None):
+        self.pkg = pkg
+        self.tests_source = tests_source
+        self.findings: List[Finding] = []
+        self.n_kernels = 0
+        self.n_blockspecs = 0
+        self.n_budgets = 0
+
+    def flag(self, mod, line, qual, symbol, msg) -> None:
+        self.findings.append(Finding(
+            "kernel", mod.rel, line, qual, symbol, msg))
+
+    # ----------------------------------------------------------- entry
+    def check(self) -> List[Finding]:
+        pkgs: Dict[str, List[str]] = {}
+        for rel in self.pkg.modules:
+            parts = pathlib.PurePosixPath(rel).parts
+            if len(parts) == 3 and parts[0] == "kernels":
+                pkgs.setdefault(parts[1], []).append(parts[2])
+        for name, files in sorted(pkgs.items()):
+            if "kernel.py" not in files:
+                continue
+            self.n_kernels += 1
+            self._check_triple(name, files)
+        for rel, mod in self.pkg.modules.items():
+            if pathlib.PurePosixPath(rel).parts[:1] == ("kernels",):
+                self._check_module(mod)
+        return self.findings
+
+    def _check_triple(self, name: str, files: List[str]) -> None:
+        mod = self.pkg.modules[f"kernels/{name}/kernel.py"]
+        for part in ("ops.py", "ref.py"):
+            if part not in files:
+                self.flag(mod, 1, "<package>", "triple",
+                          f"kernel package {name!r} is missing {part} — "
+                          "every kernel keeps its kernel/ops/ref triple")
+        if self.tests_source is not None and \
+                name not in self.tests_source:
+            self.flag(mod, 1, "<package>", "parity-test",
+                      f"kernel package {name!r} is not referenced by the "
+                      "interpret-mode parity tests (tests/test_kernels.py)")
+
+    # ------------------------------------------------------ per-module
+    def _check_module(self, mod: ModuleInfo) -> None:
+        funcs: List[ast.AST] = [
+            n for n in ast.walk(mod.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for fn in funcs:
+            calls = [n for n in ast.walk(fn) if self._is_pallas_apply(n)]
+            if not calls:
+                continue
+            ctx = _Wrapper(fn)
+            budget = annotation_span(mod, fn, "vmem-budget") \
+                or annotation_span(
+                    mod, fn.body[0] if fn.body else fn, "vmem-budget")
+            footprint = 0.0
+            unbound = False
+            for call in calls:
+                footprint_c, unbound_c = self._check_call(
+                    mod, fn, ctx, call)
+                footprint += footprint_c
+                unbound = unbound or unbound_c
+            self._check_budget(mod, fn, budget, footprint, unbound, ctx)
+
+    @staticmethod
+    def _is_pallas_apply(n: ast.AST) -> bool:
+        """The ``pl.pallas_call(...)(operands...)`` outer application."""
+        if not isinstance(n, ast.Call) or not isinstance(n.func, ast.Call):
+            return False
+        chain = attr_chain(n.func.func)
+        return bool(chain) and chain[-1] == "pallas_call"
+
+    # ---------------------------------------------------------- budget
+    def _check_budget(self, mod, fn, budget, footprint_bytes,
+                      unbound, ctx) -> None:
+        qual = fn.name
+        if budget is None:
+            self.flag(mod, fn.lineno, qual, "vmem-budget",
+                      "kernel wrapper has no '# vmem-budget: <MiB> MiB @ "
+                      "sym=val ...' annotation — declare the VMEM "
+                      "envelope this kernel is designed for")
+            return
+        try:
+            mib, _ = parse_budget(budget)
+        except _BudgetSyntax as ex:
+            self.flag(mod, fn.lineno, qual, "vmem-syntax", str(ex))
+            return
+        self.n_budgets += 1
+        if unbound:
+            return                       # already flagged vmem-unbound
+        got = footprint_bytes / (1024 * 1024)
+        if got > mib:
+            self.flag(mod, fn.lineno, qual, "vmem-budget",
+                      f"static VMEM footprint {got:.2f} MiB exceeds the "
+                      f"declared budget {mib:.2f} MiB at the annotated "
+                      "bindings")
+
+    # ------------------------------------------------------------ call
+    def _check_call(self, mod, fn, ctx: _Wrapper,
+                    call: ast.Call) -> Tuple[float, bool]:
+        inner = call.func                  # the pallas_call(...) call
+        kw = {k.arg: k.value for k in inner.keywords}
+        n_prefetch = 0
+        if "grid_spec" in kw and isinstance(kw["grid_spec"], ast.Call):
+            for k in kw["grid_spec"].keywords:
+                kw.setdefault(k.arg, k.value)
+            npf = kw.get("num_scalar_prefetch")
+            if isinstance(npf, ast.Constant):
+                n_prefetch = int(npf.value)
+        elif "grid_spec" in kw and isinstance(kw["grid_spec"], ast.Name):
+            spec = ctx.assigns.get(kw["grid_spec"].id)
+            if isinstance(spec, ast.Call):
+                for k in spec.keywords:
+                    kw.setdefault(k.arg, k.value)
+                npf = kw.get("num_scalar_prefetch")
+                if isinstance(npf, ast.Constant):
+                    n_prefetch = int(npf.value)
+        grid_rank = self._grid_rank(ctx, kw.get("grid"))
+        in_specs = self._spec_list(ctx, kw.get("in_specs"))
+        out_specs = self._spec_list(ctx, kw.get("out_specs"))
+        operands = list(call.args)[n_prefetch:]
+        out_shapes = self._out_shapes(ctx, kw.get("out_shape"))
+
+        budget_binds: Dict[str, int] = {}
+        note = annotation_span(mod, fn, "vmem-budget") \
+            or annotation_span(mod, fn.body[0] if fn.body else fn,
+                               "vmem-budget")
+        if note is not None:
+            try:
+                _, budget_binds = parse_budget(note)
+            except _BudgetSyntax:
+                pass
+
+        footprint = 0.0
+        unbound = False
+        pairs = list(zip(in_specs, operands + [None] * len(in_specs)))
+        pairs += list(zip(out_specs, out_shapes + [None] * len(out_specs)))
+        for spec, operand in pairs:
+            if not isinstance(spec, ast.Call):
+                continue
+            self.n_blockspecs += 1
+            block, lam = (spec.args + [None, None])[:2]
+            if grid_rank is not None and isinstance(lam, ast.Lambda):
+                arity = len(lam.args.args)
+                want = grid_rank + n_prefetch
+                if arity != want:
+                    self.flag(mod, spec.lineno, fn.name, "grid-arity",
+                              f"index lambda takes {arity} args but the "
+                              f"grid has {grid_rank} dims"
+                              + (f" + {n_prefetch} scalar-prefetch refs"
+                                 if n_prefetch else ""))
+            if isinstance(block, ast.Tuple):
+                shape = self._operand_shape(ctx, operand)
+                self._check_block(mod, fn, ctx, spec, block, shape)
+                fp = self._block_bytes(ctx, block.elts, budget_binds,
+                                       _OPERAND_BYTES)
+                if fp is None:
+                    if note is not None:
+                        self.flag(mod, spec.lineno, fn.name,
+                                  "vmem-unbound",
+                                  "block shape has symbols the "
+                                  "vmem-budget bindings don't pin — "
+                                  "add sym=val to the annotation")
+                    unbound = True
+                else:
+                    footprint += fp
+        fp_s, un_s = self._scratch_bytes(mod, fn, ctx,
+                                         kw.get("scratch_shapes"),
+                                         budget_binds, note is not None)
+        return footprint + fp_s, unbound or un_s
+
+    def _scratch_bytes(self, mod, fn, ctx, scratch, binds,
+                       have_note) -> Tuple[float, bool]:
+        total, unbound = 0.0, False
+        if not isinstance(scratch, (ast.List, ast.Tuple)):
+            return total, unbound
+        for el in scratch.elts:
+            if not (isinstance(el, ast.Call) and el.args):
+                continue
+            shp = el.args[0]
+            dtype = 4
+            if len(el.args) > 1:
+                chain = attr_chain(el.args[1])
+                if chain:
+                    dtype = _DTYPE_BYTES.get(chain[-1], 4)
+            if isinstance(shp, ast.Tuple):
+                fp = self._block_bytes(ctx, shp.elts, binds, dtype)
+                if fp is None:
+                    if have_note:
+                        self.flag(mod, el.lineno, fn.name, "vmem-unbound",
+                                  "scratch shape has symbols the "
+                                  "vmem-budget bindings don't pin")
+                    unbound = True
+                else:
+                    total += fp
+        return total, unbound
+
+    def _block_bytes(self, ctx, elts, binds, elem_bytes):
+        prod = 1.0
+        for el in elts:
+            v = ctx.eval_num(el, binds)
+            if v is None:
+                return None
+            prod *= v
+        return prod * elem_bytes
+
+    # ----------------------------------------------------- block shapes
+    def _operand_shape(self, ctx, operand) -> Optional[Dict[int, str]]:
+        if operand is None:
+            return None
+        if isinstance(operand, dict):
+            return operand              # pre-resolved out_shape
+        return ctx.shape_of(operand)
+
+    def _check_block(self, mod, fn, ctx, spec, block, shape) -> None:
+        if annotation_span(mod, spec, "masked") is not None:
+            return
+        for i, el in enumerate(block.elts):
+            dim = shape.get(i) if shape is not None else None
+            if self._block_ok(ctx, el, dim):
+                continue
+            bstr = _norm(el)
+            if dim is None:
+                self.flag(mod, spec.lineno, fn.name, "blockspec-divide",
+                          f"block dim {bstr!r} (axis {i}) tiles an "
+                          "operand of unknown shape with no "
+                          "divisibility fact (assert dim % block == 0) "
+                          "— or note '# masked: <reason>'")
+            else:
+                self.flag(mod, spec.lineno, fn.name, "blockspec-divide",
+                          f"block dim {bstr!r} does not provably divide "
+                          f"operand dim {dim!r} (axis {i}) — assert "
+                          "divisibility or note '# masked: <reason>'")
+
+    def _block_ok(self, ctx: _Wrapper, el: ast.AST,
+                  dim: Optional[str]) -> bool:
+        bstr = _norm(el)
+        if isinstance(el, ast.Constant) and el.value == 1:
+            return True
+        if dim is not None:
+            if bstr == dim:
+                return True
+            if (dim, bstr) in ctx.facts:
+                return True
+            if isinstance(el, ast.Constant):
+                d = ctx.eval_num(ast.parse(dim, mode="eval").body, {})
+                if d is not None and isinstance(el.value, int) \
+                        and el.value and d % el.value == 0:
+                    return True
+            return False
+        # unknown operand shape: accept blocks that are dim symbols /
+        # products of known symbols, or that carry a divisibility fact
+        if bstr in ctx.fact_blocks:
+            return True
+        names = [n.id for n in ast.walk(el) if isinstance(n, ast.Name)]
+        return bool(names) and all(n in ctx.dim_syms for n in names)
+
+    def _grid_rank(self, ctx, grid) -> Optional[int]:
+        if isinstance(grid, ast.Name):
+            grid = ctx.assigns.get(grid.id)
+        if isinstance(grid, ast.Tuple):
+            return len(grid.elts)
+        return None
+
+    def _spec_list(self, ctx, specs) -> List[ast.AST]:
+        if specs is None:
+            return []
+        if isinstance(specs, ast.Name):
+            specs = ctx.assigns.get(specs.id)
+        if isinstance(specs, (ast.List, ast.Tuple)):
+            return list(specs.elts)
+        return [specs] if specs is not None else []
+
+    def _out_shapes(self, ctx, out_shape) -> List[Optional[Dict[int, str]]]:
+        """ShapeDtypeStruct exprs -> symbolic shapes, aligned to specs."""
+        if out_shape is None:
+            return []
+        items = out_shape.elts if isinstance(
+            out_shape, (ast.List, ast.Tuple)) else [out_shape]
+        out = []
+        for it in items:
+            if isinstance(it, ast.Call) and it.args \
+                    and isinstance(it.args[0], ast.Tuple):
+                out.append({i: _norm(d)
+                            for i, d in enumerate(it.args[0].elts)})
+            else:
+                out.append(None)
+        return out
+
+
+def check_kernels(pkg: Package,
+                  tests_source: Optional[str] = None) -> List[Finding]:
+    """Entry point: all kernel-contract findings for a package."""
+    return KernelChecker(pkg, tests_source).check()
+
+
+def count_kernels(pkg: Package) -> Tuple[int, int, int]:
+    """(kernel packages, blockspecs, budgets) for the counts export."""
+    c = KernelChecker(pkg, None)
+    c.check()
+    return c.n_kernels, c.n_blockspecs, c.n_budgets

@@ -1,0 +1,503 @@
+"""Dimensional analysis over the cost model (DESIGN.md §11.6).
+
+``# unit:`` annotations declare the physical unit of dataclass fields,
+attributes, and function returns/params; this checker propagates them
+through the arithmetic and flags provable inconsistencies — the class
+of bug where a bytes/s figure quietly prices a bytes/token term, or a
+per-step time is multiplied by a token count twice.
+
+Annotation grammar::
+
+    flops: float      # unit: flops/s
+    hbm_bw: float     # unit: bytes/s @hbm
+    # unit: eff_p=tokens n=1 -> s s          (def line: params -> returns)
+    def _roofline_times(self, v, eff_p, n): ...
+    t_step = ...      # unit: s/token (explicit cast, note in parens)
+
+A unit is a quotient of base dimensions (``s``, ``bytes``, ``tokens``,
+``flops``), ``1`` for dimensionless, or ``-`` for "don't check".  An
+optional ``@channel`` tag marks WHICH physical path a byte quantity or
+bandwidth belongs to: quantities (``@weights``, ``@kv``) may only be
+divided by bandwidths of a compatible path (``@host``, ``@hbm``,
+``@link``) — pricing a KV migration against ``host_bw`` is a finding
+even though the dimensions (bytes ÷ bytes/s) agree.
+
+The checker is deliberately conservative: unknown units are wildcards,
+numeric literals are dimensionless-tolerant, and only provable
+mismatches are flagged.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from tools.analysis.common import (Finding, Package, annotation,
+                                   annotation_span, attr_chain)
+
+BASES = {"s", "bytes", "tokens", "flops"}
+_SINGULAR = {"byte": "bytes", "token": "tokens", "flop": "flops",
+             "sec": "s", "second": "s", "seconds": "s"}
+QUANTITY_TAGS = {"weights", "kv"}
+PATH_TAGS = {"host", "hbm", "link"}
+# which physical path may price which byte quantity
+COMPAT = {"weights": {"host", "hbm"}, "kv": {"hbm", "link"}}
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    """Dimension vector (sorted (base, exponent) pairs) + channel tags."""
+
+    dims: Tuple[Tuple[str, int], ...]
+    channels: frozenset = frozenset()
+
+    @property
+    def dimless(self) -> bool:
+        return not self.dims
+
+    def render(self) -> str:
+        if not self.dims:
+            return "1"
+        num = [b if e == 1 else f"{b}^{e}" for b, e in self.dims if e > 0]
+        den = [b if e == -1 else f"{b}^{-e}" for b, e in self.dims if e < 0]
+        out = "*".join(num) or "1"
+        if den:
+            out += "/" + "/".join(den)
+        if self.channels:
+            out += " @" + ",@".join(sorted(self.channels))
+        return out
+
+
+DIMLESS = Unit(dims=())
+
+
+def _mk(dims: Dict[str, int], channels=frozenset()) -> Unit:
+    return Unit(tuple(sorted((b, e) for b, e in dims.items() if e)),
+                frozenset(channels))
+
+
+class UnitSyntaxError(ValueError):
+    pass
+
+
+def parse_unit(text: str) -> Optional[Unit]:
+    """``bytes/s @hbm`` -> Unit; ``-`` -> None (don't check)."""
+    text = re.sub(r"\(.*\)\s*$", "", text).strip()   # drop trailing note
+    if not text or text == "-":
+        return None
+    channels = set()
+    frag = []
+    for tok in text.split():
+        if tok.startswith("@"):
+            channels.add(tok[1:])
+        else:
+            frag.append(tok)
+    spec = "".join(frag)
+    if "@" in spec:                      # inline tag: bytes/s@hbm
+        spec, _, tag = spec.partition("@")
+        channels.add(tag)
+    bad = channels - QUANTITY_TAGS - PATH_TAGS
+    if bad:
+        raise UnitSyntaxError(f"unknown channel tag @{sorted(bad)[0]}")
+    dims: Dict[str, int] = {}
+    for i, part in enumerate(spec.split("/")):
+        part = _SINGULAR.get(part, part)
+        if part == "1" or part == "":
+            if i == 0:
+                continue
+            raise UnitSyntaxError(f"bad unit {text!r}")
+        if part not in BASES:
+            raise UnitSyntaxError(f"unknown base unit {part!r} in {text!r}")
+        dims[part] = dims.get(part, 0) + (1 if i == 0 else -1)
+    return _mk(dims, channels)
+
+
+@dataclasses.dataclass
+class FnUnits:
+    """Declared units of one annotated function."""
+
+    qualname: str
+    params: Dict[str, Optional[Unit]]
+    returns: List[Optional[Unit]]       # len > 1 => tuple return
+    pos: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def parse_def_annotation(text: str):
+    """``a=tokens n=1 -> s s`` -> (params dict, returns list)."""
+    text = re.sub(r"\(.*\)\s*$", "", text).strip()
+    if "->" in text:
+        lhs, _, rhs = text.partition("->")
+    else:
+        lhs, rhs = "", text
+    params: Dict[str, Optional[Unit]] = {}
+    for tok in lhs.split():
+        if "=" not in tok:
+            raise UnitSyntaxError(f"param spec {tok!r} needs name=unit")
+        name, _, u = tok.partition("=")
+        params[name] = parse_unit(u)
+    returns = [parse_unit(tok) for tok in rhs.split()] or [None]
+    return params, returns
+
+
+def _same_dims(a: Unit, b: Unit) -> bool:
+    return a.dims == b.dims
+
+
+class _UnitWalk:
+    """Infer units through one function body, in statement order."""
+
+    def __init__(self, checker: "UnitChecker", mod, fi, decl: FnUnits):
+        self.c = checker
+        self.mod = mod
+        self.fi = fi
+        self.decl = decl
+        self.env: Dict[str, Optional[Unit]] = dict(decl.params)
+
+    def flag(self, node, symbol, msg):
+        self.c.findings.append(Finding(
+            "units", self.mod.rel, node.lineno, self.fi.qualname,
+            symbol, msg))
+
+    # -------------------------------------------------------------- eval
+    def eval(self, e: ast.AST) -> Optional[Unit]:
+        if isinstance(e, ast.Constant):
+            return DIMLESS if isinstance(e.value, (int, float)) else None
+        if isinstance(e, ast.Name):
+            return self.env.get(e.id)
+        if isinstance(e, ast.Attribute):
+            chain = attr_chain(e)
+            if chain:
+                return self.c.field_units.get(chain[-1])
+            return None
+        if isinstance(e, ast.UnaryOp):
+            return self.eval(e.operand)
+        if isinstance(e, ast.BinOp):
+            return self._binop(e)
+        if isinstance(e, ast.Compare):
+            self._addlike([e.left] + list(e.comparators), e, "compare")
+            return DIMLESS
+        if isinstance(e, ast.BoolOp):
+            return DIMLESS
+        if isinstance(e, ast.IfExp):
+            return self._addlike([e.body, e.orelse], e, "branches")
+        if isinstance(e, ast.Call):
+            return self._call(e)
+        if isinstance(e, ast.Subscript):
+            base = e.value
+            if isinstance(base, ast.Call):
+                units = self._call_tuple(base)
+                ix = e.slice
+                if units is not None and isinstance(ix, ast.Constant) \
+                        and isinstance(ix.value, int) \
+                        and 0 <= ix.value < len(units):
+                    return units[ix.value]
+            return None
+        if isinstance(e, (ast.Tuple, ast.List)):
+            return None                  # handled by _eval_returns
+        return None
+
+    def _binop(self, e: ast.BinOp) -> Optional[Unit]:
+        a, b = self.eval(e.left), self.eval(e.right)
+        if isinstance(e.op, (ast.Add, ast.Sub)):
+            return self._addlike2(a, b, e)
+        if isinstance(e.op, ast.Mult):
+            if a is None or b is None:
+                return None
+            return _mk({k: v for k, v in self._dimsum(a, b, +1).items()},
+                       a.channels | b.channels)
+        if isinstance(e.op, (ast.Div, ast.FloorDiv)):
+            if a is None or b is None:
+                return None
+            self._check_channels(a, b, e)
+            ch = frozenset() if (b.channels & PATH_TAGS) \
+                else a.channels | b.channels
+            return _mk(self._dimsum(a, b, -1), ch)
+        if isinstance(e.op, ast.Mod):
+            return a
+        if isinstance(e.op, ast.Pow):
+            return None
+        return None
+
+    @staticmethod
+    def _dimsum(a: Unit, b: Unit, sign: int) -> Dict[str, int]:
+        out = dict(a.dims)
+        for base, exp in b.dims:
+            out[base] = out.get(base, 0) + sign * exp
+        return out
+
+    def _check_channels(self, num: Unit, den: Unit, node) -> None:
+        paths = den.channels & PATH_TAGS
+        if not paths:
+            return
+        for q in num.channels & QUANTITY_TAGS:
+            for p in paths:
+                if p not in COMPAT.get(q, set()):
+                    self.flag(node, "channel",
+                              f"@{q} bytes priced over the @{p} path "
+                              f"(allowed: {sorted(COMPAT.get(q, set()))})"
+                              " — wrong bandwidth for this quantity")
+
+    def _addlike2(self, a, b, node, what="terms") -> Optional[Unit]:
+        known = [u for u in (a, b) if u is not None and not u.dimless]
+        if len(known) == 2 and not _same_dims(known[0], known[1]):
+            self.flag(node, "mix",
+                      f"incompatible {what}: {known[0].render()} vs "
+                      f"{known[1].render()}")
+            return None
+        if not known:
+            return DIMLESS if a is not None and b is not None else None
+        u = known[0]
+        ch = (a.channels if a else frozenset()) | \
+            (b.channels if b else frozenset())
+        return Unit(u.dims, frozenset(ch))
+
+    def _addlike(self, exprs, node, what) -> Optional[Unit]:
+        out: Optional[Unit] = DIMLESS
+        for e in exprs:
+            out = self._addlike2(out, self.eval(e), node, what)
+        return out
+
+    # ------------------------------------------------------------- calls
+    def _call(self, e: ast.Call) -> Optional[Unit]:
+        units = self._call_tuple(e)
+        if units is None:
+            return None
+        return units[0] if len(units) == 1 else None
+
+    def _call_tuple(self, e: ast.Call) -> Optional[List[Optional[Unit]]]:
+        chain = attr_chain(e.func)
+        name = chain[-1] if chain else None
+        if name in ("min", "max", "sum", "abs"):
+            args = []
+            for a in e.args:
+                if isinstance(a, (ast.GeneratorExp, ast.ListComp)):
+                    args.append(a.elt)
+                else:
+                    args.append(a)
+            return [self._addlike(args, e, f"{name}() arguments")]
+        if name in ("float", "int", "round", "ceil", "floor"):
+            return [self.eval(e.args[0])] if e.args else None
+        if name == "len":
+            return [DIMLESS]
+        decl = self.c.functions.get(name) if name else None
+        if decl is not None:
+            self._check_args(e, decl)
+            return decl.returns
+        return None
+
+    def _check_args(self, e: ast.Call, decl: FnUnits) -> None:
+        for pname, want in decl.params.items():
+            if want is None:
+                continue
+            got_expr = None
+            if pname in decl.pos and len(e.args) > decl.pos[pname]:
+                got_expr = e.args[decl.pos[pname]]
+            for kw in e.keywords:
+                if kw.arg == pname:
+                    got_expr = kw.value
+            if got_expr is None:
+                continue
+            got = self.eval(got_expr)
+            if got is not None and not got.dimless \
+                    and not _same_dims(got, want):
+                self.flag(e, "arg",
+                          f"argument {pname}={got.render()} but "
+                          f"{decl.qualname} declares {want.render()}")
+
+    # --------------------------------------------------------- statements
+    def walk(self, stmts) -> None:
+        for s in stmts:
+            self.stmt(s)
+
+    def stmt(self, s: ast.AST) -> None:
+        if isinstance(s, ast.Assign):
+            self._assign(s, s.targets, s.value)
+        elif isinstance(s, ast.AnnAssign) and s.value is not None:
+            self._assign(s, [s.target], s.value)
+        elif isinstance(s, ast.AugAssign):
+            if isinstance(s.target, ast.Name):
+                cur = self.env.get(s.target.id)
+                if isinstance(s.op, (ast.Add, ast.Sub)):
+                    self.env[s.target.id] = self._addlike2(
+                        cur, self.eval(s.value), s)
+                else:
+                    self.env[s.target.id] = None
+        elif isinstance(s, ast.Return) and s.value is not None:
+            self._return(s)
+        elif isinstance(s, ast.Expr):
+            self.eval(s.value)
+        elif isinstance(s, (ast.If, ast.For, ast.While)):
+            if isinstance(s, ast.For) and isinstance(s.target, ast.Name):
+                self.env[s.target.id] = None
+            self.walk(s.body)
+            self.walk(s.orelse)
+        elif isinstance(s, ast.With):
+            self.walk(s.body)
+        elif isinstance(s, ast.Try):
+            self.walk(s.body)
+            for h in s.handlers:
+                self.walk(h.body)
+            self.walk(s.orelse)
+            self.walk(s.finalbody)
+
+    def _assign(self, s, targets, value) -> None:
+        cast = annotation_span(self.mod, s, "unit")
+        inferred = None
+        if isinstance(value, ast.Call):
+            units = self._call_tuple(value)
+            inferred = units[0] if units and len(units) == 1 else None
+            tup = units
+        else:
+            inferred = self.eval(value)
+            tup = None
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                if cast is not None:
+                    try:
+                        self.env[tgt.id] = parse_unit(cast)
+                    except UnitSyntaxError as ex:
+                        self.flag(s, "unit-syntax", str(ex))
+                else:
+                    self.env[tgt.id] = inferred
+            elif isinstance(tgt, ast.Tuple) and all(
+                    isinstance(el, ast.Name) for el in tgt.elts):
+                parts: List[Optional[Unit]] = [None] * len(tgt.elts)
+                if tup is not None and len(tup) == len(tgt.elts):
+                    parts = list(tup)
+                elif isinstance(value, ast.Tuple) \
+                        and len(value.elts) == len(tgt.elts):
+                    parts = [self.eval(el) for el in value.elts]
+                for el, u in zip(tgt.elts, parts):
+                    self.env[el.id] = u
+
+    def _return(self, s: ast.Return) -> None:
+        decl = self.decl.returns
+        vals: List[Optional[Unit]]
+        if isinstance(s.value, ast.Tuple):
+            vals = [self.eval(el) for el in s.value.elts]
+        elif isinstance(s.value, ast.Call):
+            vals = self._call_tuple(s.value) or [None]
+        else:
+            vals = [self.eval(s.value)]
+        if len(decl) > 1 and len(vals) != len(decl):
+            return                      # arity checked elsewhere (typing)
+        for i, (want, got) in enumerate(zip(decl, vals)):
+            if want is None or got is None or got.dimless:
+                continue
+            if not _same_dims(got, want):
+                where = f" (element {i})" if len(decl) > 1 else ""
+                self.flag(s, "return",
+                          f"returns {got.render()} but declares "
+                          f"{want.render()}{where}")
+
+
+class UnitChecker:
+    """Collect ``# unit:`` annotations, then walk annotated functions."""
+
+    def __init__(self, pkg: Package):
+        self.pkg = pkg
+        self.findings: List[Finding] = []
+        self.field_units: Dict[str, Optional[Unit]] = {}
+        self.functions: Dict[str, FnUnits] = {}
+        self.n_fields = 0
+        self._collect()
+
+    # ------------------------------------------------------- collection
+    def _collect(self) -> None:
+        for mod in self.pkg.modules.values():
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ClassDef):
+                    for stmt in node.body:
+                        self._field(mod, node.name, stmt, class_level=True)
+                elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    self._field(mod, None, node, class_level=False)
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    self._function(mod, node)
+
+    def _field(self, mod, cls, stmt, class_level) -> None:
+        if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            return
+        val = annotation(mod, stmt.lineno, "unit")
+        if val is None:
+            return
+        targets = stmt.targets if isinstance(stmt, ast.Assign) \
+            else [stmt.target]
+        for tgt in targets:
+            attr = None
+            if class_level and isinstance(tgt, ast.Name):
+                attr = tgt.id
+            else:
+                chain = attr_chain(tgt)
+                if chain and len(chain) == 2 and chain[0] == "self":
+                    attr = chain[1]
+            if attr is None:
+                continue                 # local cast, handled in _UnitWalk
+            try:
+                unit = parse_unit(val)
+            except UnitSyntaxError as ex:
+                self.findings.append(Finding(
+                    "units", mod.rel, stmt.lineno, cls or "<module>",
+                    "unit-syntax", str(ex)))
+                continue
+            prev = self.field_units.get(attr)
+            if prev is not None and unit is not None \
+                    and not _same_dims(prev, unit):
+                self.findings.append(Finding(
+                    "units", mod.rel, stmt.lineno, cls or "<module>",
+                    "unit-conflict",
+                    f"field {attr!r} annotated {unit.render()} here but "
+                    f"{prev.render()} elsewhere"))
+                continue
+            self.field_units[attr] = unit
+            self.n_fields += 1
+
+    def _function(self, mod, node) -> None:
+        val = annotation(mod, node.lineno, "unit")
+        if val is None:
+            return
+        try:
+            params, returns = parse_def_annotation(val)
+        except UnitSyntaxError as ex:
+            self.findings.append(Finding(
+                "units", mod.rel, node.lineno, node.name,
+                "unit-syntax", str(ex)))
+            return
+        argnames = [a.arg for a in node.args.args if a.arg != "self"]
+        decl = FnUnits(qualname=node.name, params=params, returns=returns,
+                       pos={n: i for i, n in enumerate(argnames)})
+        for p in params:
+            if p not in argnames:
+                self.findings.append(Finding(
+                    "units", mod.rel, node.lineno, node.name,
+                    "unit-syntax",
+                    f"unit annotation names unknown param {p!r}"))
+        self.functions[node.name] = decl
+
+    # ------------------------------------------------------------- check
+    def check(self) -> List[Finding]:
+        for mod in self.pkg.modules.values():
+            for fi in mod.functions.values():
+                self._check_fn(mod, fi)
+            for cname in mod.classes:
+                for fi in self.pkg.classes[cname].methods.values():
+                    self._check_fn(mod, fi)
+        return self.findings
+
+    def _check_fn(self, mod, fi) -> None:
+        decl = self.functions.get(fi.name)
+        if decl is None or annotation(mod, fi.node.lineno, "unit") is None:
+            return
+        _UnitWalk(self, mod, fi, decl).walk(fi.node.body)
+
+
+def check_units(pkg: Package) -> List[Finding]:
+    """Entry point: all dimensional-analysis findings for a package."""
+    return UnitChecker(pkg).check()
+
+
+def count_units(pkg: Package) -> Tuple[int, int]:
+    """(annotated fields, annotated functions) for the counts export."""
+    c = UnitChecker(pkg)
+    return c.n_fields, len(c.functions)
