@@ -234,6 +234,45 @@ def run_paged_ab(workload="wt", n=4, workers=2, decode_cap=4):
     return reps[True], reps[False]
 
 
+def run_kernel_ab(workload="wt", n=4, workers=2, decode_cap=4):
+    """Warm persistent hosts, then measure the SAME paged run with the
+    autotuned fused multi-page kernel vs the single-page baseline.
+    Returns (rep_fused, rep_single, interpret).
+
+    Both arms run the Pallas paged-decode path (``paged_decode`` on);
+    only ``kernel_variant`` differs, so the delta isolates the kernel:
+    multi-page double-buffered KV blocks plus the fused append
+    (eliminating the separate scatter dispatch per decode step).
+    Temp-0 outputs are bitwise identical across arms — masked pages are
+    exact no-ops in the online-softmax recurrence.  On CPU hosts the
+    kernels run under the Pallas interpreter (``interpret=True``), where
+    timings are meaningless; callers gate throughput claims on the
+    returned flag."""
+    import jax
+    from repro.kernels import env_interpret
+    from repro.runtime.executors import EngineHost
+    interp = env_interpret(False) or jax.default_backend() != "tpu"
+    impl = "pallas_interpret" if interp else "pallas"
+    reps = {}
+    for variant in ("fused", "single"):
+        proc, g, cons, _, plan = make_real_processor(
+            workload, n, workers, decode_cap, kv_migration=False,
+            engine_kwargs={"paged_decode": True,
+                           "kernel_variant": variant})
+        proc.model_configs = {m: c.replace(attention_impl=impl)
+                              for m, c in proc.model_configs.items()}
+        hosts = [EngineHost(proc.model_configs, seed=proc.seed,
+                            engine_kwargs=proc.engine_kwargs)
+                 for _ in range(workers)]
+        try:
+            proc.run(cons, plan, hosts=hosts)     # warm pages + JIT caches
+            reps[variant] = proc.run(cons, plan, hosts=hosts)
+        finally:
+            for h in hosts:
+                h.shutdown()
+    return reps["fused"], reps["single"], interp
+
+
 def interleaved_epochs(plan, mc: MultiConsolidatedGraph) -> int:
     """Epochs whose macro-nodes come from >= 2 templates — the shared
     decode batches only a mega-DAG plan can form."""

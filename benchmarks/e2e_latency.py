@@ -170,6 +170,32 @@ def paged_rows(n_queries: int = 4, workers: int = 2,
                               ("halo-real-dense-view", rep_d))]
 
 
+def kernel_rows(n_queries: int = 4, workers: int = 2,
+                decode_cap: int = 4) -> List[Dict]:
+    """Autotuned fused multi-page paged-decode kernel vs the single-page
+    baseline on warm WT hosts (both arms paged + Pallas).  Rows carry
+    tokens/s-per-device — the quantity the nightly gate and the >=1.3x
+    fused-vs-single check track — plus ``outputs_match`` pinning the
+    bitwise-identity contract.  On CPU hosts (``interpret: true``) the
+    throughput numbers measure the Pallas interpreter and every timing
+    gate skips them."""
+    from benchmarks.common import run_kernel_ab
+    rep_f, rep_s, interp = run_kernel_ab("wt", n_queries, workers,
+                                         decode_cap)
+    match = rep_f.extra.get("results") == rep_s.extra.get("results")
+    rows = []
+    for name, rep in (("halo-real-kernel-fused", rep_f),
+                      ("halo-real-kernel-single", rep_s)):
+        tps = rep.extra.get("decode_tokens", 0.0) / max(
+            rep.makespan, 1e-9) / workers
+        rows.append({"workload": "wt", "system": name,
+                     "makespan_s": round(rep.makespan, 3),
+                     "tokens_per_s_per_device": round(tps, 2),
+                     "outputs_match": match, "interpret": interp,
+                     **engine_stat_cols(rep)})
+    return rows
+
+
 if __name__ == "__main__":
     for r in run(256, include_real=True):
         print(r)

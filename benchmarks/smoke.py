@@ -16,7 +16,17 @@ silently uploading an artifact that contradicts the design claims:
   (tool pipelining exists to hide CPU latency under decode);
 * ``session-stream`` must not lose to ``micro-batched`` on makespan
   OR interactive p95 TTFT, and the arms' temp-0 outputs must match
-  bitwise (DESIGN.md §10).
+  bitwise (DESIGN.md §10);
+* ``halo-real-kernel-fused`` must not lose to ``-single`` on
+  tokens/s-per-device, and the two kernel arms' temp-0 outputs must
+  match bitwise — timing checks apply only to non-interpret rows
+  (real hardware), the output check always.
+
+On top of the A/B pairs, the kernel section self-compares run over
+run: tokens/s-per-device from the PREVIOUS ``BENCH_kernels.json``
+artifact (if present — CI restores it before overwriting) gates the
+current run with the same 15% slack, so a kernel regression fails the
+nightly even when both variants regress together.
 
 ``_AB_SLACK`` absorbs CI timing noise; a genuine inversion (like the
 2026-08 artifact that showed pipelined at 4.51s vs barrier at 1.69s,
@@ -29,7 +39,7 @@ import os
 import time
 from typing import Dict, List
 
-from benchmarks import e2e_latency, online_serving
+from benchmarks import e2e_latency, kernel_bench, online_serving
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "results")
 
@@ -51,6 +61,42 @@ def static_analysis_rows() -> List[Dict]:
     row = {"system": "tools-analysis", **res.counts,
            "strict_clean": res.ok(strict=True)}
     return [row]
+
+
+def load_previous(name: str) -> List[Dict]:
+    """Rows from the previous run's artifact, [] if absent/unreadable.
+    Must be called BEFORE main() overwrites the file."""
+    try:
+        with open(os.path.join(OUT, f"{name}.json")) as f:
+            rows = json.load(f)
+        return rows if isinstance(rows, list) else []
+    except (OSError, json.JSONDecodeError):
+        return []
+
+
+def check_kernel_regressions(rows: List[Dict],
+                             prev: List[Dict]) -> List[str]:
+    """Run-over-run tokens/s gate for the kernel section: each system's
+    tokens/s-per-device must stay within ``_AB_SLACK`` of the previous
+    artifact's.  Interpret-mode rows (Pallas interpreter on CPU CI) are
+    never compared — their timings measure the interpreter."""
+    bad = []
+    prev_by_system = {r["system"]: r for r in prev
+                      if not r.get("interpret")}
+    for r in rows:
+        if r.get("interpret"):
+            continue
+        p = prev_by_system.get(r.get("system"))
+        if p is None:
+            continue
+        cur, old = (r.get("tokens_per_s_per_device"),
+                    p.get("tokens_per_s_per_device"))
+        if cur is None or old is None:
+            continue
+        if cur * _AB_SLACK < old:
+            bad.append(f"KERNEL REGRESSION: {r['system']} "
+                       f"tokens/s-per-device {cur} vs previous {old}")
+    return bad
 
 
 def check_inversions(sections: Dict[str, List[Dict]]) -> List[str]:
@@ -77,6 +123,26 @@ def check_inversions(sections: Dict[str, List[Dict]]) -> List[str]:
         if r.get("outputs_match") is False:
             bad.append(f"OUTPUT MISMATCH: {r['system']} temp-0 outputs "
                        "differ between streaming and micro-batched arms")
+
+    rows = sections.get("BENCH_kernels", [])
+    try:
+        w = _row(rows, "halo-real-kernel-fused")
+        l = _row(rows, "halo-real-kernel-single")
+    except StopIteration:
+        w = l = None
+    if w is not None and not (w.get("interpret") or l.get("interpret")):
+        # higher is better here, so the inversion test flips relative
+        # to the makespan pairs above
+        if w["tokens_per_s_per_device"] * _AB_SLACK < \
+                l["tokens_per_s_per_device"]:
+            bad.append(
+                "A/B INVERSION: halo-real-kernel-fused tokens/s-per-device"
+                f"={w['tokens_per_s_per_device']} vs halo-real-kernel-"
+                f"single={l['tokens_per_s_per_device']}")
+    for r in rows:
+        if r.get("outputs_match") is False:
+            bad.append(f"OUTPUT MISMATCH: {r['system']} temp-0 outputs "
+                       "differ between fused and single kernel arms")
     return bad
 
 
@@ -88,9 +154,13 @@ def main() -> int:
             online_serving.run(32)
             + online_serving.real_stream_rows()
             + online_serving.session_stream_rows()),
+        "BENCH_kernels": lambda: (
+            kernel_bench.bench_rows(smoke=True)
+            + e2e_latency.kernel_rows()),
         "BENCH_static_analysis": static_analysis_rows,
     }
     os.makedirs(OUT, exist_ok=True)
+    prev_kernels = load_previous("BENCH_kernels")
     results: Dict[str, List[Dict]] = {}
     for name, fn in sections.items():
         t0 = time.perf_counter()
@@ -106,6 +176,8 @@ def main() -> int:
                     ("halo-real", "session-stream", "micro-batched")):
                 print("  ", r)
     violations = check_inversions(results)
+    violations += check_kernel_regressions(
+        results.get("BENCH_kernels", []), prev_kernels)
     for v in violations:
         print(v)
     return 1 if violations else 0

@@ -226,7 +226,8 @@ class InferenceEngine:
                  enable_prefix_sharing: bool = True, page_size: int = 8,
                  num_pages: Optional[int] = None, max_seq_len: int = 512,
                  max_warm_sequences: int = 32, paged_decode: bool = True,
-                 admission_window: float = 0.0):
+                 admission_window: float = 0.0,
+                 kernel_variant: Optional[str] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.seed = seed
@@ -239,6 +240,9 @@ class InferenceEngine:
         # vs. the dense-view reference path (gather + decode_step); the
         # dense path stays for A/B and for models without the paged hook
         self.paged_decode = paged_decode
+        # paged-kernel variant override (None = the autotune table in
+        # kernels/paged_decode_attention; the A/B harness pins it)
+        self.kernel_variant = kernel_variant
         # grace window (seconds): a fresh batch waits this long after the
         # LAST submission before admitting, so near-simultaneous
         # (pipelined, staggered) arrivals form ONE decode batch shape
@@ -272,7 +276,7 @@ class InferenceEngine:
             donate = (2, 3) if jax.default_backend() != "cpu" else ()
             self._paged_step_jit = jax.jit(
                 lambda p, tok, kp, vp, pt, ln: self.model.paged_decode_step(
-                    p, tok, kp, vp, pt, ln),
+                    p, tok, kp, vp, pt, ln, variant=self.kernel_variant),
                 donate_argnums=donate)
         # scheduler state — owned by the loop thread ("engine-loop"),
         # shared with submitters/importers under _cv (DESIGN.md §11)
@@ -1019,8 +1023,11 @@ class InferenceEngine:
         kv = self.kv
         slots = self._active
         b_real = len(slots)
-        for s in slots:                  # page alloc + COW (host metadata)
-            kv.prepare_append(s.seq_id)
+        # page alloc + COW (host metadata): after this every write-target
+        # page is private to its row — the fused append+attend kernel's
+        # safety contract (the step derives (page, offset) from the
+        # uploaded table, so the returned targets aren't re-shipped)
+        kv.prepare_appends([s.seq_id for s in slots])
         b_pad = self._round_b(b_real)
         # pad like the dense view's quanta so recompiles stay bounded
         t_cap = self._round_t(max(s.length + s.remaining for s in slots))
@@ -1038,8 +1045,8 @@ class InferenceEngine:
             self.params, jnp.asarray(tokens), kv.k, kv.v,
             jnp.asarray(pt), jnp.asarray(lens))
         kv.adopt_pages(new_k, new_v)
+        kv.commit_appends([s.seq_id for s in slots])
         for s in slots:
-            kv.commit_append(s.seq_id)
             s.length += 1
         self.stats.decode_tokens += b_real
         self._advance(logits)

@@ -246,6 +246,28 @@ class PagedKVCache:  # requires: InferenceEngine._cv | engine-loop
     def commit_append(self, seq_id: int, n: int = 1) -> None:
         self.sequences[seq_id].length += n
 
+    def prepare_appends(self, seq_ids: List[int]
+                        ) -> Tuple[List[int], List[int]]:
+        """Batch :meth:`prepare_append` — the host-metadata half of one
+        decode step for a whole batch.  After this, every returned page
+        is PRIVATE to its sequence (refcount 1: boundary rows got a
+        fresh page, aliased trailing pages were copy-on-written), which
+        is the safety contract the fused append+attend kernel relies on
+        to write ``(page, offset)`` slots inside the attention dispatch.
+        Returns ``(pages, offsets)`` parallel to ``seq_ids``."""
+        pages, offsets = [], []
+        for sid in seq_ids:
+            p, o = self.prepare_append(sid)
+            pages.append(p)
+            offsets.append(o)
+        return pages, offsets
+
+    def commit_appends(self, seq_ids: List[int], n: int = 1) -> None:
+        """Batch :meth:`commit_append`: bump lengths once the step that
+        wrote the prepared slots (scatter or fused kernel) has run."""
+        for sid in seq_ids:
+            self.commit_append(sid, n)
+
     # --------------------------------------------------------------- read
     def gather(self, seq_id: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Contiguous (L, T, Hkv, Dh) DEVICE views for a sequence (an

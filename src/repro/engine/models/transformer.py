@@ -477,7 +477,8 @@ class TransformerLM:
     def paged_decode_step(self, params: Params, token: jax.Array,
                           k_pages: jax.Array, v_pages: jax.Array,
                           page_table: jax.Array, lengths: jax.Array,
-                          impl: Optional[str] = None
+                          impl: Optional[str] = None,
+                          variant: Optional[str] = None
                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
         """One autoregressive step straight over the device-resident page
         pool — no dense KV view exists anywhere.
@@ -485,13 +486,18 @@ class TransformerLM:
         token: (B,) int32; k_pages/v_pages: the pool, (L_total, P, page,
         Hkv, Dh); page_table: (B, n_pages) int32 (each row's pages in
         sequence order, zero-padded); lengths: (B,) int32 with -1 for
-        padded rows.  Each layer scatters the new token's KV into its
-        page at ``(page_table[b, len//page], len % page)`` and attends
-        over the row's pages — via the paged Pallas kernel, or (XLA
-        fallback) an on-device gather.  Padded rows scatter out of
-        bounds (dropped) and are fully masked.  Returns
-        ``(logits (B, Vpad), new_k_pages, new_v_pages)``; the caller
-        adopts the returned pool arrays (donated under jit).
+        padded rows.  Each layer lands the new token's KV at
+        ``(page_table[b, len//page], len % page)`` and attends over the
+        row's pages.  Under the Pallas impls the kernel ``variant``
+        (None = the autotune table, see
+        ``kernels/paged_decode_attention/ops.py``) picks how: ``fused``
+        appends INSIDE the attention ``pallas_call`` (no separate
+        scatter dispatch, no extra pool round-trip per layer);
+        ``single``/``blocked`` scatter first, then attend.  The XLA
+        fallback scatters and gathers densely.  Padded rows write
+        nothing and are fully masked.  Returns ``(logits (B, Vpad),
+        new_k_pages, new_v_pages)``; the caller adopts the returned
+        pool arrays (donated under jit).
         """
         cfg = self.cfg
         impl = impl or cfg.attention_impl
@@ -509,6 +515,15 @@ class TransformerLM:
         t_idx = jnp.arange(T, dtype=jnp.int32)
         kv_pos = jnp.where(t_idx[None, :] <= pos[:, None], t_idx[None, :], -1)
 
+        use_pallas = impl in ("pallas", "pallas_interpret")
+        if use_pallas:
+            from repro.kernels.paged_decode_attention.ops import (
+                fused_paged_decode_attention, kernel_config,
+                paged_decode_attention)
+            kc = kernel_config(ps, cfg.num_kv_heads, self.head_dim,
+                               cfg.num_heads // cfg.num_kv_heads)
+            eff_variant = variant or kc["variant"]
+
         def step_block(p, x, kp_l, vp_l):
             h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
             q, k, v = L.attn_qkv(p["attn"], h, num_heads=cfg.num_heads,
@@ -517,17 +532,31 @@ class TransformerLM:
                                  positions=posc[:, None],
                                  rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
                                  norm_eps=cfg.norm_eps)
+            if use_pallas and eff_variant == "fused":
+                # append+attend in ONE dispatch: the kernel writes the
+                # new KV rows into their (page, offset) slots before any
+                # page is read, so the scatter below never runs
+                o, kp_l, vp_l = fused_paged_decode_attention(
+                    q, kp_l, vp_l, page_table, pos,
+                    k[:, 0].astype(kp_l.dtype), v[:, 0].astype(vp_l.dtype),
+                    interpret=impl == "pallas_interpret")
+                x = x + L.attn_out(p["attn"], o)
+                h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+                if "moe" in p:
+                    y, _ = M.moe_ffn(h, p["moe"], cfg.moe)
+                else:
+                    y = L.ffn_apply(p["ffn"], h)
+                return x + y, kp_l, vp_l
             kp_l = kp_l.at[write_page, write_off].set(
                 k[:, 0].astype(kp_l.dtype), mode="drop")
             vp_l = vp_l.at[write_page, write_off].set(
                 v[:, 0].astype(vp_l.dtype), mode="drop")
-            if impl in ("pallas", "pallas_interpret"):
-                from repro.kernels.paged_decode_attention.ops import \
-                    paged_decode_attention
+            if use_pallas:
                 o = paged_decode_attention(
                     q, kp_l.astype(self.dtype), vp_l.astype(self.dtype),
                     page_table, pos,
-                    interpret=impl == "pallas_interpret")
+                    interpret=impl == "pallas_interpret",
+                    variant=eff_variant)
             else:
                 kd = kp_l[page_table].reshape(
                     B, T, cfg.num_kv_heads, self.head_dim).astype(self.dtype)

@@ -1,0 +1,69 @@
+"""Shared online-softmax building blocks for the decode-side kernels.
+
+``decode_attention``, ``paged_decode_attention`` and
+``shared_prefix_attention`` all run the same flash-decode recurrence:
+f32 accumulation, a running row max ``m`` and normalizer ``l``, and the
+``alpha = exp(m_prev - m_new)`` rescale when a new chunk raises the max.
+The recurrence lives here once so a fix (e.g. the masked-row ``(m, l)``
+pin below) lands in every kernel at the same time.
+
+Masked-row semantics: a row whose every KV position is masked ends the
+grid with ``l == 0``.  Its ``m`` is whatever ``NEG_INF`` arithmetic left
+behind — finite garbage, not a value downstream LSE combines may ingest.
+``finalize_online_softmax`` pins such rows to ``m = NEG_INF, l = 0`` and
+emits a zero output row, which makes ``lse_combine`` treat them as an
+empty partial (weight ``exp(NEG_INF - m_other) == 0``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Finite stand-in for -inf: exp(NEG_INF - NEG_INF) stays defined (== 1)
+# inside the rescale, unlike a true -inf which would produce NaN.
+NEG_INF = -1e30
+
+
+def qk_logits(q, k, scale: float):
+    """Scaled q @ k^T in f32: q (R, Dh), k (C, Dh) -> logits (R, C)."""
+    return jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+
+def online_softmax_update(logits, mask, v, acc, m_prev, l_prev):
+    """One flash-decode chunk update in f32.
+
+    logits (R, C) raw scores; mask (1|R, C) bool, False = excluded;
+    v (C, Dh); acc (R, Dh), m_prev/l_prev (R,) the running state.
+    Returns the updated ``(acc, m, l)``.
+    """
+    logits = jnp.where(mask, logits, NEG_INF)
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_new = alpha * l_prev + p.sum(axis=-1)
+    acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    return acc_new, m_new, l_new
+
+
+def finalize_online_softmax(acc, m, l, *, normalize: bool = True):
+    """End-of-grid epilogue: divide by ``l`` and pin fully-masked rows.
+
+    Rows that saw no unmasked KV (``l == 0``) get ``out = 0`` and
+    ``m = NEG_INF`` exactly, so LSE combines downstream see a proper
+    empty partial instead of residue of NEG_INF arithmetic.  With
+    ``normalize=False`` the accumulator is returned unnormalized (the
+    shared-prefix partial contract); the ``(m, l)`` pin still applies.
+    Returns ``(out_f32, m, l)``.
+    """
+    empty = l == 0.0
+    if normalize:
+        out = acc / jnp.where(empty, 1.0, l)[:, None]
+    else:
+        out = acc
+    out = jnp.where(empty[:, None], 0.0, out)
+    m = jnp.where(empty, NEG_INF, m)
+    return out, m, l

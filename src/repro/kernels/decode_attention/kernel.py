@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.common import (NEG_INF, finalize_online_softmax,
+                                  online_softmax_update, qk_logits)
 
 
 def _decode_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref,
@@ -42,31 +43,21 @@ def _decode_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref,
     qp = qp_ref[0]                                       # scalar int32
     kp = kp_ref[0, :]                                    # (bt,)
 
-    logits = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale      # (G, bt)
+    logits = qk_logits(q, k, scale)                      # (G, bt)
 
     mask = (kp >= 0) & (kp <= qp)
     if window > 0:
         mask = mask & (kp > qp - window)
-    logits = jnp.where(mask[None, :], logits, NEG_INF)
 
-    m_prev = m_ref[:, 0]
-    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(logits - m_new[:, None])
-    p = jnp.where(mask[None, :], p, 0.0)
-    l_ref[:, 0] = alpha * l_ref[:, 0] + p.sum(axis=-1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[:, 0] = m_new
+    acc_ref[...], m_ref[:, 0], l_ref[:, 0] = online_softmax_update(
+        logits, mask[None, :], v, acc_ref[...], m_ref[:, 0], l_ref[:, 0])
 
     @pl.when(it == n_t - 1)
     def _done():
-        l = l_ref[:, 0]
-        denom = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0, :, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
-        m_out_ref[0, 0, :, 0] = m_ref[:, 0]
+        out, m, l = finalize_online_softmax(
+            acc_ref[...], m_ref[:, 0], l_ref[:, 0])
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+        m_out_ref[0, 0, :, 0] = m
         l_out_ref[0, 0, :, 0] = l
 
 # vmem-budget: 1.5 MiB @ block_t=1024 T=4096 Dh=128 H=32 Hkv=8

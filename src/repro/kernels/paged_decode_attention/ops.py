@@ -1,24 +1,101 @@
-"""Public jit'd wrapper for paged GQA flash-decode."""
+"""Public jit'd wrappers for paged GQA flash-decode.
+
+Variant selection is autotuned: ``benchmarks/kernel_bench.py`` sweeps
+``(pages_per_block, grid_layout, fused on/off)`` per pool shape, scores
+achieved HBM bandwidth against the ``launch/roofline.py`` peaks, and
+persists the winners into the checked-in ``autotune.json`` next to this
+module.  At call time the table is consulted by pool-shape key (see
+:func:`kernel_config`); environment overrides:
+
+* ``REPRO_KERNEL_AUTOTUNE=<path>`` — load an alternate winner table
+  (e.g. a freshly swept one, before checking it in).
+* ``REPRO_PAGED_VARIANT=single|blocked|fused`` — force the kernel
+  variant regardless of the table (the A/B harness uses this hook).
+"""
 from __future__ import annotations
 
 import functools
+import json
+import os
+from typing import Optional
 
 import jax
 
 from repro.kernels import env_interpret
-from repro.kernels.paged_decode_attention.kernel import \
-    paged_decode_attention_kernel
+from repro.kernels.paged_decode_attention.kernel import (
+    GRID_LAYOUTS, fused_paged_decode_attention_kernel,
+    paged_decode_attention_blocked_kernel, paged_decode_attention_kernel)
+
+VARIANTS = ("single", "blocked", "fused")
+_TABLE_ENV = "REPRO_KERNEL_AUTOTUNE"
+_VARIANT_ENV = "REPRO_PAGED_VARIANT"
+_DEFAULT_TABLE = os.path.join(os.path.dirname(__file__), "autotune.json")
 
 
-@functools.partial(jax.jit, static_argnames=("return_lse", "interpret"))
+def shape_key(page_size: int, n_kv_heads: int, head_dim: int,
+              group: int) -> str:
+    """Autotune-table key for a pool/query shape."""
+    return f"ps{page_size}-hkv{n_kv_heads}-dh{head_dim}-g{group}"
+
+
+@functools.lru_cache(maxsize=None)
+def _load_table(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def kernel_config(page_size: int, n_kv_heads: int, head_dim: int,
+                  group: int) -> dict:
+    """Resolve the autotuned ``{variant, pages_per_block, grid_layout}``
+    for a shape — exact key first, then the table's ``default`` entry,
+    then the built-in fallback."""
+    path = os.environ.get(_TABLE_ENV, _DEFAULT_TABLE)
+    table = _load_table(path).get("configs", {})
+    cfg = dict(table.get("default",
+                         {"variant": "fused", "pages_per_block": 4,
+                          "grid_layout": "bh"}))
+    cfg.update(table.get(shape_key(page_size, n_kv_heads, head_dim, group),
+                         {}))
+    forced = os.environ.get(_VARIANT_ENV, "")
+    if forced:
+        assert forced in VARIANTS, f"{_VARIANT_ENV}={forced!r} not in {VARIANTS}"
+        cfg["variant"] = forced
+    assert cfg["variant"] in VARIANTS
+    assert cfg["grid_layout"] in GRID_LAYOUTS
+    cfg["pages_per_block"] = max(1, int(cfg["pages_per_block"]))
+    return cfg
+
+
+def _resolve(q, k_pages, variant, pages_per_block, grid_layout):
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    H, Dh = q.shape[-2], q.shape[-1]
+    cfg = kernel_config(page_size, Hkv, Dh, H // Hkv)
+    return (variant or cfg["variant"],
+            pages_per_block or cfg["pages_per_block"],
+            grid_layout or cfg["grid_layout"])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "return_lse", "interpret", "variant", "pages_per_block", "grid_layout"))
 def _paged_decode_attention_jit(q, k_pages, v_pages, page_table, lengths, *,
-                                return_lse=False, interpret=False):
+                                return_lse=False, interpret=False,
+                                variant="single", pages_per_block=1,
+                                grid_layout="bh"):
     squeeze = q.ndim == 4
     if squeeze:
         assert q.shape[1] == 1
         q = q[:, 0]
-    out, m, l = paged_decode_attention_kernel(
-        q, k_pages, v_pages, page_table, lengths, interpret=interpret)
+    if variant == "single":
+        out, m, l = paged_decode_attention_kernel(
+            q, k_pages, v_pages, page_table, lengths, interpret=interpret)
+    else:
+        out, m, l = paged_decode_attention_blocked_kernel(
+            q, k_pages, v_pages, page_table, lengths,
+            pages_per_block=pages_per_block, grid_layout=grid_layout,
+            interpret=interpret)
     if squeeze:
         out = out[:, None]
     if return_lse:
@@ -27,14 +104,72 @@ def _paged_decode_attention_jit(q, k_pages, v_pages, page_table, lengths, *,
 
 
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
-                           return_lse=False, interpret=False):
+                           return_lse=False, interpret=False,
+                           variant: Optional[str] = None,
+                           pages_per_block: Optional[int] = None,
+                           grid_layout: Optional[str] = None):
     """q: (B,1,H,Dh) or (B,H,Dh); k_pages/v_pages: (P, page, Hkv, Dh);
     page_table (B, n_pages) int32; lengths (B,) int32 (-1 = padded row).
     Returns attention output at q's rank (plus lse when asked).
 
+    ``variant``/``pages_per_block``/``grid_layout`` default to the
+    autotune table (module docstring); ``variant="fused"`` resolves to
+    ``blocked`` here — the append-fusing entry point is
+    :func:`fused_paged_decode_attention`, which needs the new KV rows.
+
     ``interpret`` is resolved against REPRO_PALLAS_INTERPRET before the
     jit boundary so the env override is part of the jit cache key.
     """
+    variant, ppb, layout = _resolve(q, k_pages, variant, pages_per_block,
+                                    grid_layout)
+    if variant == "fused":
+        variant = "blocked"
     return _paged_decode_attention_jit(
         q, k_pages, v_pages, page_table, lengths, return_lse=return_lse,
-        interpret=env_interpret(interpret))
+        interpret=env_interpret(interpret), variant=variant,
+        pages_per_block=ppb, grid_layout=layout)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "return_lse", "interpret", "pages_per_block", "grid_layout"))
+def _fused_paged_decode_attention_jit(q, k_pages, v_pages, page_table,
+                                      lengths, k_new, v_new, *,
+                                      return_lse=False, interpret=False,
+                                      pages_per_block=2, grid_layout="bh"):
+    squeeze = q.ndim == 4
+    if squeeze:
+        assert q.shape[1] == 1
+        q = q[:, 0]
+    out, m, l, k_out, v_out = fused_paged_decode_attention_kernel(
+        q, k_pages, v_pages, page_table, lengths, k_new, v_new,
+        pages_per_block=pages_per_block, grid_layout=grid_layout,
+        interpret=interpret)
+    if squeeze:
+        out = out[:, None]
+    if return_lse:
+        return out, m, l, k_out, v_out
+    return out, k_out, v_out
+
+
+def fused_paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
+                                 k_new, v_new, *, return_lse=False,
+                                 interpret=False,
+                                 pages_per_block: Optional[int] = None,
+                                 grid_layout: Optional[str] = None):
+    """Append-then-attend in one kernel dispatch.
+
+    k_new/v_new: (B, Hkv, Dh), the newest token's KV rows (pool dtype);
+    written at ``page_table[b, lengths[b] // page] . (lengths[b] %
+    page)`` for rows with ``lengths[b] >= 0`` — that page must be
+    private to the row (``PagedKVCache.prepare_append`` COW contract).
+    The input pools are aliased in place; callers must adopt the
+    RETURNED pool arrays and drop their references to the inputs.
+
+    Returns ``(out, k_pages, v_pages)``; with ``return_lse``,
+    ``(out, m, l, k_pages, v_pages)``.
+    """
+    _, ppb, layout = _resolve(q, k_pages, None, pages_per_block, grid_layout)
+    return _fused_paged_decode_attention_jit(
+        q, k_pages, v_pages, page_table, lengths, k_new, v_new,
+        return_lse=return_lse, interpret=env_interpret(interpret),
+        pages_per_block=ppb, grid_layout=layout)

@@ -25,3 +25,40 @@ def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths,
     return decode_attention_ref(
         q, k, v, q_positions=lengths, kv_positions=kv_positions,
         return_lse=return_lse)
+
+
+def scatter_append_ref(k_pages, v_pages, page_table, lengths, k_new, v_new):
+    """The scatter the fused kernel absorbs, as a pure-jnp oracle.
+
+    k_new/v_new: (B, Hkv, Dh) — written to ``page_table[b, len // page]``
+    at offset ``len % page`` for rows with ``lengths[b] >= 0``; padding
+    rows write nothing (out-of-bounds scatter, dropped).  Returns the
+    updated ``(k_pages, v_pages)``.
+    """
+    P, page_size = k_pages.shape[0], k_pages.shape[1]
+    valid = lengths >= 0
+    posc = jnp.maximum(lengths, 0)
+    wp = jnp.take_along_axis(page_table, (posc // page_size)[:, None],
+                             axis=1)[:, 0]
+    wp = jnp.where(valid, wp, P)                         # OOB -> dropped
+    wo = posc % page_size
+    k_pages = k_pages.at[wp, wo].set(k_new, mode="drop")
+    v_pages = v_pages.at[wp, wo].set(v_new, mode="drop")
+    return k_pages, v_pages
+
+
+def fused_paged_decode_attention_ref(q, k_pages, v_pages, page_table,
+                                     lengths, k_new, v_new,
+                                     return_lse: bool = False):
+    """Scatter-then-attend oracle for the fused append+attend kernel:
+    the fused variant must equal appending first (scatter_append_ref)
+    and attending after, exactly.  Returns ``(out, k_pages, v_pages)``
+    (plus ``m, l`` between out and the pools with ``return_lse``)."""
+    k_pages, v_pages = scatter_append_ref(
+        k_pages, v_pages, page_table, lengths, k_new, v_new)
+    res = paged_decode_attention_ref(
+        q, k_pages, v_pages, page_table, lengths, return_lse=return_lse)
+    if return_lse:
+        out, m, l = res
+        return out, m, l, k_pages, v_pages
+    return res, k_pages, v_pages

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.common import (NEG_INF, finalize_online_softmax,
+                                  online_softmax_update, qk_logits)
 
 
 def _prefix_kernel(kp_ref, q_ref, k_ref, v_ref,
@@ -39,34 +40,25 @@ def _prefix_kernel(kp_ref, q_ref, k_ref, v_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    BG = q_ref.shape[0]
     q = q_ref[:, 0, :].astype(jnp.float32)              # (B*G, Dh)
     k = k_ref[:, 0, :].astype(jnp.float32)              # (bp, Dh)
     v = v_ref[:, 0, :].astype(jnp.float32)
     kp = kp_ref[...]                                    # (bp,)
 
-    logits = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale     # (B*G, bp)
+    logits = qk_logits(q, k, scale)                     # (B*G, bp)
     mask = (kp >= 0)[None, :]
-    logits = jnp.where(mask, logits, NEG_INF)
 
-    m_prev = m_ref[:, 0]
-    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(logits - m_new[:, None])
-    p = jnp.where(mask, p, 0.0)
-    l_ref[:, 0] = alpha * l_ref[:, 0] + p.sum(axis=-1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[:, 0] = m_new
+    acc_ref[...], m_ref[:, 0], l_ref[:, 0] = online_softmax_update(
+        logits, mask, v, acc_ref[...], m_ref[:, 0], l_ref[:, 0])
 
     @pl.when(ip == n_p - 1)
     def _done():
         # unnormalized partial: the LSE combine divides once at the end
-        o_ref[:, 0, :] = acc_ref[...].astype(o_ref.dtype)
-        m_out_ref[:, 0] = m_ref[:, 0]
-        l_out_ref[:, 0] = l_ref[:, 0]
+        out, m, l = finalize_online_softmax(
+            acc_ref[...], m_ref[:, 0], l_ref[:, 0], normalize=False)
+        o_ref[:, 0, :] = out.astype(o_ref.dtype)
+        m_out_ref[:, 0] = m
+        l_out_ref[:, 0] = l
 
 
 # vmem-budget: 1.5 MiB @ block_p=1024 P=32768 B=8 H=32 Hkv=8 Dh=128

@@ -28,6 +28,56 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
 
 
+# ---------------------------------------------------------------------------
+# kernel-level speed-of-light (benchmarks/kernel_bench.py scores against
+# these; same per-chip peaks as the dry-run roofline above)
+# ---------------------------------------------------------------------------
+
+def kernel_time_bound(bytes_hbm: float, flops: float, *,
+                      hbm_bw: float = HBM_BW,
+                      peak_flops: float = PEAK_FLOPS_BF16) -> float:
+    """Speed-of-light seconds for ONE kernel dispatch: the slower of the
+    memory term (every HBM byte once at peak bandwidth) and the compute
+    term (every FLOP at peak throughput).  Decode attention sits deep in
+    the memory regime, so this is in effect ``bytes / HBM_BW``."""
+    return max(bytes_hbm / hbm_bw, flops / peak_flops)
+
+
+def pct_of_roofline(measured_s: float, bytes_hbm: float, flops: float, *,
+                    hbm_bw: float = HBM_BW,
+                    peak_flops: float = PEAK_FLOPS_BF16) -> float:
+    """Achieved fraction of the kernel speed-of-light, in percent
+    (100 = the dispatch ran exactly at the roofline bound)."""
+    bound = kernel_time_bound(bytes_hbm, flops, hbm_bw=hbm_bw,
+                              peak_flops=peak_flops)
+    return 100.0 * bound / max(measured_s, 1e-30)
+
+
+def paged_decode_cost(B: int, H: int, Hkv: int, Dh: int, page_size: int,
+                      n_pages: int, *, dtype_bytes: int = 4,
+                      fused: bool = False, lengths=None):
+    """(HBM bytes, FLOPs) model for one paged-decode attention dispatch.
+
+    Each live page's KV is streamed once (the kernels DMA per-KV-head
+    ``(page, Dh)`` slices, so summed over heads a page's bytes are read
+    exactly once); q and out are negligible B·H·Dh terms.  ``fused``
+    adds the appended token's KV write — and saves the separate scatter
+    dispatch's full round-trip, which is NOT in this dispatch's bytes.
+    ``lengths`` (default: all rows full) drives the per-row page count,
+    mirroring the kernels' early-out.
+    """
+    if lengths is None:
+        lengths = [n_pages * page_size - 1] * B
+    live = [ln for ln in lengths if ln >= 0]
+    pages = sum(ln // page_size + 1 for ln in live)
+    kv_bytes = 2 * pages * page_size * Hkv * Dh * dtype_bytes
+    qo_bytes = 2 * B * H * Dh * dtype_bytes
+    append_bytes = 2 * B * Hkv * Dh * dtype_bytes if fused else 0
+    tokens = sum(ln + 1 for ln in live)
+    flops = 4.0 * H * Dh * tokens                  # QK^T + PV per token
+    return kv_bytes + qo_bytes + append_bytes, flops
+
+
 def model_flops(arch: str, shape_name: str) -> float:
     """6·N·D (train) / 2·N_active·D (inference), D = processed tokens."""
     cfg = get_config(arch)

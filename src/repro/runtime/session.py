@@ -58,9 +58,10 @@ from repro.workloads.tools import ToolRuntime
 # deltas so persistent hosts don't leak prior runs into each report)
 _ENGINE_COUNTERS = ("prefill_tokens_saved", "admission_waves",
                     "priority_jumps", "pages_shared", "tokens_reused",
-                    "coalesced_requests", "pages_migrated_in",
-                    "pages_migrated_out", "migrate_seconds", "h2d_bytes",
-                    "d2h_bytes", "view_rebuilds")
+                    "coalesced_requests", "decode_tokens",
+                    "pages_migrated_in", "pages_migrated_out",
+                    "migrate_seconds", "h2d_bytes", "d2h_bytes",
+                    "view_rebuilds")
 
 
 @dataclass

@@ -5,8 +5,12 @@ import pytest
 
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref, lse_combine
-from repro.kernels.paged_decode_attention.ops import paged_decode_attention
-from repro.kernels.paged_decode_attention.ref import paged_decode_attention_ref
+from repro.kernels.common import NEG_INF
+from repro.kernels.paged_decode_attention.ops import (
+    fused_paged_decode_attention, paged_decode_attention)
+from repro.kernels.paged_decode_attention.ref import (
+    fused_paged_decode_attention_ref, paged_decode_attention_ref,
+    scatter_append_ref)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.rglru_scan.ops import linear_scan
@@ -132,6 +136,107 @@ def test_paged_decode_attention_aliased_pages_and_lse():
                                rtol=2e-5)
     np.testing.assert_allclose(np.asarray(l), np.asarray(lr), atol=2e-5,
                                rtol=2e-5)
+
+
+def _paged_case(B=3, NP=5, ps=8, H=4, Hkv=2, Dh=16, seed=11):
+    """Shuffled pool with non-aligned lengths, one aliased-prefix pair,
+    and one padded row — the hostile layout every variant must handle."""
+    rng = np.random.default_rng(seed)
+    P = 2 * B * NP
+    q = jnp.asarray(rng.normal(size=(B, H, Dh)), jnp.float32)
+    k_pages = jnp.asarray(rng.normal(size=(P, ps, Hkv, Dh)), jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(P, ps, Hkv, Dh)), jnp.float32)
+    pt = np.asarray(rng.permutation(P)[:B * NP].reshape(B, NP), np.int32)
+    pt[1, :2] = pt[0, :2]                  # rows 0/1 alias prefix pages
+    # length >= 2 pages keeps every row's WRITE page out of the aliased
+    # prefix — prepare_append guarantees write pages are refcount-1
+    # private, and the fused kernel relies on it
+    lens = np.asarray(rng.integers(2 * ps + 1, NP * ps - 2, size=(B,)),
+                      np.int32)
+    lens = np.where(lens % ps == 0, lens + 1, lens)   # all end mid-page
+    lens[-1] = -1                                     # padded batch row
+    return q, k_pages, v_pages, jnp.asarray(pt), jnp.asarray(lens)
+
+
+@pytest.mark.parametrize("ppb", [2, 3, 4])             # 3, 4 don't divide 5
+@pytest.mark.parametrize("layout", ["bh", "hb"])
+def test_paged_blocked_parity_sweep(ppb, layout):
+    """Multi-page double-buffered blocks are BITWISE identical to the
+    single-page variant for every (pages_per_block, grid layout) — the
+    masked tail pages of a partial block are exact no-ops in the
+    online-softmax recurrence."""
+    q, kp, vp, pt, lens = _paged_case()
+    base = paged_decode_attention(q, kp, vp, pt, lens, variant="single",
+                                  interpret=True)
+    out = paged_decode_attention(q, kp, vp, pt, lens, variant="blocked",
+                                 pages_per_block=ppb, grid_layout=layout,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    ref = paged_decode_attention_ref(q, kp, vp, pt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("ppb", [2, 3])
+@pytest.mark.parametrize("layout", ["bh", "hb"])
+def test_fused_paged_parity_sweep(ppb, layout):
+    """Fused append+attend == scatter-then-attend, bitwise: the same
+    outputs AND the same pool contents afterwards.  Covers aliased READ
+    pages (write pages are private per the prepare_append contract),
+    partial-page append offsets, and a padded row that must write
+    nothing."""
+    q, kp, vp, pt, lens = _paged_case(seed=13)
+    rng = np.random.default_rng(99)
+    B, Hkv, Dh = q.shape[0], kp.shape[2], q.shape[2]
+    k_new = jnp.asarray(rng.normal(size=(B, Hkv, Dh)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(B, Hkv, Dh)), jnp.float32)
+    out, k_out, v_out = fused_paged_decode_attention(
+        q, kp, vp, pt, lens, k_new, v_new, pages_per_block=ppb,
+        grid_layout=layout, interpret=True)
+    # scatter-then-attend arm (the path the fused kernel replaces)
+    ks, vs = scatter_append_ref(kp, vp, pt, lens, k_new, v_new)
+    base = paged_decode_attention(q, ks, vs, pt, lens, variant="blocked",
+                                  pages_per_block=ppb, grid_layout=layout,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    np.testing.assert_array_equal(np.asarray(k_out), np.asarray(ks))
+    np.testing.assert_array_equal(np.asarray(v_out), np.asarray(vs))
+    ref = fused_paged_decode_attention_ref(q, kp, vp, pt, lens, k_new,
+                                           v_new)[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_fused_padding_row_writes_nothing():
+    """A padded (length = -1) row's k_new/v_new must NOT reach the pool —
+    the fused write is gated, not clamped, so no page is corrupted."""
+    q, kp, vp, pt, lens = _paged_case(seed=17)
+    B, Hkv, Dh = q.shape[0], kp.shape[2], q.shape[2]
+    k_new = jnp.full((B, Hkv, Dh), 1e6, jnp.float32)   # poison marker
+    v_new = jnp.full((B, Hkv, Dh), -1e6, jnp.float32)
+    _, k_out, v_out = fused_paged_decode_attention(
+        q, kp, vp, pt, lens, k_new, v_new, pages_per_block=2,
+        interpret=True)
+    ks, vs = scatter_append_ref(kp, vp, pt, lens, k_new, v_new)
+    np.testing.assert_array_equal(np.asarray(k_out), np.asarray(ks))
+    # the padded row is lens[-1]: none of ITS pages may contain poison
+    for pg in np.asarray(pt)[-1]:
+        assert not np.any(np.asarray(k_out)[pg] == 1e6)
+        assert not np.any(np.asarray(v_out)[pg] == -1e6)
+
+
+@pytest.mark.parametrize("variant", ["single", "blocked"])
+def test_paged_padding_row_ml_pin(variant):
+    """Fully-masked padding rows pin (m, l) = (NEG_INF, 0) and a zero
+    output EXACTLY — the lse_combine identity element, so split-phase
+    merges ignore them (no NaN, no spurious weight)."""
+    q, kp, vp, pt, lens = _paged_case()
+    out, m, l = paged_decode_attention(
+        q, kp, vp, pt, lens, variant=variant, pages_per_block=2,
+        return_lse=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out)[-1], 0.0)
+    np.testing.assert_array_equal(np.asarray(m)[-1], np.float32(NEG_INF))
+    np.testing.assert_array_equal(np.asarray(l)[-1], 0.0)
 
 
 @pytest.mark.parametrize("P,Ts", [(32, 16), (64, 32)])

@@ -135,6 +135,29 @@ def test_paged_decode_step_kernel_matches_xla_gather():
                                atol=5e-2, rtol=5e-2)
 
 
+def test_engine_kernel_variants_bitwise_identical():
+    """The full engine under each Pallas paged-decode kernel variant —
+    single-page, multi-page blocked, and fused append+attend (which
+    skips the separate scatter dispatch) — emits IDENTICAL tokens.
+    Prompts exercise COW-aliased partial pages via the shared prefix."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke("qwen3-1.7b"),
+                              attention_impl="pallas_interpret")
+    prefix = list(range(10, 20))
+    prompts = [prefix + [100], prefix + [101], list(range(40, 47))]
+    outs = {}
+    for variant in ("single", "blocked", "fused"):
+        eng = InferenceEngine(cfg, seed=0, page_size=8, paged_decode=True,
+                              kernel_variant=variant)
+        try:
+            first = eng.generate(prompts, max_new_tokens=5)
+            again = eng.generate(prompts, max_new_tokens=5)  # warm aliases
+            outs[variant] = (first, again)
+        finally:
+            eng.shutdown()
+    assert outs["single"] == outs["blocked"] == outs["fused"]
+
+
 # ---------------------------------------------------------------------------
 # cache level: in-jit page scatter == append_token, device pool round trip
 # ---------------------------------------------------------------------------
