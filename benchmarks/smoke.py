@@ -39,7 +39,7 @@ import os
 import time
 from typing import Dict, List
 
-from benchmarks import e2e_latency, kernel_bench, online_serving
+from benchmarks import e2e_latency, kernel_bench, online_serving, scalability
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "results")
 
@@ -124,6 +124,20 @@ def check_inversions(sections: Dict[str, List[Dict]]) -> List[str]:
             bad.append(f"OUTPUT MISMATCH: {r['system']} temp-0 outputs "
                        "differ between streaming and micro-batched arms")
 
+    rows = sections.get("BENCH_scale", [])
+    for r in rows:
+        if r.get("outputs_match") is False:
+            bad.append(f"OUTPUT MISMATCH: {r['system']} outputs differ "
+                       "from the cold run's")
+        if r.get("system") == "halo-real-resumed":
+            re_exec = r.get("jobstore", {}).get("re_executed_signatures")
+            if re_exec:
+                bad.append(f"RESUME REGRESSION: resumed run re-executed "
+                           f"{re_exec} journaled signatures (want 0)")
+            if r.get("decode_tokens"):
+                bad.append(f"RESUME REGRESSION: resumed run decoded "
+                           f"{r['decode_tokens']} tokens (want 0)")
+
     rows = sections.get("BENCH_kernels", [])
     try:
         w = _row(rows, "halo-real-kernel-fused")
@@ -158,6 +172,8 @@ def main() -> int:
             kernel_bench.bench_rows(smoke=True)
             + e2e_latency.kernel_rows()),
         "BENCH_static_analysis": static_analysis_rows,
+        "BENCH_scale": lambda: (scalability.scale_rows(2048)
+                                + scalability.recovery_rows()),
     }
     os.makedirs(OUT, exist_ok=True)
     prev_kernels = load_previous("BENCH_kernels")

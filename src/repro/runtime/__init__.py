@@ -5,6 +5,9 @@ numbers) and a real backend (tiny JAX models + minidb, semantics checks).
 queries submitted mid-run graft into the running mega-DAG.
 """
 from repro.runtime.events import RunReport, TaskRecord
+from repro.runtime.faults import (FaultInjector, FaultPlan,
+                                  TransientToolError)
+from repro.runtime.jobstore import CheckpointError, JobStore
 from repro.runtime.opwise import OpWiseSimulator
 from repro.runtime.simulator import SimulatedProcessor, OnlineSimulator
 from repro.runtime.session import (ProcessorConfig, ProcessorSession,
@@ -16,4 +19,6 @@ from repro.runtime.migrate import KVMigrator
 __all__ = ["RunReport", "TaskRecord", "SimulatedProcessor",
            "OnlineSimulator", "RealProcessor", "OpWiseSimulator",
            "OnlineOptimizer", "KVMigrator", "ProcessorConfig",
-           "ProcessorSession", "QueryHandle"]
+           "ProcessorSession", "QueryHandle", "JobStore",
+           "CheckpointError", "FaultPlan", "FaultInjector",
+           "TransientToolError"]

@@ -1,47 +1,10 @@
-"""Workflow-state checkpointing: restart a half-finished batch run.
+"""Back-compat shim — checkpointing moved into the durable job layer.
 
-Atomic JSON snapshots of the (query, node) → result map.  On resume, the
-Processor pre-populates BatchState and workers skip completed macro
-nodes — the batch-analytics analogue of training checkpoint/restart.
+The one-shot snapshot API (``save_batch_state`` / ``load_batch_state``)
+and the signature journal now live in ``repro.runtime.jobstore``
+(DESIGN.md §12.2); import from there.
 """
-from __future__ import annotations
+from repro.runtime.jobstore import (CheckpointError, load_batch_state,
+                                    save_batch_state)
 
-import json
-import os
-import tempfile
-
-from repro.runtime.coordinator import BatchState
-
-
-def save_batch_state(state: BatchState, path: str) -> None:
-    with state.lock:
-        payload = {
-            "n_queries": state.n,
-            "results": [[q, node, val]
-                        for (q, node), val in state.results.items()],
-        }
-    d = os.path.dirname(os.path.abspath(path))
-    os.makedirs(d, exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-    try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f)
-        os.replace(tmp, path)                      # atomic commit
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-
-
-def load_batch_state(state: BatchState, path: str) -> int:
-    """Populate ``state`` from a snapshot. Returns #results restored."""
-    with open(path) as f:
-        payload = json.load(f)
-    with state.lock:
-        n_queries = state.n
-    if payload["n_queries"] != n_queries:
-        raise ValueError("checkpoint was taken with a different batch size")
-    n = 0
-    for q, node, val in payload["results"]:
-        state.set_result(int(q), node, val)
-        n += 1
-    return n
+__all__ = ["CheckpointError", "load_batch_state", "save_batch_state"]

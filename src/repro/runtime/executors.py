@@ -31,6 +31,7 @@ from repro.engine.engine import InferenceEngine, RequestHandle
 from repro.engine.tokenizer import detokenize, tokenize
 from repro.runtime.coordinator import BatchState, PlanBoard
 from repro.runtime.events import TaskRecord
+from repro.runtime.faults import FaultInjector, TransientToolError
 from repro.workloads.tools import ToolRuntime
 
 
@@ -151,7 +152,8 @@ class GPUWorkerThread(threading.Thread):
                  die_after: Optional[int] = None, pipelining: bool = True,
                  optimizer=None, migrator=None,
                  claim_ahead: Optional[int] = None,
-                 stop_event: Optional[threading.Event] = None):
+                 stop_event: Optional[threading.Event] = None,
+                 faults: Optional[FaultInjector] = None):
         super().__init__(daemon=True, name=f"gpu{wid}")
         self.wid = wid
         self.board = board
@@ -166,6 +168,7 @@ class GPUWorkerThread(threading.Thread):
         self.pipelining = pipelining
         self.optimizer = optimizer
         self.migrator = migrator
+        self.faults = faults
         # claim throttling: claim at most this many not-yet-completed
         # nodes ahead (None = unlimited).  Pipelined submission races
         # claims far ahead of completions, collapsing the replanning
@@ -408,6 +411,12 @@ class GPUWorkerThread(threading.Thread):
                         self.board.lock.wait(timeout=0.05)
                     continue
                 self._my_claims.append(nid)
+                if self.faults is not None:
+                    # injected slowdown: stall before submitting so the
+                    # perturbation shifts real decode/claim ordering
+                    delay = self.faults.engine_delay(self.wid, nid)
+                    if delay > 0.0:
+                        time.sleep(delay)
                 if self.migrator is not None:
                     # claim-time KV pull: warm lineage on a peer worker
                     # (parent ran there, or a prior micro-batch did)
@@ -439,7 +448,9 @@ class ToolDispatcher(threading.Thread):
                  bindings: Sequence[dict], tools: ToolRuntime,
                  records: List[TaskRecord], records_lock: threading.Lock,
                  t0: float, cpu_slots: int = 8, coalescing: bool = True,
-                 optimizer=None, persistent: bool = False):
+                 optimizer=None, persistent: bool = False,
+                 faults: Optional[FaultInjector] = None,
+                 tool_retries: int = 2):
         super().__init__(daemon=True, name="tool-dispatcher")
         self.graph = graph                              # swap-only
         # session mode: outlive batch completion (a graft may add work);
@@ -453,11 +464,15 @@ class ToolDispatcher(threading.Thread):
         self.records_lock = records_lock    # lock-alias: ProcessorSession._rlock
         self.t0 = t0
         self.optimizer = optimizer
+        self.faults = faults
+        self.tool_retries = max(int(tool_retries), 0)
         self.pool = ThreadPoolExecutor(max_workers=cpu_slots)
         self.table = CoalesceTable(enabled=coalescing)
         self.dispatched: set = set()            # guarded-by: tool-dispatcher
         self.stop_flag = threading.Event()
         self.error: Optional[BaseException] = None      # swap-only
+        self._retry_lock = named_lock("ToolDispatcher._retry_lock")
+        self.retries_used = 0                   # guarded-by: self._retry_lock
         self._events: "_q.SimpleQueue" = _q.SimpleQueue()
         self._wake = threading.Event()
         self._depth = {t: len(graph.ancestors(t))       # swap-only
@@ -500,11 +515,35 @@ class ToolDispatcher(threading.Thread):
 
     # ------------------------------------------------------------------
     # runs-on: cpu-pool
-    def _execute(self, sig: str, op: str, args: str, origin: str) -> None:
+    def _execute(self, sig: str, op: str, args: str, origin: str,
+                 attempt: int = 1) -> None:
         try:
             ts = time.perf_counter() - self.t0
+            if self.faults is not None:
+                self.faults.tool_call(sig, op)
             result, _ = self.tools.execute(op, args)
             te = time.perf_counter() - self.t0
+        except TransientToolError as e:
+            # bounded retry: transient (injected or real network-blip
+            # style) failures re-enter the pool instead of killing the
+            # run; only exhaustion surfaces as a session error
+            if attempt <= self.tool_retries and \
+                    not self.stop_flag.is_set():
+                with self._retry_lock:
+                    self.retries_used += 1
+                self.pool.submit(self._execute, sig, op, args, origin,
+                                 attempt + 1)
+                return
+            self.error = e
+            with self.state.lock:
+                self.state.lock.notify_all()
+            return
+        except BaseException as e:          # non-transient: fail the run
+            self.error = e
+            with self.state.lock:
+                self.state.lock.notify_all()
+            return
+        try:
             with self.state.lock:
                 requesters = self.table.complete(sig, result)
             with self.records_lock:

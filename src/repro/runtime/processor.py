@@ -30,7 +30,7 @@ from repro.configs.base import ModelConfig
 from repro.core.consolidate import ConsolidatedGraph
 from repro.core.graphspec import GraphSpec
 from repro.core.plan import ExecutionPlan
-from repro.runtime.checkpoint import save_batch_state
+from repro.runtime.jobstore import save_batch_state
 from repro.runtime.events import RunReport
 from repro.runtime.executors import EngineHost
 from repro.runtime.session import ProcessorConfig, ProcessorSession

@@ -46,11 +46,13 @@ from repro.core.plan import ExecutionPlan
 from repro.core.solver import EpochDPSolver, SolverConfig
 from repro.core.state import SLO_CLASSES, SLOClass, SystemState
 from repro.debugsync import named_lock
-from repro.runtime.checkpoint import load_batch_state
 from repro.runtime.coordinator import BatchState, PlanBoard
 from repro.runtime.events import RunReport, TaskRecord
 from repro.runtime.executors import (EngineHost, GPUWorkerThread,
                                      ToolDispatcher)
+from repro.runtime.faults import FaultInjector, FaultPlan
+from repro.runtime.jobstore import (JobStore, load_batch_state,
+                                    signature_map)
 from repro.runtime.migrate import KVMigrator
 from repro.workloads.tools import ToolRuntime
 
@@ -91,6 +93,15 @@ class ProcessorConfig:
     # feed SLO-class priorities into solver packing + engine admission;
     # False = FIFO control arm (DESIGN.md §10.3)
     priority_admission: bool = True
+    # durable signature journal (DESIGN.md §12.2): completed results are
+    # journaled incrementally and replayed on the next run at this path,
+    # so a killed batch resumes without re-executing finished signatures
+    jobstore_path: Optional[str] = None
+    jobstore_fsync_every: int = 32
+    # deterministic fault injection (DESIGN.md §12.3); None = off
+    faults: Optional[FaultPlan] = None
+    # bounded re-dispatch of TransientToolError tool calls
+    tool_retries: int = 2
 
 
 class QueryHandle:
@@ -230,6 +241,11 @@ class ProcessorSession:
         self.dispatcher: Optional[ToolDispatcher] = None
         self.workers: List[GPUWorkerThread] = []
         self.migrator: Optional[KVMigrator] = None
+        self.jobstore: Optional[JobStore] = None    # swap-only
+        self.injector: Optional[FaultInjector] = None
+        # (query, node) -> journal key; whole-dict swap on graft so the
+        # journal listener reads it lock-free
+        self._sig_of: Dict = {}                     # swap-only
         self._monitor: Optional[threading.Thread] = None
         self._rlock = named_lock("ProcessorSession._rlock")
         self._records: List[TaskRecord] = []        # guarded-by: self._rlock
@@ -376,6 +392,19 @@ class ProcessorSession:
         if h is not None:
             h._note(node)
 
+    # runs-on: any
+    def _journal_result(self, q: int, node: str) -> None:
+        """BatchState listener → durable journal: every landed result is
+        recorded under its consolidation signature (fires OUTSIDE the
+        state lock, so re-acquiring it to read the value is safe)."""
+        key = self._sig_of.get((q, node))
+        if key is None:
+            return                  # node without a signature mapping
+        with self.state.lock:
+            val = self.state.results.get((q, node))
+        if val is not None:
+            self.jobstore.record(key, node, str(val))
+
     # requires: self._graft_lock
     def _bootstrap(self, cons: ConsolidatedGraph,
                    plan: Optional[ExecutionPlan], slo: SLOClass,
@@ -397,6 +426,17 @@ class ProcessorSession:
                                for nid in self.graph.llm_nodes()}
         if resume_from:
             self._restored = load_batch_state(self.state, resume_from)
+        if cfg.faults is not None:
+            self.injector = FaultInjector(cfg.faults)
+        if cfg.jobstore_path:
+            # open + replay BEFORE the journal listener attaches: the
+            # restore's own set_result events must not be re-journaled
+            self.jobstore = JobStore(cfg.jobstore_path,
+                                     fsync_every=cfg.jobstore_fsync_every)
+            self._sig_of = signature_map(cons)
+            self._restored += self.jobstore.restore_into(self.state,
+                                                         self._sig_of)
+            self.state.add_listener(self._journal_result)
 
         self._t0 = time.perf_counter()
         if self.optimizer is not None:
@@ -424,7 +464,8 @@ class ProcessorSession:
             self.graph, self.state, cons.bindings, self.tools,
             self._records, self._rlock, self._t0,
             cpu_slots=cfg.cpu_slots, coalescing=cfg.coalescing,
-            optimizer=self.optimizer, persistent=True)
+            optimizer=self.optimizer, persistent=True,
+            faults=self.injector, tool_retries=cfg.tool_retries)
         self.dispatcher.start()
 
         self._base_counters = self._engine_totals(self.hosts)
@@ -441,16 +482,25 @@ class ProcessorSession:
                 cost_model=(self.optimizer.cm
                             if self.optimizer is not None else None))
 
+        # explicit die_after wins; the fault plan's kill_worker fills in
+        # the rest (both routes end in PlanBoard.abandon + overflow)
+        die = dict(die_after or {})
+        if self.injector is not None:
+            for w in range(self.W):
+                after = self.injector.die_after(w)
+                if after is not None:
+                    die.setdefault(w, after)
         self.workers = [
             GPUWorkerThread(w, self.board, self.graph, self.state,
                             cons.bindings, self.hosts[w], self._records,
                             self._rlock, self._t0,
-                            die_after=(die_after or {}).get(w),
+                            die_after=die.get(w),
                             pipelining=cfg.pipelining,
                             optimizer=self.optimizer,
                             migrator=self.migrator,
                             claim_ahead=cfg.claim_ahead,
-                            stop_event=self._stop)
+                            stop_event=self._stop,
+                            faults=self.injector)
             for w in range(self.W)]
         self.state.add_listener(self._on_result)
         handles = self._register_handles(range(cons.n_queries), slo)
@@ -528,6 +578,13 @@ class ProcessorSession:
             wk.rebind(graph)
         if self.migrator is not None:
             self.migrator.graph = graph
+        if self.jobstore is not None:
+            # grafted queries may repeat journaled signatures: swap in
+            # the grown map, replay hits (the journal listener ignores
+            # its own replay via the store's replaying set)
+            self._sig_of = signature_map(self._cons)
+            self._restored += self.jobstore.restore_into(self.state,
+                                                         self._sig_of)
 
         # 2. cost-model adoption: grown batch sizes, merged warm-alias
         #    groups, accumulated SLO priority mass
@@ -622,6 +679,8 @@ class ProcessorSession:
             self.dispatcher.join(timeout=60)
         if self._monitor is not None:
             self._monitor.join(timeout=60)
+        if self.jobstore is not None:       # after joins: no more writes
+            self.jobstore.close()
         if self._own_hosts and self.hosts is not None:
             for h in self.hosts:
                 h.shutdown()
@@ -706,6 +765,14 @@ class ProcessorSession:
         with self.board.lock:
             report.extra["plan_splices"] = self.board.splices
         report.extra["grafts"] = self.grafts
+        if self.jobstore is not None:
+            report.extra["jobstore"] = (      # type: ignore[assignment]
+                self.jobstore.summary())
+        if self.injector is not None:
+            report.extra["faults"] = (        # type: ignore[assignment]
+                self.injector.summary())
+            with dispatcher._retry_lock:
+                report.extra["tool_retries"] = dispatcher.retries_used
         if self.optimizer is not None:
             report.extra["replans"] = (self.optimizer.replans
                                        - self._base_replans)

@@ -1,9 +1,15 @@
 """Paper workloads: minidb (PostgreSQL stand-in), synthetic datasets,
-tool operators, and the W1–W6 / W+ workflow library (Table 3)."""
-from repro.workloads.library import (MIXED_PARTS, WORKFLOWS,
+tool operators, the W1–W6 / W+ workflow library (Table 3), and the
+data-scale binding enumerators (DESIGN.md §12.1)."""
+from repro.workloads.enumerators import (build_enumerated_workload,
+                                         enumerate_csv, enumerate_sql,
+                                         enumerate_table)
+from repro.workloads.library import (MIXED_PARTS, WORKFLOWS, build_graph,
                                      build_mixed_workload, build_workload)
 from repro.workloads.minidb import MiniDB
 from repro.workloads.tools import ToolRuntime
 
-__all__ = ["MIXED_PARTS", "WORKFLOWS", "build_mixed_workload",
-           "build_workload", "MiniDB", "ToolRuntime"]
+__all__ = ["MIXED_PARTS", "WORKFLOWS", "build_graph",
+           "build_mixed_workload", "build_workload",
+           "build_enumerated_workload", "enumerate_csv", "enumerate_sql",
+           "enumerate_table", "MiniDB", "ToolRuntime"]

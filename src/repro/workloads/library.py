@@ -347,6 +347,43 @@ def wt_tool_pipeline() -> Tuple[dict, Callable]:
     return wf, _bind_sampler(pool)
 
 
+# ---------------------------------------------------------------------------
+def ws_page_audit() -> Tuple[dict, Callable]:
+    """WS: the data-scale per-row audit template (DESIGN.md §12.1).
+
+    One query per ``pages`` row — the templated LLM-step-over-rows shape
+    where an enumerator (``repro.workloads.enumerators``) produces the
+    bindings from the data itself instead of a random pool.  ``fetch`` is
+    a per-row indexed point lookup (distinct per query); ``stats`` is a
+    per-topic aggregate shared by every query of that topic, so a
+    thousands-of-query batch coalesces it down to #topics physical
+    executions.  The random sampler below keeps ``build_workload("ws",
+    n)`` usable standalone (titles it draws exist in the finewiki DB).
+    """
+    nodes = [
+        {"id": "fetch", "type": "tool", "op": "sql",
+         "args": "SELECT views, topic FROM pages WHERE title = '$title'"},
+        {"id": "stats", "type": "tool", "op": "sql",
+         "args": ("SELECT count(*), avg(views) FROM pages "
+                  "WHERE topic = '$topic'")},
+        {"id": "assess", "type": "llm", "model": M14, "max_new_tokens": 24,
+         "est_prompt_tokens": 160,
+         "prompt": ("Assess page $title using ${fetch} against the "
+                    "$topic norms ${stats}.")},
+        {"id": "brief", "type": "llm", "model": M32, "max_new_tokens": 16,
+         "est_prompt_tokens": 192,
+         "prompt": "One-line brief of ${assess} for row $rank."},
+    ]
+    wf = {"name": "WS-PageAudit", "nodes": nodes}
+
+    def pool(rng: random.Random) -> Dict:
+        i = rng.randrange(20000)            # datagen's finewiki page count
+        return {"title": f"page_{i}",
+                "topic": GENRES[rng.randrange(len(GENRES))],
+                "rank": i}
+    return wf, _bind_sampler(pool)
+
+
 WORKFLOWS: Dict[str, WorkloadBuilder] = {
     "w1": w1_imdb_diamond,
     "w2": w2_imdb_triplechain,
@@ -357,12 +394,13 @@ WORKFLOWS: Dict[str, WorkloadBuilder] = {
     "w+": wplus_linear,
     "wt": wt_tool_pipeline,
     "wd": wd_doc_draft,
+    "ws": ws_page_audit,
 }
 
 DATABASE_OF = {
     "w1": "imdb", "w2": "imdb", "w3": "finewiki", "w4": "finewiki",
     "w5": "tpch", "w6": "tpch", "w+": "finewiki", "wt": "finewiki",
-    "wd": "finewiki",
+    "wd": "finewiki", "ws": "finewiki",
 }
 
 # the default MIXED online-serving blend: a doc-draft template, the
@@ -390,12 +428,14 @@ def _paper_scale_estimate(op: str, args: str) -> float:
     return 0.20
 
 
-def build_workload(name: str, n_queries: int, seed: int = 0,
-                   paper_scale_estimates: bool = True):
-    """Returns (GraphSpec, bindings, database name)."""
+def build_graph(name: str, paper_scale_estimates: bool = True):
+    """Parse workload ``name``'s template alone: (GraphSpec, database
+    name).  The binding-enumerator path (``repro.workloads.enumerators``)
+    uses this to pair the template with data-derived bindings instead of
+    the random sampler."""
     from repro.core.graphspec import GraphSpec
     from repro.core.parser import parse_workflow
-    wf, sampler = WORKFLOWS[name]()
+    wf, _ = WORKFLOWS[name]()
     graph = parse_workflow(wf)
     if paper_scale_estimates:
         nodes = []
@@ -405,8 +445,17 @@ def build_workload(name: str, n_queries: int, seed: int = 0,
                     est_seconds=_paper_scale_estimate(spec.op, spec.args))
             nodes.append(spec)
         graph = GraphSpec(graph.name, nodes, graph.edges)
+    return graph, DATABASE_OF[name]
+
+
+def build_workload(name: str, n_queries: int, seed: int = 0,
+                   paper_scale_estimates: bool = True):
+    """Returns (GraphSpec, bindings, database name)."""
+    graph, dbname = build_graph(
+        name, paper_scale_estimates=paper_scale_estimates)
+    _, sampler = WORKFLOWS[name]()
     bindings = sampler(n_queries, seed)
-    return graph, bindings, DATABASE_OF[name]
+    return graph, bindings, dbname
 
 
 def build_mixed_workload(n_queries: int, seed: int = 0,

@@ -1,0 +1,27 @@
+"""Subprocess harness for the kill -9 resume test (DESIGN.md §12.2).
+
+Runs one real-engine ``wt`` batch with a durable jobstore at argv[1]
+and prints a JSON summary on success.  The parent test runs this three
+ways: uninterrupted (baseline), SIGKILLed mid-batch, and resumed
+against the killed run's journal — asserting the resumed outputs are
+bitwise-identical with zero re-executed signatures.
+"""
+import json
+import sys
+
+from benchmarks.common import make_real_processor
+
+
+def main() -> None:
+    jobstore_path = sys.argv[1]
+    proc, g, cons, bindings, plan = make_real_processor(
+        "wt", n=6, workers=2, decode_cap=3, seed=0,
+        latency_scale=3.0,                  # slow http: killable window
+        jobstore_path=jobstore_path, jobstore_fsync_every=1)
+    rep = proc.run(cons, plan)
+    print(json.dumps({"results": rep.extra["results"],
+                      "jobstore": rep.extra["jobstore"]}))
+
+
+if __name__ == "__main__":
+    main()

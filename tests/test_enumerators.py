@@ -1,0 +1,90 @@
+"""Data-scale binding enumerators (DESIGN.md §12.1): thousands-of-query
+batches derived from rows/result-sets/CSVs, feeding the unchanged
+consolidation + simulator path."""
+import pytest
+
+from benchmarks.common import run_halo
+from repro.core.consolidate import consolidate
+from repro.workloads import (build_enumerated_workload, build_workload,
+                             enumerate_csv, enumerate_sql, enumerate_table)
+from repro.workloads.minidb import MiniDB
+
+
+@pytest.fixture()
+def db():
+    d = MiniDB()
+    d.create_table("t", ["id", "cat", "val"], [
+        (0, "a", 10), (1, "b", 20), (2, "a", 30), (3, "c", 40), (4, "a", 50)])
+    return d
+
+
+# ---------------------------------------------------------------------------
+def test_enumerate_table_rows(db):
+    b = enumerate_table(db, "t")
+    assert len(b) == 5
+    assert b[0] == {"id": "0", "cat": "a", "val": "10"}   # stringified
+    assert enumerate_table(db, "t", limit=2) == b[:2]
+
+
+def test_enumerate_table_params_and_where(db):
+    b = enumerate_table(db, "t", params={"bucket": "cat"},
+                        where="val >= 30")
+    assert b == [{"bucket": "a"}, {"bucket": "c"}, {"bucket": "a"}]
+    with pytest.raises(KeyError, match="available columns"):
+        enumerate_table(db, "t", params={"x": "no_such_col"})
+
+
+def test_enumerate_sql_projection_and_aggregates(db):
+    b = enumerate_sql(db, "SELECT cat, count(*), sum(val) FROM t "
+                          "GROUP BY cat",
+                      params={"bucket": "cat", "n": "count(*)",
+                              "total": "sum(val)"})
+    assert {"bucket": "a", "n": "3", "total": "90"} in b
+    assert len(b) == 3                      # one binding per group
+
+
+def test_enumerate_csv(tmp_path):
+    p = tmp_path / "rows.csv"
+    p.write_text("name, score\nalice,10\nbob,20\n")
+    b = enumerate_csv(str(p), params={"who": "name"})
+    assert b == [{"who": "alice"}, {"who": "bob"}]
+    assert enumerate_csv(str(p), limit=1) == [
+        {"name": "alice", "score": "10"}]
+    empty = tmp_path / "empty.csv"
+    empty.write_text("")
+    with pytest.raises(ValueError, match="no header row"):
+        enumerate_csv(str(empty))
+
+
+# ---------------------------------------------------------------------------
+def test_ws_registered_in_sampled_library():
+    """The data-scale template also works through the plain sampled
+    ``build_workload`` registry."""
+    g, bindings, dbname = build_workload("ws", 4, seed=0)
+    assert dbname == "finewiki" and len(bindings) == 4
+    assert {"fetch", "stats", "assess", "brief"} <= set(g.nodes)
+
+
+def test_enumerated_unregistered_name_raises():
+    with pytest.raises(KeyError, match="no enumeration registered"):
+        build_enumerated_workload("w1", limit=4)
+
+
+@pytest.mark.slow
+def test_ws_enumerated_scale_through_simulator():
+    """>= 2000 enumerated queries consolidate (per-topic stats coalesce
+    to the topic count) and run through the simulator path whole."""
+    g, bindings, dbname, db = build_enumerated_workload("ws", limit=2048)
+    assert len(bindings) == 2048
+    assert len({b["title"] for b in bindings}) == 2048      # one per row
+    cons = consolidate(g, bindings)
+    uniq = {nid: cons.macros[nid].n_unique for nid in g.nodes}
+    topics = len({b["topic"] for b in bindings})
+    assert uniq["stats"] == topics <= 8         # aggregate dedups per topic
+    assert uniq["fetch"] == 2048                # per-row nodes do not
+    rep = run_halo(g, cons, workers=3)
+    assert rep.num_queries == 2048
+    assert rep.makespan > 0
+    # the enumerated batch's own database answers its SQL
+    rows = db.execute("SELECT count(*) FROM pages")
+    assert rows[0][0] >= 2048

@@ -1,0 +1,149 @@
+"""Deterministic fault injection (DESIGN.md §12.3): seeded chaos runs
+must complete bitwise-identically to clean runs by riding the existing
+recovery machinery — dispatcher retries for tool faults, PlanBoard
+overflow for worker loss, ordinary scheduling for engine delays.
+
+``REPRO_FAULT_SEED`` (the CI chaos matrix variable) picks the seed;
+unset defaults to 1 so the test is deterministic locally too.
+"""
+import os
+import threading
+
+import pytest
+
+from benchmarks.common import smoke_models_for
+from repro.runtime import (FaultInjector, FaultPlan, ProcessorConfig,
+                           ProcessorSession, TransientToolError)
+from repro.workloads import build_workload
+from repro.workloads.datagen import build_database
+from repro.workloads.tools import ToolRuntime
+
+SEED = int(os.environ.get("REPRO_FAULT_SEED", "1"))
+
+
+def _run(g, db, bindings, **cfg_kw):
+    """(report, dead-worker set) for one full session run."""
+    cfg = ProcessorConfig(num_workers=2, decode_cap=3, seed=0, **cfg_kw)
+    sess = ProcessorSession(smoke_models_for(g),
+                            ToolRuntime(build_database(db)), config=cfg)
+    sess.open()
+    try:
+        sess.submit(g, bindings)
+        sess.drain(400)
+        rep = sess.report()
+        with sess.board.lock:
+            dead = set(sess.board.dead)
+    finally:
+        sess.close()
+    return rep, dead
+
+
+# ---------------------------------------------------------------------------
+# plan / injector plumbing
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_from_env():
+    env = {"REPRO_FAULT_SEED": "7", "REPRO_FAULT_TOOL_RATE": "0.25",
+           "REPRO_FAULT_KILL": "0:1, 2:3",
+           "REPRO_FAULT_DELAY_S": "0.05", "REPRO_FAULT_DELAY_RATE": "0.5"}
+    p = FaultPlan.from_env(env)
+    assert p.seed == 7 and p.tool_fail_rate == 0.25
+    assert p.kill_worker == {0: 1, 2: 3}
+    assert p.engine_delay_s == 0.05 and p.engine_delay_rate == 0.5
+    assert FaultPlan.from_env({}) is None           # injection off
+    with pytest.raises(ValueError, match="REPRO_FAULT_KILL"):
+        FaultPlan.from_env({"REPRO_FAULT_SEED": "1",
+                            "REPRO_FAULT_KILL": "zero:one"})
+
+
+def test_injector_rolls_deterministic():
+    """Same plan → same decisions at the same sites, independent of
+    call interleaving (what makes chaos runs reproducible)."""
+    plan = FaultPlan(seed=SEED, tool_fail_rate=0.5)
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    sites = [f"sql|q{i}" for i in range(64)]
+    rolls_a = [a._roll("tool", s) for s in sites]
+    rolls_b = [b._roll("tool", s) for s in reversed(sites)]
+    assert rolls_a == list(reversed(rolls_b))
+    other = FaultInjector(FaultPlan(seed=SEED + 1, tool_fail_rate=0.5))
+    assert rolls_a != [other._roll("tool", s) for s in sites]
+
+
+def test_injector_bounds_failures_per_signature():
+    """An unlucky signature fails at most ``max_tool_failures`` times;
+    later attempts always pass (retries are guaranteed to converge)."""
+    inj = FaultInjector(FaultPlan(seed=SEED, tool_fail_rate=1.0,
+                                  max_tool_failures=2))
+    fails = 0
+    for _ in range(5):
+        try:
+            inj.tool_call("sig-x", "sql")
+        except TransientToolError:
+            fails += 1
+    assert fails == 2
+    assert inj.summary()["tool_faults_injected"] == 2
+
+
+# ---------------------------------------------------------------------------
+# chaos runs (real engines, tiny models)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_tool_faults_recover_via_retry():
+    """High injected tool-failure rate, retries > max failures: the run
+    completes with outputs bitwise-identical to the clean run."""
+    g, bindings, db = build_workload("wt", 6, seed=0)
+    clean, _ = _run(g, db, bindings)
+    plan = FaultPlan(seed=SEED, tool_fail_rate=0.9, max_tool_failures=2)
+    rep, _ = _run(g, db, bindings, faults=plan, tool_retries=3)
+    assert rep.extra["faults"]["tool_faults_injected"] > 0
+    assert rep.extra["tool_retries"] > 0
+    assert rep.extra["results"] == clean.extra["results"]
+
+
+@pytest.mark.slow
+def test_worker_loss_mid_epoch_recovers():
+    """Worker 0 dies after its first node: the survivor absorbs the
+    overflow — no hang, no dropped queries, bitwise-identical outputs."""
+    g, bindings, db = build_workload("wt", 6, seed=0)
+    clean, _ = _run(g, db, bindings)
+    plan = FaultPlan(seed=SEED, kill_worker={0: 1})
+    rep, dead = _run(g, db, bindings, faults=plan)
+    assert dead == {0}                      # the kill really happened
+    assert rep.extra["results"] == clean.extra["results"]
+    assert len(rep.extra["results"]) == 6 * len(g.nodes)
+
+
+@pytest.mark.slow
+def test_engine_delays_perturb_not_corrupt():
+    """Injected engine stalls shift timing only: outputs match the
+    clean run exactly."""
+    g, bindings, db = build_workload("wt", 6, seed=0)
+    clean, _ = _run(g, db, bindings)
+    plan = FaultPlan(seed=SEED, engine_delay_s=0.05, engine_delay_rate=1.0)
+    rep, _ = _run(g, db, bindings, faults=plan)
+    assert rep.extra["faults"]["engine_delays_injected"] > 0
+    assert rep.extra["results"] == clean.extra["results"]
+
+
+@pytest.mark.slow
+def test_retry_exhaustion_surfaces_cleanly():
+    """When failures outlast the retry budget the error surfaces from
+    drain() — and close() still leaks no threads."""
+    before = set(threading.enumerate())
+    g, bindings, db = build_workload("wt", 4, seed=0)
+    plan = FaultPlan(seed=SEED, tool_fail_rate=1.0, max_tool_failures=10)
+    cfg = ProcessorConfig(num_workers=2, decode_cap=3, seed=0,
+                          faults=plan, tool_retries=1)
+    sess = ProcessorSession(smoke_models_for(g),
+                            ToolRuntime(build_database(db)), config=cfg)
+    sess.open()
+    try:
+        sess.submit(g, bindings)
+        with pytest.raises(TransientToolError):
+            sess.drain(120)
+    finally:
+        sess.close()
+    sess.close()                            # idempotent after failure
+    leaked = [t for t in set(threading.enumerate()) - before if t.is_alive()]
+    assert not leaked, f"failed session leaked threads: {leaked}"

@@ -1,0 +1,217 @@
+"""Durable job store (DESIGN.md §12.2): signature journal, kill-tolerant
+loading, session resume with zero re-execution, and the hardened
+``load_batch_state`` diagnostics."""
+import json
+
+import pytest
+
+from benchmarks.common import make_real_processor
+from repro.core.consolidate import consolidate
+from repro.runtime.coordinator import BatchState
+from repro.runtime.jobstore import (CheckpointError, JobStore,
+                                    load_batch_state, save_batch_state,
+                                    signature_map)
+from repro.workloads import build_workload
+
+
+# ---------------------------------------------------------------------------
+# signature map
+# ---------------------------------------------------------------------------
+
+def test_signature_map_stable_across_reconsolidation():
+    """Re-consolidating the same (template, bindings) yields the SAME
+    (query, node) → key map — the property resume rests on."""
+    g, bindings, _ = build_workload("wt", 6, seed=0)
+    m1 = signature_map(consolidate(g, bindings))
+    m2 = signature_map(consolidate(g, bindings))
+    assert m1 == m2
+    assert set(q for q, _ in m1) == set(range(6))
+    # every (query, node) pair the batch serves has a journal key
+    assert len(m1) == 6 * len(g.nodes)
+
+
+def test_signature_map_dedup_shares_keys():
+    """Queries with identical bindings share journal keys (dedup
+    survives restart); distinct bindings do not."""
+    g, bindings, _ = build_workload("wt", 4, seed=0)
+    dup = list(bindings) + [bindings[0]]            # query 4 repeats query 0
+    m = signature_map(consolidate(g, dup))
+    for nid in g.nodes:
+        assert m[(4, nid)] == m[(0, nid)]
+    assert any(m[(1, nid)] != m[(0, nid)] for nid in g.nodes)
+
+
+def test_signature_map_sampled_llm_keys_are_per_query():
+    """temperature > 0 LLM nodes must never replay across queries."""
+    g, bindings, _ = build_workload("wt", 3, seed=0)
+    hot = [n.with_(temperature=0.8) if n.is_llm() else n
+           for n in g.nodes.values()]
+    from repro.core.graphspec import GraphSpec
+    g_hot = GraphSpec(g.name, hot, g.edges)
+    dup = [bindings[0], bindings[0]]
+    m = signature_map(consolidate(g_hot, dup))
+    for nid in g_hot.llm_nodes():
+        assert m[(0, nid)] != m[(1, nid)]           # sampled: never shared
+    for nid in g_hot.tool_nodes():
+        assert m[(0, nid)] == m[(1, nid)]           # tools still dedup
+
+
+# ---------------------------------------------------------------------------
+# the journal
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_fanout_dedup(tmp_path):
+    p = str(tmp_path / "j.jsonl")
+    js = JobStore(p)
+    js.record("k1", "n", "v1")
+    js.record("k1", "n", "v1")              # same-run fan-out: one line
+    js.record("k2", "n", "v2")
+    js.close()
+    js2 = JobStore(p)
+    assert js2.lookup("k1") == "v1" and js2.lookup("k2") == "v2"
+    assert js2.summary()["restored_signatures"] == 2
+    # re-recording an at-open key counts as re-execution
+    js2.record("k1", "n", "v1")
+    assert js2.summary()["re_executed_signatures"] == 1
+    js2.close()
+
+
+def test_journal_torn_tail_dropped(tmp_path):
+    """A half-written last line (kill -9 mid-append) is dropped, not
+    half-applied; the intact prefix survives."""
+    p = str(tmp_path / "j.jsonl")
+    js = JobStore(p, fsync_every=1)
+    js.record("k1", "n", "v1")
+    js.record("k2", "n", "v2")
+    js.close()
+    with open(p, "a") as f:
+        f.write('{"k": "k3", "n": "n", "v": "v3", "c": "tr')     # torn
+    js2 = JobStore(p)
+    assert js2.lookup("k1") == "v1" and js2.lookup("k3") is None
+    assert js2.summary()["dropped_lines"] == 1
+    js2.close()
+
+
+def test_journal_mid_file_corruption_raises(tmp_path):
+    p = str(tmp_path / "j.jsonl")
+    js = JobStore(p)
+    js.record("k1", "n", "v1")
+    js.close()
+    lines = open(p).readlines()
+    lines.insert(1, "garbage not json\n")
+    with open(p, "w") as f:
+        f.writelines(lines)
+    with pytest.raises(CheckpointError, match="not the torn tail"):
+        JobStore(p)
+
+
+def test_journal_checksum_guards_value(tmp_path):
+    """A bit-flipped value in the tail fails its checksum and is
+    dropped rather than restored corrupt."""
+    p = str(tmp_path / "j.jsonl")
+    js = JobStore(p, fsync_every=1)
+    js.record("k1", "n", "v1")
+    js.close()
+    lines = open(p).readlines()
+    entry = json.loads(lines[-1])
+    entry["v"] = "tampered"
+    lines[-1] = json.dumps(entry) + "\n"
+    with open(p, "w") as f:
+        f.writelines(lines)
+    js2 = JobStore(p)
+    assert js2.lookup("k1") is None
+    assert js2.summary()["dropped_lines"] == 1
+    js2.close()
+
+
+# ---------------------------------------------------------------------------
+# session resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_session_resume_zero_reexecution(tmp_path):
+    """Run a batch to completion with a jobstore, run it again against
+    the same journal: every signature restores, nothing re-executes, no
+    decode happens, outputs are bitwise-identical."""
+    js = str(tmp_path / "journal.jsonl")
+
+    def run():
+        proc, g, cons, bindings, plan = make_real_processor(
+            "wt", n=6, workers=2, decode_cap=3, seed=0, jobstore_path=js)
+        return proc.run(cons, plan)
+
+    r1 = run()
+    s1 = r1.extra["jobstore"]
+    assert s1["completed_signatures"] > 0
+    assert s1["re_executed_signatures"] == 0
+
+    r2 = run()
+    s2 = r2.extra["jobstore"]
+    assert s2["re_executed_signatures"] == 0
+    assert s2["restored_results"] == 6 * 4          # every (query, node)
+    assert r2.extra["decode_tokens"] == 0           # no LLM work re-paid
+    assert r1.extra["results"] == r2.extra["results"]
+
+
+# ---------------------------------------------------------------------------
+# load_batch_state hardening (the former runtime.checkpoint API)
+# ---------------------------------------------------------------------------
+
+def _state(n=4):
+    g, _, _ = build_workload("w+", n, seed=0)
+    return g, BatchState(g, n)
+
+
+def test_load_batch_state_rejects_unknown_node(tmp_path):
+    """A checkpoint naming a node the live graph lacks raises with the
+    path, the bad node, and a sample of the real graph — and applies
+    NOTHING (validate-then-apply)."""
+    g, st = _state()
+    st.set_result(0, "draft", "r0")
+    p = str(tmp_path / "ck.json")
+    save_batch_state(st, p)
+    payload = json.load(open(p))
+    payload["results"].append([1, "no_such_node", "x"])
+    json.dump(payload, open(p, "w"))
+    fresh = BatchState(g, 4)
+    with pytest.raises(CheckpointError) as ei:
+        load_batch_state(fresh, p)
+    msg = str(ei.value)
+    assert "no_such_node" in msg and p in msg and "draft" in msg
+    assert "stale checkpoint" in msg
+    with fresh.lock:
+        assert not fresh.results                    # nothing half-applied
+
+
+def test_load_batch_state_rejects_non_json(tmp_path):
+    g, st = _state()
+    p = str(tmp_path / "ck.json")
+    with open(p, "w") as f:
+        f.write("{truncated")
+    with pytest.raises(CheckpointError, match="not valid JSON"):
+        load_batch_state(st, p)
+
+
+def test_load_batch_state_rejects_wrong_shape(tmp_path):
+    g, st = _state()
+    p = str(tmp_path / "ck.json")
+    json.dump({"wrong": 1}, open(p, "w"))
+    with pytest.raises(CheckpointError, match="found keys"):
+        load_batch_state(st, p)
+
+
+def test_load_batch_state_rejects_malformed_entry(tmp_path):
+    g, st = _state()
+    p = str(tmp_path / "ck.json")
+    json.dump({"n_queries": 4, "results": [["not-a-triple"]]},
+              open(p, "w"))
+    with pytest.raises(CheckpointError, match="entry 0"):
+        load_batch_state(st, p)
+
+
+def test_checkpoint_shim_reexports():
+    """The old import path keeps working."""
+    from repro.runtime import checkpoint
+    assert checkpoint.save_batch_state is save_batch_state
+    assert checkpoint.load_batch_state is load_batch_state
+    assert checkpoint.CheckpointError is CheckpointError

@@ -66,3 +66,43 @@ def test_prepared_statement_reuse(db):
 def test_parse_rejects_garbage():
     with pytest.raises(ValueError):
         parse_sql("DROP TABLE students")
+
+
+# ---------------------------------------------------------------------------
+# sqlite3 oracle cross-checks — the fixed-case arm of the property test
+# (tests/test_minidb_property.py runs the randomized arm when hypothesis
+# is installed; these pin the same comparison against stdlib sqlite3)
+# ---------------------------------------------------------------------------
+
+_ORACLE_ROWS = [(0, "a", 10), (1, "b", 20), (2, "a", 30), (3, "c", 40),
+                (4, "a", 50), (5, "b", -7), (6, "c", 0)]
+
+_ORACLE_QUERIES = [
+    "SELECT id, val FROM t WHERE cat = 'a' ORDER BY id",
+    "SELECT id FROM t WHERE val >= 20 ORDER BY id LIMIT 3",
+    "SELECT id, cat, val FROM t WHERE val != 0",
+    "SELECT cat, count(*), sum(val) FROM t GROUP BY cat",
+    "SELECT cat, min(val), max(val), avg(val) FROM t WHERE val > -7 "
+    "GROUP BY cat",
+    "SELECT count(*), sum(val) FROM t WHERE cat != 'b'",
+    "SELECT avg(val) FROM t",
+]
+
+
+def _oracle_norm(rows, ordered):
+    out = [tuple(round(v, 6) if isinstance(v, float) else v for v in r)
+           for r in rows]
+    return out if ordered else sorted(out, key=repr)
+
+
+@pytest.mark.parametrize("sql", _ORACLE_QUERIES)
+def test_sqlite_oracle_agrees(sql):
+    import sqlite3
+    mdb = MiniDB()
+    mdb.create_table("t", ["id", "cat", "val"], _ORACLE_ROWS)
+    con = sqlite3.connect(":memory:")
+    con.execute("CREATE TABLE t (id INTEGER, cat TEXT, val INTEGER)")
+    con.executemany("INSERT INTO t VALUES (?, ?, ?)", _ORACLE_ROWS)
+    ordered = "ORDER BY" in sql
+    assert _oracle_norm(mdb.execute(sql), ordered) == \
+        _oracle_norm(con.execute(sql).fetchall(), ordered)

@@ -1,0 +1,82 @@
+"""kill -9 mid-batch, then resume (DESIGN.md §12.2).
+
+The acceptance property: SIGKILL a real run mid-batch, re-run against
+the surviving journal — the resumed run completes, re-executes ZERO
+already-journaled signatures, and its outputs are bitwise-identical to
+an uninterrupted run's.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_CHILD = os.path.join(_REPO, "tests", "_resume_child.py")
+
+
+def _child_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_REPO, "src"), _REPO]
+        + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+    env.pop("XLA_FLAGS", None)              # no inherited device carving
+    return env
+
+
+def _run_child(jobstore, timeout=240):
+    out = subprocess.run(
+        [sys.executable, _CHILD, jobstore], env=_child_env(),
+        capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _data_lines(path):
+    try:
+        with open(path) as f:
+            return sum(1 for line in f if '"k"' in line)
+    except FileNotFoundError:
+        return 0
+
+
+@pytest.mark.slow
+def test_kill9_resume_bitwise_and_zero_reexecution(tmp_path):
+    # arm 1: uninterrupted baseline
+    baseline = _run_child(str(tmp_path / "baseline.jsonl"))
+    assert baseline["jobstore"]["re_executed_signatures"] == 0
+
+    # arm 2: SIGKILL once >= 2 results hit the journal (mid-batch: the
+    # run is seconds long, the first tool results land almost at once)
+    journal = str(tmp_path / "killed.jsonl")
+    child = subprocess.Popen([sys.executable, _CHILD, journal],
+                             env=_child_env(), stdout=subprocess.PIPE,
+                             stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.monotonic() + 180
+        while _data_lines(journal) < 2:
+            if child.poll() is not None:
+                pytest.fail("child finished before it could be killed; "
+                            "no mid-batch window to test")
+            if time.monotonic() > deadline:
+                pytest.fail("journal never reached 2 results")
+            time.sleep(0.02)
+        child.send_signal(signal.SIGKILL)
+        child.wait(timeout=60)
+    finally:
+        if child.poll() is None:
+            child.kill()
+    assert child.returncode == -signal.SIGKILL
+    journaled = _data_lines(journal)
+    assert journaled >= 2
+
+    # arm 3: resume against the killed run's journal
+    resumed = _run_child(journal)
+    js = resumed["jobstore"]
+    assert js["re_executed_signatures"] == 0        # nothing re-paid
+    assert js["restored_signatures"] >= journaled - 1   # minus torn tail
+    assert js["restored_results"] > 0
+    assert resumed["results"] == baseline["results"]    # bitwise equal

@@ -186,6 +186,46 @@ def test_session_close_leaks_no_threads():
     assert not leaked, f"session leaked threads: {leaked}"
 
 
+def test_close_clean_after_worker_death_mid_drain():
+    """A worker dying mid-batch (engine blows up under it) fails drain()
+    with the real error — and close() still joins every thread, twice."""
+    before = set(threading.enumerate())
+    g, bindings, db = build_workload("wt", 4, seed=0)
+    sess = _session(g, db)
+    sess.open()
+
+    def _explode(model):
+        raise RuntimeError("injected engine failure")
+    for host in sess.hosts:                 # whichever worker claims first
+        host.engine_for = _explode
+    try:
+        sess.submit(g, bindings)
+        with pytest.raises(RuntimeError, match="injected engine failure"):
+            sess.drain(120)
+    finally:
+        sess.close()
+    sess.close()                            # idempotent after failure
+    leaked = [t for t in set(threading.enumerate()) - before if t.is_alive()]
+    assert not leaked, f"failed session leaked threads: {leaked}"
+
+
+def test_close_clean_when_submit_rejects():
+    """A submit() that raises before bootstrap leaves nothing running:
+    close() is clean and idempotent, and later submits are refused."""
+    before = set(threading.enumerate())
+    g, bindings, db = build_workload("wt", 2, seed=0)
+    sess = _session(g, db)
+    sess.open()
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        sess.submit(g, bindings, slo="no-such-lane")
+    sess.close()
+    sess.close()
+    leaked = [t for t in set(threading.enumerate()) - before if t.is_alive()]
+    assert not leaked, f"never-started session leaked threads: {leaked}"
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.submit(g, bindings)
+
+
 def test_processor_config_shim():
     """Loose RealProcessor kwargs still work for one release behind a
     DeprecationWarning; unknown names raise immediately."""
