@@ -531,9 +531,16 @@ class ToolDispatcher(threading.Thread):
                     not self.stop_flag.is_set():
                 with self._retry_lock:
                     self.retries_used += 1
-                self.pool.submit(self._execute, sig, op, args, origin,
-                                 attempt + 1)
-                return
+                try:
+                    self.pool.submit(self._execute, sig, op, args, origin,
+                                     attempt + 1)
+                    return
+                except RuntimeError:
+                    # pool shut down between the stop_flag check and the
+                    # resubmit: fall through so the failure surfaces as
+                    # the session error and waiters wake instead of
+                    # timing out on a result that will never land
+                    pass
             self.error = e
             with self.state.lock:
                 self.state.lock.notify_all()

@@ -104,12 +104,25 @@ class JobStore:
         self.dropped_lines = 0                # torn/corrupt tail lines
         self.restored_results = 0             # guarded-by: self._lock
         self.re_executed: Set[str] = set()    # guarded-by: self._lock
+        self._truncate_to: Optional[int] = None   # torn-tail repair offset
+        self._needs_newline = False           # valid tail missing its "\n"
         with self._lock:
             self._load()
             self._at_open = frozenset(self._seen)
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
+        if self._truncate_to is not None:
+            # repair before reopening for append: without this, the next
+            # record() would concatenate onto the torn fragment, merging
+            # into one invalid line and poisoning every later load
+            with open(path, "r+b") as tf:
+                tf.truncate(self._truncate_to)
+                tf.flush()
+                os.fsync(tf.fileno())
         self._f = open(path, "a", encoding="utf-8")
+        if self._needs_newline:
+            self._f.write("\n")
+            self._f.flush()
         if not self._at_open and self._f.tell() == 0:
             header = {"magic": _MAGIC, "version": _VERSION}
             self._f.write(json.dumps(header) + "\n")
@@ -119,43 +132,57 @@ class JobStore:
     # requires: self._lock
     def _load(self) -> None:
         try:
-            with open(self.path, encoding="utf-8") as f:
-                lines = f.readlines()
+            with open(self.path, "rb") as f:
+                data = f.read()
         except FileNotFoundError:
             return
-        for i, line in enumerate(lines):
-            line = line.strip()
-            if not line:
-                continue
+        raw_lines = data.splitlines(keepends=True)
+        offset = 0          # bytes consumed; trails the current line
+        valid_end = 0       # end of the last intact line
+        for i, raw in enumerate(raw_lines):
+            offset += len(raw)
+            last = i == len(raw_lines) - 1
             try:
-                entry = json.loads(line)
-            except json.JSONDecodeError:
+                line = raw.decode("utf-8").strip()
+                entry = json.loads(line) if line else None
+            except (UnicodeDecodeError, json.JSONDecodeError):
                 # torn write (kill -9 mid-append): only tolerable at the
                 # tail — anywhere else the file is corrupt, not torn
-                if i == len(lines) - 1:
+                if last:
                     self.dropped_lines += 1
                     continue
                 raise CheckpointError(
                     f"corrupt jobstore {self.path}: line {i + 1} is not "
                     "valid JSON (and is not the torn tail)") from None
+            if entry is None:                   # blank line
+                valid_end = offset
+                continue
             if "magic" in entry:
                 if (entry.get("magic") != _MAGIC
                         or entry.get("version") != _VERSION):
                     raise CheckpointError(
                         f"jobstore {self.path}: header {entry!r} does not "
                         f"match {_MAGIC} v{_VERSION}")
+                valid_end = offset
                 continue
             key, node = entry.get("k"), entry.get("n", "")
             value, check = entry.get("v"), entry.get("c")
             if key is None or value is None \
                     or check != _line_checksum(key, node, value):
-                if i == len(lines) - 1:
+                if last:
                     self.dropped_lines += 1
                     continue
                 raise CheckpointError(
                     f"jobstore {self.path}: line {i + 1} failed its "
                     "checksum (and is not the torn tail)")
             self._seen[key] = value
+            valid_end = offset
+        if valid_end < len(data):
+            self._truncate_to = valid_end
+        elif data and not data.endswith(b"\n"):
+            # whole file intact but the final newline never landed:
+            # terminate it so the first appended record starts clean
+            self._needs_newline = True
 
     # ---------------------------------------------------------- journal
     def record(self, key: str, node: str, value: str) -> None:
@@ -169,6 +196,11 @@ class JobStore:
         pin to zero.
         """
         with self._lock:
+            if self._f is None:
+                # closed (or still opening): a straggler worker thread
+                # that outlives the shutdown join can fire the listener
+                # after close() — drop the write instead of crashing
+                return
             if key in self._replaying:
                 return                  # our own restore replay, not work
             if key in self._at_open:
@@ -261,7 +293,17 @@ def save_batch_state(state: BatchState, path: str) -> None:
     try:
         with os.fdopen(fd, "w") as f:
             json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())       # data durable before the rename
         os.replace(tmp, path)                      # atomic commit
+        try:
+            dfd = os.open(d, os.O_RDONLY)          # make the rename durable
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        except OSError:
+            pass            # directory fsync unsupported on this platform
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)

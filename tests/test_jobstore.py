@@ -92,6 +92,64 @@ def test_journal_torn_tail_dropped(tmp_path):
     js2.close()
 
 
+def test_journal_append_after_torn_tail_stays_loadable(tmp_path):
+    """Reopening a journal whose tail was torn must truncate the torn
+    fragment BEFORE appending: otherwise the next record() concatenates
+    onto the fragment, merging into one invalid line that (a) silently
+    loses the appended record and (b) once any further line follows,
+    makes every later load raise CheckpointError."""
+    p = str(tmp_path / "j.jsonl")
+    js = JobStore(p, fsync_every=1)
+    js.record("k1", "n", "v1")
+    js.close()
+    with open(p, "a") as f:
+        f.write('{"k": "k2", "n": "n", "v": "v2", "c": "tr')     # torn
+    js2 = JobStore(p)                       # drops + truncates the tail
+    assert js2.summary()["dropped_lines"] == 1
+    js2.record("k2", "n", "v2-redone")
+    js2.record("k3", "n", "v3")
+    js2.close()
+    js3 = JobStore(p)                       # second restart: still loads
+    assert js3.lookup("k1") == "v1"
+    assert js3.lookup("k2") == "v2-redone"  # not merged into the fragment
+    assert js3.lookup("k3") == "v3"
+    assert js3.summary()["dropped_lines"] == 0
+    js3.close()
+
+
+def test_journal_missing_final_newline_repaired(tmp_path):
+    """A valid tail line missing only its terminator gets one written
+    before the first appended record, instead of being merged with it."""
+    p = str(tmp_path / "j.jsonl")
+    js = JobStore(p, fsync_every=1)
+    js.record("k1", "n", "v1")
+    js.close()
+    with open(p, "rb+") as f:
+        f.seek(-1, 2)
+        f.truncate()                        # strip the trailing "\n"
+    js2 = JobStore(p)
+    assert js2.lookup("k1") == "v1"         # intact line still restores
+    js2.record("k2", "n", "v2")
+    js2.close()
+    js3 = JobStore(p)
+    assert js3.lookup("k1") == "v1" and js3.lookup("k2") == "v2"
+    assert js3.summary()["dropped_lines"] == 0
+    js3.close()
+
+
+def test_journal_record_after_close_is_noop(tmp_path):
+    """A straggler listener firing after close() must not crash."""
+    p = str(tmp_path / "j.jsonl")
+    js = JobStore(p)
+    js.record("k1", "n", "v1")
+    js.close()
+    js.record("k2", "n", "v2")              # no-op, no AttributeError
+    js.close()                              # idempotent
+    js2 = JobStore(p)
+    assert js2.lookup("k1") == "v1" and js2.lookup("k2") is None
+    js2.close()
+
+
 def test_journal_mid_file_corruption_raises(tmp_path):
     p = str(tmp_path / "j.jsonl")
     js = JobStore(p)
